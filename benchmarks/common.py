@@ -1,0 +1,58 @@
+"""Shared benchmark utilities: timing, CSV emission, cluster factories."""
+from __future__ import annotations
+
+import time
+
+from repro.core import (AllReplicationCluster, HybridEncodingCluster,
+                        MemECCluster)
+from repro.data.ycsb import YCSBConfig, run_workload
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def make_memec(scheme="rs", n=10, k=8, **kw):
+    defaults = dict(num_servers=16, num_proxies=4, c=16, chunk_size=4096,
+                    max_unsealed=4)
+    defaults.update(kw)
+    return MemECCluster(scheme=scheme, n=n, k=k, **defaults)
+
+
+def make_allrep(**kw):
+    return AllReplicationCluster(num_servers=16, n=10, k=8, **kw)
+
+
+def make_hybrid(**kw):
+    return HybridEncodingCluster(num_servers=16, scheme="rs", n=10, k=8, **kw)
+
+
+def timed_workload(cluster, workload: str, num_ops: int, cfg: YCSBConfig):
+    """Run a workload; return (wall_s, ops, modeled stats snapshot)."""
+    cluster.net.reset() if hasattr(cluster.net, "reset") else None
+    t0 = time.perf_counter()
+    ops, _ = run_workload(cluster, workload, num_ops, cfg)
+    wall = time.perf_counter() - t0
+    return wall, ops
+
+
+def server_endpoints(num_servers=16):
+    return [f"s{i}" for i in range(num_servers)]
+
+
+def cluster_metrics(cluster, ops: int, kinds=("GET", "UPDATE", "SET")):
+    """Modeled metrics: aggregate-bandwidth throughput (primary; Zipf hot
+    spots smooth out over the paper's 20M-request runs), max-endpoint
+    throughput (skew indicator), p95 latencies (ms)."""
+    net = cluster.net
+    out = {
+        "modeled_kops": net.mean_throughput(ops, server_endpoints()) / 1e3,
+        "hotspot_kops": net.bottleneck_throughput(
+            ops, server_endpoints()) / 1e3,
+    }
+    for kind in kinds:
+        for suffix in ("", "_DEG"):
+            k = kind + suffix
+            if net.latencies.get(k):
+                out[f"p95_{k}_ms"] = net.percentile(k, 95) * 1e3
+    return out

@@ -1,0 +1,67 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs pure-jnp ref vs numpy.
+
+Wall-clock on CPU is NOT the TPU number — the derived column reports
+bytes-touched per call so the §Roofline HBM-bound analysis can translate:
+encode reads k*C + writes m*C bytes; delta reads 3C + writes C per row.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.codes import RSCode
+from repro.kernels import ops
+
+from .common import emit
+
+
+def timeit(fn, *args, reps=5):
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run():
+    print("# kernel micro-benchmarks (CPU; interpret-mode Pallas)")
+    rng = np.random.default_rng(0)
+    code = RSCode(n=10, k=8)
+    for C in (4096, 65536):
+        data = jnp.asarray(rng.integers(0, 256, (8, C), dtype=np.uint8))
+        us_k = timeit(lambda d: ops.encode_stripe(code, d), data)
+        us_r = timeit(lambda d: ops.encode_stripe(code, d, use_ref=True), data)
+        t0 = time.perf_counter()
+        for _ in range(5):
+            code.encode(np.asarray(data))
+        us_n = (time.perf_counter() - t0) / 5 * 1e6
+        touched = (8 + 2) * C
+        emit(f"encode.pallas.C{C}", us_k, f"{touched}B/call")
+        emit(f"encode.ref.C{C}", us_r, f"{touched}B/call")
+        emit(f"encode.numpy.C{C}", us_n, f"{touched}B/call")
+
+        parity = ops.encode_stripe(code, data)
+        old = data[3]
+        new = jnp.asarray(rng.integers(0, 256, C, dtype=np.uint8))
+        us_d = timeit(lambda p, o, n: ops.apply_parity_delta(code, p, 3, o, n),
+                      parity, old, new)
+        emit(f"delta.pallas.C{C}", us_d, f"{4 * 2 * C}B/call")
+
+    from repro.core.index import CuckooIndex
+    idx = CuckooIndex(num_buckets=1 << 12)
+    keys = [b"user%019d" % i for i in range(8000)]
+    for i, k in enumerate(keys):
+        idx.insert(k, i)
+    probe = keys[::4]
+    us_c = timeit(lambda: ops.batched_index_lookup(idx, probe))
+    emit("cuckoo.pallas.q2000", us_c, f"{len(probe)} probes/call")
+    us_cr = timeit(lambda: ops.batched_index_lookup(idx, probe, use_ref=True))
+    emit("cuckoo.ref.q2000", us_cr, f"{len(probe)} probes/call")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,78 @@
+"""Paper Figure 2: redundancy of the three data models.
+
+Analytic curves (the paper's formulas) + a *measured* point from a live
+MemEC store to validate the analysis empirically.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.analysis import (MODELS, AnalysisParams, crossover_value,
+                                 figure2_table)
+
+from .common import emit, make_memec
+
+
+def run():
+    print("# Figure 2 — redundancy vs value size")
+    print("panel,V,all-replication,hybrid-encoding,all-encoding")
+    for K, nk in [(8, (10, 8)), (32, (14, 10))]:
+        tab = figure2_table(K, nk)
+        for i, V in enumerate(tab["V"]):
+            print(f"K{K}-n{nk[0]}k{nk[1]},{V},"
+                  f"{tab['all-replication'][i]:.3f},"
+                  f"{tab['hybrid-encoding'][i]:.3f},"
+                  f"{tab['all-encoding'][i]:.3f}")
+    # paper claims
+    p = AnalysisParams(K=8, V=2, n=10, k=8)
+    ar, hy, ae = (MODELS["all-replication"](p), MODELS["hybrid-encoding"](p),
+                  MODELS["all-encoding"](p))
+    emit("fig2.reduction_vs_allrep", 0.0, f"{(1 - ae / ar) * 100:.1f}%")
+    emit("fig2.reduction_vs_hybrid", 0.0, f"{(1 - ae / hy) * 100:.1f}%")
+    emit("fig2.crossover_1.3x_allenc", 0.0,
+         f"V={crossover_value(8, (10, 8), 1.3, 'all-encoding')}")
+    emit("fig2.crossover_1.3x_hybrid", 0.0,
+         f"V={crossover_value(8, (10, 8), 1.3, 'hybrid-encoding')}")
+
+    # measured from a live store (16 servers, RS(10,8), 4KB chunks).
+    # steady-state accounting: sealed chunks count fully; unsealed chunks
+    # count their used bytes (the fill slack amortizes away at the paper's
+    # 10M-object scale — at bench scale it would dominate).
+    cl = make_memec(max_unsealed=1)
+    rng = np.random.default_rng(0)
+    K, V, n_obj = 24, 32, 30000
+    for i in range(n_obj):
+        cl.set(b"%023d!" % i, rng.bytes(V))
+    obj_size = K + V + 4
+    payload = n_obj * obj_size
+    sealed_bytes = unsealed_used = n_chunks = 0
+    for s in cl.servers:
+        for idx, cid in enumerate(s.chunk_ids):
+            if cid is None:
+                continue
+            n_chunks += 1
+            if s.sealed[idx]:
+                sealed_bytes += cl.chunk_size
+        for ucs in s.unsealed.values():
+            for uc in ucs:
+                unsealed_used += uc.builder.used
+    # steady-state view, matching the §3.3 analysis assumptions: sealed
+    # objects only (the unsealed tail is replicated by design and vanishes
+    # at the paper's 10M-object scale); indexes amortized at O=0.9
+    # occupancy (not the preallocated table size).
+    sealed_payload = payload - unsealed_used
+    sealed_objs = sealed_payload / obj_size
+    idx_bytes = sealed_objs * 8 / 0.9 + n_chunks * (8 + 8 / 0.9)
+    total = sealed_bytes + idx_bytes
+    formula = MODELS["all-encoding"](AnalysisParams(K=K, V=V, n=10, k=8))
+    emit("fig2.measured_redundancy", 0.0,
+         f"measured={total / sealed_payload:.3f} formula={formula:.3f} "
+         f"(steady-state: sealed objects, amortized indexes)")
+    tail = unsealed_used * 3 / payload  # (n-k+1)-way replicated tail
+    emit("fig2.transient_tail", 0.0,
+         f"unsealed tail {unsealed_used / payload * 100:.1f}% of payload, "
+         f"replicated 3x while unsealed (paper §4.2)")
+
+
+if __name__ == "__main__":
+    run()

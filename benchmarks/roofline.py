@@ -1,0 +1,50 @@
+"""Roofline table from the dry-run artifacts (launch/dryrun.py JSONs).
+
+Three terms per (arch x shape x mesh), TPU v5e constants:
+    t_compute    = HLO_FLOPs / peak          (197 TFLOP/s bf16)
+    t_memory     = HLO_bytes / HBM bw        (819 GB/s)   [upper bound]
+    t_collective = wire bytes / ICI bw       (50 GB/s/link)
+plus MODEL_FLOPS/HLO_FLOPs (useful-compute ratio) and the dominant term.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_cells(mesh="single"):
+    cells = []
+    for fn in sorted(glob.glob(os.path.join(RESULTS, f"*__{mesh}.json"))):
+        with open(fn) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_row(c):
+    if c.get("status") == "skipped":
+        return (f"{c['arch']},{c['shape']},{c['mesh']},SKIP,,,,,"
+                f"\"{c.get('reason', '')[:60]}\"")
+    if c.get("status") != "ok":
+        return f"{c['arch']},{c['shape']},{c['mesh']},ERROR,,,,,"
+    dom = c["bottleneck"]
+    useful = c.get("useful_flops_ratio", 0.0)
+    return (f"{c['arch']},{c['shape']},{c['mesh']},ok,"
+            f"{c['t_compute']:.4f},{c['t_memory']:.4f},"
+            f"{c['t_collective']:.4f},{dom},{useful:.3f}")
+
+
+def run():
+    print("# roofline terms (seconds per step; v5e: 197TF/s, 819GB/s, "
+          "50GB/s link)")
+    print("arch,shape,mesh,status,t_compute,t_memory,t_collective,"
+          "bottleneck,useful_flops_ratio")
+    for mesh in ("single", "multi"):
+        for c in load_cells(mesh):
+            print(fmt_row(c))
+
+
+if __name__ == "__main__":
+    run()

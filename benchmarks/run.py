@@ -1,0 +1,33 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only redundancy,...]
+
+Emits ``name,us_per_call,derived`` CSV rows per experiment plus the
+per-table detail rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = ["redundancy", "throughput", "coding_schemes", "value_sizes",
+           "degraded", "transitions", "kernels_bench", "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(MODULES))
+    args = ap.parse_args()
+    selected = args.only.split(",") if args.only else MODULES
+    for name in selected:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        print(f"\n=== {name} ===", flush=True)
+        t0 = time.time()
+        mod.run()
+        print(f"=== {name} done in {time.time() - t0:.1f}s ===", flush=True)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,54 @@
+"""Serve a small model with batched requests; EC-protect the KV-cache
+pages and demonstrate a degraded read (reconstruct lost cache pages).
+
+    PYTHONPATH=src python examples/serve_degraded.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.distributed import sharding as shd
+from repro.distributed.ecstore import ECConfig
+from repro.models import Model
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    cfg = get_reduced("recurrentgemma-2b")   # hybrid: RG-LRU + local attn
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, prompt_len, gen = 4, 24, 24
+    eng = ServeEngine(model, params, max_len=prompt_len + gen, batch_size=B)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, prompt_len),
+                                 0, cfg.vocab_size)
+    logits = eng.prefill({"tokens": prompts})
+    print(f"prefilled {B}x{prompt_len} tokens")
+
+    first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    res = eng.decode(gen - 1, first_tokens=first)
+    print("generated tokens (seq 0):", res.tokens[0][:12])
+
+    # protect the serving state (KV window + recurrent states) with EC —
+    # in production this runs continuously via delta parity updates
+    import jax.sharding as jshard
+    mesh = jax.make_mesh((4, 1), ("data", "model"),
+                         axis_types=(jshard.AxisType.Auto,) * 2)
+    cspecs = shd.cache_specs(cfg, jax.eval_shape(lambda: eng.cache), mesh)
+    eng.protect_cache(mesh, cspecs, ECConfig(k=2, m=1, page_size=256))
+    print("cache pages erasure-coded")
+
+    # degraded read drill: rebuild cache pages of data-axis position 0
+    with mesh:
+        pages = np.asarray(eng.ec_store.local_pages(eng.cache))
+        rec = np.asarray(eng.recover_cache_pages(0))
+    ok = np.array_equal(rec[0, 0], pages[0, 0])
+    print("reconstructed cache pages match live cache:", ok,
+          "(degraded GET at page granularity, paper §5.4)")
+    assert ok
+
+
+if __name__ == "__main__":
+    main()

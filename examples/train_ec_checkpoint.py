@@ -1,0 +1,71 @@
+"""End-to-end driver: train a (reduced) LM with MemEC-style erasure-coded
+in-memory checkpoints, kill a data-axis shard, reconstruct, keep training.
+
+    PYTHONPATH=src python examples/train_ec_checkpoint.py \
+        [--arch starcoder2-3b] [--steps 120]
+
+Full-size runs use the same driver via repro.launch.train on a real mesh.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+import argparse
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.distributed import sharding as shd
+from repro.distributed.ecstore import ECConfig, ECStateStore
+from repro.models import Model
+from repro.train.optimizer import make_optimizer
+from repro.train.train_step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--steps", type=int, default=120)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    model = Model(cfg)
+    import jax.sharding as jshard
+    mesh = jax.make_mesh((4, 1), ("data", "model"),
+                         axis_types=(jshard.AxisType.Auto,) * 2)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = make_optimizer("adamw", lr=1e-3, warmup_steps=10,
+                         total_steps=args.steps)
+    opt_state = opt.init(params)
+    pspecs = shd.param_specs(cfg, jax.eval_shape(lambda: params), mesh)
+    # RS(3,2) over the 4-device data axis here; RS(10,8) on a real pod
+    store = ECStateStore(mesh, pspecs, ECConfig(k=2, m=1, page_size=256))
+    step = jax.jit(make_train_step(model, opt))
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                  global_batch=8,
+                                  embed_dim=cfg.d_model
+                                  if cfg.input_mode == "embeddings" else 0,
+                                  mrope=cfg.rope_kind == "mrope"))
+    with mesh:
+        parity = store.encode(params)
+        print("EC parity created:", parity.shape, parity.dtype)
+        losses = []
+        for i in range(args.steps):
+            old = params
+            params, opt_state, m = step(params, opt_state, data.batch(i))
+            parity = store.delta_update(old, params, parity)  # paper UPDATE
+            losses.append(float(m["loss"]))
+            if i % 20 == 0:
+                print(f"step {i:4d} loss {losses[-1]:.4f}")
+        print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+        # --- failure drill: rebuild the shard from parity ---
+        pages = np.asarray(store.local_pages(params))
+        rec = np.asarray(store.reconstruct(params, parity, failed_index=0))
+        ok = np.array_equal(rec[0, 0], pages[0, 0])
+        print("reconstructed shard matches live state:", ok)
+        assert ok
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""The paper's own system configuration (MemEC §7 testbed).
+
+16 servers, 4 proxies, 1 coordinator; (n,k)=(10,8); c=16 stripe lists;
+4 KB chunks; RS or RDP coding; YCSB-style workloads with 24-byte keys and
+8/32-byte values.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class MemECConfig:
+    num_servers: int = 16
+    num_proxies: int = 4
+    scheme: str = "rs"          # rs | rdp | xor | none
+    n: int = 10
+    k: int = 8
+    c: int = 16                 # stripe lists
+    chunk_size: int = 4096
+    max_unsealed: int = 4
+    key_size: int = 24
+    value_sizes: tuple = (8, 32)
+
+
+CONFIG = MemECConfig()

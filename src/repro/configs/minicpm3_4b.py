@@ -1,0 +1,17 @@
+"""minicpm3-4b [dense] — MLA. [hf:openbmb/MiniCPM3-4B; hf]
+62L d_model=2560 40H (kv=40) d_ff=6400 vocab=73448."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b", family="dense",
+    num_layers=62, d_model=2560, num_heads=40, num_kv_heads=40,
+    d_ff=6400, vocab_size=73448, head_dim=64,
+    layer_pattern="L", rope_kind="rope", rope_theta=10000.0,
+    q_lora_rank=768, kv_lora_rank=256, qk_nope_dim=64, qk_rope_dim=32,
+    v_head_dim=64,
+)
+
+REDUCED = CONFIG.scaled(num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+                        head_dim=16, d_ff=128, vocab_size=512, q_lora_rank=32,
+                        kv_lora_rank=16, qk_nope_dim=16, qk_rope_dim=8,
+                        v_head_dim=16, attn_block_q=32, attn_block_kv=64)

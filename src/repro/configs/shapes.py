@@ -1,0 +1,77 @@
+"""Assigned input shapes (per-arch shape set) + ShapeDtypeStruct specs.
+
+Four LM shapes:
+  train_4k     seq=4096   global_batch=256   (training step)
+  prefill_32k  seq=32768  global_batch=32    (inference prefill)
+  decode_32k   seq=32768  global_batch=128   (one-token decode, 32k cache)
+  long_500k    seq=524288 global_batch=1     (long-context decode;
+               sub-quadratic archs only — full-attention archs SKIP)
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one new token against a
+seq_len KV cache), NOT ``train_step``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+    subquadratic_only: bool = False
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1,
+                           subquadratic_only=True),
+}
+
+# families whose serving state is O(1)/O(window) per token
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    if shape.subquadratic_only and cfg.family not in SUBQUADRATIC_FAMILIES:
+        return False, (f"{shape.name} needs sub-quadratic attention; "
+                       f"{cfg.name} is full-attention ({cfg.family}) — "
+                       f"skipped per assignment (see DESIGN.md)")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    f32 = jnp.dtype(cfg.dtype)
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        batch = {}
+        if cfg.input_mode == "embeddings":
+            batch["embeddings"] = sds((B, S, cfg.d_model), f32)
+        else:
+            batch["tokens"] = sds((B, S), jnp.int32)
+        if cfg.rope_kind == "mrope":
+            batch["positions"] = sds((3, B, S), jnp.int32)
+        if shape.kind == "train":
+            batch["labels"] = sds((B, S), jnp.int32)
+        return batch
+    # decode: one new token against a seq_len cache
+    batch = {}
+    if cfg.input_mode == "embeddings":
+        batch["tokens"] = sds((B, 1, cfg.d_model), f32)
+    else:
+        batch["tokens"] = sds((B,), jnp.int32)
+    if cfg.rope_kind == "mrope":
+        batch["positions"] = sds((3, B, 1), jnp.int32)
+    batch["cur_len"] = sds((), jnp.int32)
+    return batch

@@ -1,0 +1,35 @@
+"""MemEC core: the paper's primary contribution in library form.
+
+Layers:
+* gf256 / codes — GF(2^8) arithmetic + RS/RDP/XOR erasure codes with
+  delta-based parity updates (paper §2);
+* chunk / index / stripe — the all-encoding data model: 4KB chunk packing,
+  cuckoo-hash object & chunk indexes, write-balanced stripe lists (§3, §4.3);
+* server / proxy / coordinator / store — the cluster: decentralized
+  normal-mode requests, coordinated degraded mode, server states, backups,
+  migration (§4, §5);
+* baselines — all-replication + hybrid-encoding comparison stores (§3.1);
+* analysis — the redundancy formulas of §3.3 (Figure 2).
+"""
+from .analysis import (AnalysisParams, redundancy_all_encoding,
+                       redundancy_all_replication, redundancy_hybrid_encoding)
+from .baselines import AllReplicationCluster, HybridEncodingCluster
+from .chunk import CHUNK_SIZE, ChunkBuilder, ChunkId, ObjectRef
+from .codes import Code, NoCode, RDPCode, RSCode, XORCode, make_code
+from .coordinator import Coordinator, ServerState
+from .index import CuckooIndex
+from .netsim import CostModel, Leg, NetSim
+from .proxy import Proxy
+from .server import Server
+from .store import MemECCluster, PartialFailure
+from .stripe import StripeList, StripeMapper, generate_stripe_lists
+
+__all__ = [
+    "AnalysisParams", "redundancy_all_encoding", "redundancy_all_replication",
+    "redundancy_hybrid_encoding", "AllReplicationCluster",
+    "HybridEncodingCluster", "CHUNK_SIZE", "ChunkBuilder", "ChunkId",
+    "ObjectRef", "Code", "NoCode", "RDPCode", "RSCode", "XORCode",
+    "make_code", "Coordinator", "ServerState", "CostModel", "Leg", "NetSim",
+    "Proxy", "Server", "MemECCluster", "PartialFailure", "StripeList",
+    "StripeMapper", "generate_stripe_lists",
+]

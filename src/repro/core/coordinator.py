@@ -1,0 +1,83 @@
+"""MemEC coordinator (paper §4.1, §5.2): server states + transitions.
+
+The coordinator is outside the I/O path in normal mode.  On failure it
+drives the state machine of Figure 4:
+
+    NORMAL -> INTERMEDIATE -> DEGRADED -> COORDINATED_NORMAL -> NORMAL
+
+broadcasting each state change atomically to all proxies and working
+servers (the Spread toolkit in the prototype; a synchronous broadcast in
+this simulation — strictly stronger ordering).  It also stores the periodic
+key->chunk-ID mapping checkpoints (§5.3) and picks redirected servers for
+degraded requests (§5.4).
+"""
+from __future__ import annotations
+
+import enum
+from collections import defaultdict
+
+from .chunk import ChunkId
+from .stripe import StripeList
+
+
+class ServerState(enum.Enum):
+    NORMAL = "normal"
+    INTERMEDIATE = "intermediate"
+    DEGRADED = "degraded"
+    COORDINATED_NORMAL = "coordinated_normal"
+
+
+class Coordinator:
+    def __init__(self, num_servers: int, stripe_lists: list[StripeList]):
+        self.num_servers = num_servers
+        self.stripe_lists = stripe_lists
+        self.states: dict[int, ServerState] = {
+            s: ServerState.NORMAL for s in range(num_servers)}
+        # key -> chunk-ID mapping checkpoints, per server (§5.3)
+        self.mapping_ckpt: dict[int, dict[bytes, ChunkId]] = defaultdict(dict)
+        # merged (checkpoint + proxy buffers) view built at failure time
+        self.recovery_mappings: dict[int, dict[bytes, ChunkId]] = {}
+        self.transition_log: list[tuple[str, int, float]] = []
+
+    # -- state machine -----------------------------------------------------
+    def state_of(self, sid: int) -> ServerState:
+        return self.states[sid]
+
+    def failed_servers(self) -> list[int]:
+        return [s for s, st in self.states.items()
+                if st in (ServerState.INTERMEDIATE, ServerState.DEGRADED)]
+
+    def is_available(self, sid: int) -> bool:
+        return self.states[sid] == ServerState.NORMAL or \
+            self.states[sid] == ServerState.COORDINATED_NORMAL
+
+    def set_state(self, sid: int, state: ServerState):
+        self.states[sid] = state
+
+    def any_failure(self) -> bool:
+        return any(st != ServerState.NORMAL for st in self.states.values())
+
+    # -- mapping checkpoints -------------------------------------------------
+    def store_checkpoint(self, sid: int, mappings: list[tuple[bytes, ChunkId]]):
+        d = self.mapping_ckpt[sid]
+        for key, cid in mappings:
+            d[key] = cid
+
+    def merge_proxy_mappings(self, sid: int,
+                             proxy_maps: list[list[tuple[bytes, ChunkId]]]):
+        merged = dict(self.mapping_ckpt.get(sid, {}))
+        for pm in proxy_maps:
+            for key, cid in pm:
+                merged[key] = cid
+        self.recovery_mappings[sid] = merged
+
+    def chunk_id_for(self, sid: int, key: bytes) -> ChunkId | None:
+        return self.recovery_mappings.get(sid, {}).get(key)
+
+    # -- degraded routing (§5.4) ---------------------------------------------
+    def redirected_server(self, sl: StripeList, failed_sid: int) -> int:
+        """Deterministic choice of a working server in the stripe list."""
+        for s in sl.servers:
+            if s != failed_sid and self.is_available(s):
+                return s
+        raise RuntimeError("no working server available in stripe list")

@@ -1,0 +1,128 @@
+"""Network cost model + accounting for the in-process cluster simulation.
+
+The paper evaluates MemEC on a Gigabit LAN (125 MB/s, sub-ms RTT) and
+simulates transient failures with tc-netem (normal(2ms, 1ms) delay per
+packet).  The simulation executes requests in-process and *models* time:
+
+    leg(bytes)           = rtt + bytes / bw + proc          (one message)
+    phase(parallel legs) = max(leg costs)                    (fan-out)
+    request latency      = sum of its phases
+
+Two outputs feed the benchmarks:
+* latency — per-request modeled time (sum of phases);
+* throughput — bottleneck-based: the busiest endpoint's byte traffic
+  divided by link bandwidth bounds aggregate ops/s (this is what actually
+  limits the paper's Gigabit testbed, e.g. the (n-k+1)-way SET fan-out).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+
+
+@dataclasses.dataclass
+class Leg:
+    kind: str
+    nbytes: int
+    src: str = ""
+    dst: str = ""
+    to_failed: bool = False
+
+
+@dataclasses.dataclass
+class CostModel:
+    rtt_s: float = 0.0002          # LAN round-trip
+    bw_Bps: float = 125e6          # Gigabit
+    proc_s: float = 2e-6           # per-message processing
+    failed_delay_s: float = 0.002  # injected delay to a congested server
+    header_bytes: int = 24         # protocol header per message
+
+    def leg(self, payload_bytes: int, to_failed: bool = False) -> float:
+        t = self.rtt_s + (payload_bytes + self.header_bytes) / self.bw_Bps + self.proc_s
+        if to_failed:
+            t += self.failed_delay_s
+        return t
+
+
+class NetSim:
+    """Accumulates modeled time and byte counters."""
+
+    def __init__(self, cost: CostModel | None = None):
+        self.cost = cost or CostModel()
+        self.bytes_by_kind: dict[str, int] = defaultdict(int)
+        self.msgs_by_kind: dict[str, int] = defaultdict(int)
+        self.bytes_by_endpoint: dict[str, int] = defaultdict(int)
+        self.latencies: dict[str, list[float]] = defaultdict(list)
+        self.ops_by_kind: dict[str, int] = defaultdict(int)
+
+    # -- request construction ------------------------------------------
+    def phase(self, legs: list[Leg]) -> float:
+        worst = 0.0
+        for leg in legs:
+            wire = leg.nbytes + self.cost.header_bytes
+            self.bytes_by_kind[leg.kind] += wire
+            self.msgs_by_kind[leg.kind] += 1
+            if leg.src:
+                self.bytes_by_endpoint[leg.src] += wire
+            if leg.dst:
+                self.bytes_by_endpoint[leg.dst] += wire
+            worst = max(worst, self.cost.leg(leg.nbytes, leg.to_failed))
+        return worst
+
+    def record(self, req_kind: str, latency_s: float):
+        self.latencies[req_kind].append(latency_s)
+        self.ops_by_kind[req_kind] += 1
+
+    # -- reporting -------------------------------------------------------
+    def percentile(self, req_kind: str, q: float) -> float:
+        import numpy as np
+        xs = self.latencies.get(req_kind, [])
+        if not xs:
+            return float("nan")
+        return float(np.percentile(xs, q))
+
+    def mean(self, req_kind: str) -> float:
+        xs = self.latencies.get(req_kind, [])
+        return sum(xs) / len(xs) if xs else float("nan")
+
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def bottleneck_throughput(self, total_ops: int, endpoints: list[str] | None = None) -> float:
+        """ops/s bound by the busiest endpoint's traffic over link bw
+        (pessimistic under Zipf hot keys — see mean_throughput)."""
+        pool = (self.bytes_by_endpoint if endpoints is None
+                else {e: self.bytes_by_endpoint.get(e, 0) for e in endpoints})
+        if not pool or total_ops == 0:
+            return float("nan")
+        worst = max(pool.values())
+        if worst == 0:
+            return float("inf")
+        return total_ops / (worst / self.cost.bw_Bps)
+
+    def mean_throughput(self, total_ops: int, endpoints: list[str] | None = None) -> float:
+        """ops/s bound by aggregate endpoint traffic over aggregate bw —
+        models a cluster that load-balances over time (the paper's long
+        YCSB runs smooth Zipf hot spots across 20M requests)."""
+        pool = (self.bytes_by_endpoint if endpoints is None
+                else {e: self.bytes_by_endpoint.get(e, 0) for e in endpoints})
+        if not pool or total_ops == 0:
+            return float("nan")
+        total = sum(pool.values())
+        if total == 0:
+            return float("inf")
+        return total_ops / (total / (len(pool) * self.cost.bw_Bps))
+
+    def reset(self):
+        self.bytes_by_kind.clear()
+        self.msgs_by_kind.clear()
+        self.bytes_by_endpoint.clear()
+        self.latencies.clear()
+        self.ops_by_kind.clear()
+
+    def snapshot(self) -> dict:
+        return {
+            "bytes_by_kind": dict(self.bytes_by_kind),
+            "msgs_by_kind": dict(self.msgs_by_kind),
+            "bytes_by_endpoint": dict(self.bytes_by_endpoint),
+        }

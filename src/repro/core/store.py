@@ -1,0 +1,856 @@
+"""MemEC cluster: normal-mode + degraded-mode request orchestration.
+
+This module wires servers, proxies, and the coordinator into an in-process
+cluster simulation with modeled network costs (``netsim``).  It implements
+the full request workflows of paper §4.2 (SET/GET/UPDATE/DELETE), stripe
+management §4.3, fault tolerance §5 (server states, backups, degraded
+requests, migration after restore), and large-object fragmentation §3.2.
+
+Implementation deviations from the paper (each noted inline):
+* stripe IDs are assigned at chunk-open (not seal) time so SET acks can
+  piggyback key->chunk-ID mappings (§5.3 requires the piggyback);
+* DELETE of an unsealed object keeps a tombstoned (zero-valued) replica at
+  parity servers instead of removing it, so seal-time chunk rebuild stays
+  byte-identical;
+* SET of an existing key routes through the UPDATE path (upsert) so a key
+  never occupies two chunk slots — required for parity-side chunk rebuild;
+* degraded UPDATE of an *unsealed* object shadows the new value at the
+  redirected server (migrated back as a normal UPDATE on restore).
+"""
+from __future__ import annotations
+
+import dataclasses
+import struct
+
+import numpy as np
+
+from .chunk import (CHUNK_SIZE, ChunkId, fragment_count, object_size,
+                    parse_objects, split_fragments)
+from .codes import Code, make_code
+from .coordinator import Coordinator, ServerState
+from .netsim import CostModel, Leg, NetSim
+from .proxy import Proxy
+from .server import Server
+from .stripe import StripeList, StripeMapper, generate_stripe_lists
+
+LARGE_MAGIC = b"\x00MEMEC_LRG"
+
+
+class PartialFailure(Exception):
+    """Raised by fault injection mid-request (testing §5.3 revert)."""
+
+
+@dataclasses.dataclass
+class ReconChunk:
+    """A chunk reconstructed on a redirected server (degraded mode)."""
+    chunk_id: ChunkId
+    buf: np.ndarray
+    dirty: bool = False
+    # for data chunks: key -> (offset, key_size, value_size, deleted)
+    objects: dict | None = None
+
+    def parse(self):
+        self.objects = {}
+        for off, key, value, deleted in parse_objects(self.buf):
+            self.objects[key] = (off, len(key), len(value), deleted)
+
+
+class RedirectStore:
+    """Degraded-mode state held by a redirected server (§5.4)."""
+
+    def __init__(self):
+        self.temp_objects: dict[bytes, bytes] = {}   # degraded SET / shadows
+        self.temp_deletes: set[bytes] = set()
+        self.temp_replicas: dict[bytes, tuple[bytes, bool]] = {}  # for failed parity
+        self.recon: dict[tuple, ReconChunk] = {}     # chunk-id key -> chunk
+
+    def clear(self):
+        self.temp_objects.clear()
+        self.temp_deletes.clear()
+        self.temp_replicas.clear()
+        self.recon.clear()
+
+
+class MemECCluster:
+    def __init__(self, num_servers: int = 16, num_proxies: int = 4,
+                 scheme: str = "rs", n: int = 10, k: int = 8, c: int = 16,
+                 chunk_size: int = CHUNK_SIZE, max_unsealed: int = 4,
+                 cost: CostModel | None = None, degraded_enabled: bool = True,
+                 verify_rebuild: bool = False, mapping_ckpt_every: int = 256):
+        self.code: Code = make_code(scheme, n, k)
+        self.n, self.k = self.code.n, self.code.k
+        self.chunk_size = chunk_size
+        self.stripe_lists = generate_stripe_lists(num_servers, self.n, self.k, c)
+        self.mapper = StripeMapper(self.stripe_lists)
+        self.servers = [Server(s, self.code, chunk_size, max_unsealed,
+                               mapping_ckpt_every) for s in range(num_servers)]
+        self.proxies = [Proxy(p, self.mapper) for p in range(num_proxies)]
+        self.coordinator = Coordinator(num_servers, self.stripe_lists)
+        self.net = NetSim(cost)
+        self.degraded_enabled = degraded_enabled
+        self.verify_rebuild = verify_rebuild
+        self.failed: set[int] = set()          # injected transient failures
+        self.redirect: dict[int, RedirectStore] = {}
+        # fault-injection hook: ("update"|"delete"|"set", key, parity_legs)
+        self.crash_hook: tuple | None = None
+        self.stats = {"reconstructions": 0, "recon_chunk_hits": 0,
+                      "reverted_deltas": 0, "degraded_requests": 0,
+                      "migrated_objects": 0, "migrated_chunks": 0}
+
+    # ------------------------------------------------------------------
+    # helpers
+    # ------------------------------------------------------------------
+    def _sv(self, sid: int) -> Server:
+        return self.servers[sid]
+
+    def _rs(self, sid: int) -> RedirectStore:
+        return self.redirect.setdefault(sid, RedirectStore())
+
+    def _is_failed(self, sid: int) -> bool:
+        return sid in self.failed
+
+    def _degraded_active(self, sid: int) -> bool:
+        """True if requests touching sid must go through the coordinator."""
+        return self.degraded_enabled and self.coordinator.state_of(sid) in (
+            ServerState.INTERMEDIATE, ServerState.DEGRADED,
+            ServerState.COORDINATED_NORMAL)
+
+    def _positions(self, sl: StripeList) -> list[int]:
+        return list(sl.servers)
+
+    def _chunk_owner(self, sl: StripeList, position: int) -> int:
+        return sl.servers[position]
+
+    def _stripe_chunk_id(self, sl: StripeList, stripe_id: int, position: int) -> ChunkId:
+        return ChunkId(sl.list_id, stripe_id, position)
+
+    # ------------------------------------------------------------------
+    # normal-mode seal fan-out (data server -> parity servers)
+    # ------------------------------------------------------------------
+    def _handle_seals(self, sl: StripeList, ds: int, events) -> float:
+        t = 0.0
+        for ev in events:
+            legs = []
+            for p in sl.parity_servers:
+                if self._is_failed(p) and self._degraded_active(p):
+                    t += self._seal_to_failed_parity(sl, ds, ev, p)
+                    continue
+                legs.append(Leg("seal", ev.payload_bytes, f"s{ds}", f"s{p}",
+                                self._is_failed(p)))
+                rebuilt = self._sv(p).apply_seal(ev)
+                if self.verify_rebuild:
+                    src = self._sv(ds).get_sealed_chunk(ev.chunk_id)
+                    assert src is not None and np.array_equal(rebuilt, src), \
+                        "parity rebuild mismatch"
+            if legs:
+                t += self.net.phase(legs)
+        return t
+
+    def _seal_to_failed_parity(self, sl: StripeList, ds: int, ev, failed_p: int) -> float:
+        """Seal while a parity server is down: recompute that parity row on
+        the redirected server from the k data chunks (costly but correct —
+        the failed parity's replicas are unreachable)."""
+        r = self.coordinator.redirected_server(sl, failed_p)
+        rs = self._rs(r)
+        t = 0.0
+        data = np.zeros((self.k, self.chunk_size), np.uint8)
+        legs = []
+        for i in range(self.k):
+            owner = sl.data_servers[i]
+            cid = self._stripe_chunk_id(sl, ev.chunk_id.stripe_id, i)
+            c = self._sv(owner).get_sealed_chunk(cid)
+            if c is not None:
+                data[i] = c
+            legs.append(Leg("recon_fetch", self.chunk_size, f"s{owner}", f"s{r}"))
+        t += self.net.phase(legs)
+        parity = self.code.encode(data)
+        ppos = sl.parity_servers.index(failed_p)
+        cid = self._stripe_chunk_id(sl, ev.chunk_id.stripe_id, self.k + ppos)
+        rc = ReconChunk(cid, parity[ppos].copy(), dirty=True)
+        rs.recon[cid.key()] = rc
+        self.stats["reconstructions"] += 1
+        return t
+
+    def _maybe_checkpoint(self, ds: int) -> float:
+        srv = self._sv(ds)
+        if not srv.should_checkpoint():
+            return 0.0
+        mappings = srv.take_checkpoint()
+        payload = sum(len(k) + 8 for k, _ in mappings)
+        t = self.net.phase([Leg("mapping_ckpt", payload, f"s{ds}", "coord")])
+        self.coordinator.store_checkpoint(ds, mappings)
+        legs = [Leg("ckpt_ack", 8, f"s{ds}", f"p{p.pid}") for p in self.proxies]
+        t += self.net.phase(legs)
+        for p in self.proxies:
+            p.clear_mappings(ds)
+        return t
+
+    # ------------------------------------------------------------------
+    # public request API (routed through a proxy)
+    # ------------------------------------------------------------------
+    def set(self, key: bytes, value: bytes, proxy_id: int = 0):
+        if object_size(len(key), len(value)) > self.chunk_size:
+            return self._set_large(key, value, proxy_id)
+        return self._set_small(key, value, proxy_id)
+
+    def get(self, key: bytes, proxy_id: int = 0):
+        v = self._get_small(key, proxy_id)
+        if v is not None and v.startswith(LARGE_MAGIC):
+            total = struct.unpack("<I", v[len(LARGE_MAGIC):len(LARGE_MAGIC) + 4])[0]
+            return self._get_large(key, total, proxy_id)
+        return v
+
+    def update(self, key: bytes, value: bytes, proxy_id: int = 0) -> bool:
+        head = self._get_small(key, proxy_id)
+        if head is not None and head.startswith(LARGE_MAGIC):
+            return self._update_large(key, value, proxy_id)
+        return self._update_small(key, value, proxy_id)
+
+    def delete(self, key: bytes, proxy_id: int = 0) -> bool:
+        head = self._get_small(key, proxy_id)
+        if head is not None and head.startswith(LARGE_MAGIC):
+            return self._delete_large(key, head, proxy_id)
+        return self._delete_small(key, proxy_id)
+
+    # ------------------------------------------------------------------
+    # SET
+    # ------------------------------------------------------------------
+    def _set_small(self, key: bytes, value: bytes, proxy_id: int):
+        proxy = self.proxies[proxy_id]
+        sl, ds = self.mapper.data_server_for(key)
+        involved = [ds] + list(sl.parity_servers)
+        if any(self._degraded_active(s) and self._is_failed(s) for s in involved):
+            return self._degraded_set(proxy, sl, ds, key, value)
+        req = proxy.begin("SET", key, value, sl, ds)
+        t = 0.0
+        # upsert: a key must never occupy two chunk slots (see module doc)
+        if self._sv(ds).lookup(key) is not None:
+            ref = self._sv(ds).lookup(key)
+            if ref.value_size == len(value):
+                proxy.ack(req.seq)
+                return self._update_small(key, value, proxy_id)
+            self._delete_small(key, proxy_id)
+        obj_bytes = object_size(len(key), len(value))
+        legs = [Leg("set", obj_bytes, f"p{proxy.pid}", f"s{ds}", self._is_failed(ds))]
+        for p in sl.parity_servers:
+            legs.append(Leg("set_replica", obj_bytes, f"p{proxy.pid}", f"s{p}",
+                            self._is_failed(p)))
+        t += self.net.phase(legs)
+        cid, off, seal_events = self._sv(ds).set_object(sl, key, value)
+        for p in sl.parity_servers:
+            self._sv(p).store_replica(key, value)
+        t += self._handle_seals(sl, ds, seal_events)
+        # acks (data server piggybacks the key->chunk-ID mapping, §5.3)
+        ack_legs = [Leg("set_ack", len(key) + 8, f"s{ds}", f"p{proxy.pid}",
+                        self._is_failed(ds))]
+        ack_legs += [Leg("set_ack", 8, f"s{p}", f"p{proxy.pid}", self._is_failed(p))
+                     for p in sl.parity_servers]
+        t += self.net.phase(ack_legs)
+        proxy.buffer_mapping(ds, key, cid)
+        t += self._maybe_checkpoint(ds)
+        proxy.ack(req.seq)
+        self.net.record("SET", t)
+        return True
+
+    def _set_large(self, key: bytes, value: bytes, proxy_id: int):
+        frags = split_fragments(key, value, self.chunk_size)
+        for fkey, fval in frags:
+            self._set_small(fkey, fval, proxy_id)
+        manifest = LARGE_MAGIC + struct.pack("<I", len(value))
+        return self._set_small(key, manifest, proxy_id)
+
+    # ------------------------------------------------------------------
+    # GET
+    # ------------------------------------------------------------------
+    def _get_small(self, key: bytes, proxy_id: int):
+        proxy = self.proxies[proxy_id]
+        sl, ds = self.mapper.data_server_for(key)
+        if self._is_failed(ds) and self._degraded_active(ds):
+            return self._degraded_get(proxy, sl, ds, key)
+        t = self.net.phase([Leg("get", len(key), f"p{proxy.pid}", f"s{ds}",
+                                self._is_failed(ds))])
+        v = self._sv(ds).get_value(key)
+        t += self.net.phase([Leg("get_resp", len(v) if v else 0, f"s{ds}",
+                                 f"p{proxy.pid}", self._is_failed(ds))])
+        self.net.record("GET", t)
+        return v
+
+    def _get_large(self, key: bytes, total: int, proxy_id: int):
+        nfrag = fragment_count(total, len(key), self.chunk_size)
+        parts = []
+        for i in range(nfrag):
+            fkey = key + struct.pack("<I", i)
+            part = self._get_small(fkey, proxy_id)
+            if part is None:
+                return None
+            parts.append(part)
+        return b"".join(parts)[:total]
+
+    # ------------------------------------------------------------------
+    # UPDATE / DELETE (shared delta fan-out)
+    # ------------------------------------------------------------------
+    def _mutate_small(self, kind: str, key: bytes, value: bytes | None,
+                      proxy_id: int) -> bool:
+        proxy = self.proxies[proxy_id]
+        sl, ds = self.mapper.data_server_for(key)
+        involved = [ds] + list(sl.parity_servers)
+        if any(self._degraded_active(s) and self._is_failed(s) for s in involved):
+            return self._degraded_mutate(kind, proxy, sl, ds, key, value)
+        req = proxy.begin(kind.upper(), key, value, sl, ds)
+        t = self.net.phase([Leg(kind, len(key) + (len(value) if value else 0),
+                                f"p{proxy.pid}", f"s{ds}", self._is_failed(ds))])
+        srv = self._sv(ds)
+        if kind == "update":
+            res = srv.update_value(key, value)
+        else:
+            res = srv.delete_object(key)
+        if res is None:
+            proxy.ack(req.seq)
+            self.net.record(kind.upper(), t)
+            return False
+        cid, sealed, off, xor = res
+        # trim the xor to its nonzero extent (what crosses the wire)
+        nz = np.nonzero(xor)[0]
+        if len(nz):
+            seg_off, seg = off + int(nz[0]), xor[int(nz[0]): int(nz[-1]) + 1]
+        else:
+            seg_off, seg = off, xor[:0]
+        crash = (self.crash_hook is not None and self.crash_hook[0] == kind
+                 and self.crash_hook[1] == key)
+        applied = 0
+        legs = []
+        for j, p in enumerate(sl.parity_servers):
+            if crash and applied >= self.crash_hook[2]:
+                self.crash_hook = None
+                raise PartialFailure(f"data server {ds} crashed after "
+                                     f"{applied} parity legs")
+            psrv = self._sv(p)
+            if sealed:
+                legs.append(Leg("delta", len(seg), f"s{ds}", f"s{p}",
+                                self._is_failed(p)))
+                psrv.apply_data_delta(sl, cid, seg_off, seg, proxy.pid, req.seq)
+            else:
+                nv = value if kind == "update" else b""
+                legs.append(Leg("replica_delta", len(key) + len(nv),
+                                f"s{ds}", f"s{p}", self._is_failed(p)))
+                psrv.apply_replica_delta(key, nv, kind == "delete",
+                                         proxy.pid, req.seq)
+            applied += 1
+        t += self.net.phase(legs)
+        t += self.net.phase([Leg(f"{kind}_ack", 8, f"s{ds}", f"p{proxy.pid}",
+                                 self._is_failed(ds))])
+        proxy.ack(req.seq)
+        # parity servers prune delta buffers using the ack watermark (§5.3)
+        for p in sl.parity_servers:
+            self._sv(p).prune_deltas(proxy.pid, proxy.ack_watermark)
+        self.net.record(kind.upper(), t)
+        return True
+
+    def _update_small(self, key: bytes, value: bytes, proxy_id: int) -> bool:
+        return self._mutate_small("update", key, value, proxy_id)
+
+    def _delete_small(self, key: bytes, proxy_id: int) -> bool:
+        return self._mutate_small("delete", key, None, proxy_id)
+
+    def _update_large(self, key: bytes, value: bytes, proxy_id: int) -> bool:
+        frags = split_fragments(key, value, self.chunk_size)
+        ok = True
+        for fkey, fval in frags:
+            ok &= self._update_small(fkey, fval, proxy_id)
+        return ok
+
+    def _delete_large(self, key: bytes, head: bytes, proxy_id: int) -> bool:
+        total = struct.unpack("<I", head[len(LARGE_MAGIC):len(LARGE_MAGIC) + 4])[0]
+        nfrag = fragment_count(total, len(key), self.chunk_size)
+        for i in range(nfrag):
+            self._delete_small(key + struct.pack("<I", i), proxy_id)
+        return self._delete_small(key, proxy_id)
+
+    # ------------------------------------------------------------------
+    # degraded requests (§5.4) — all coordinated
+    # ------------------------------------------------------------------
+    def _coord_hop(self, proxy: Proxy, nbytes: int) -> float:
+        return self.net.phase([Leg("coord", nbytes, f"p{proxy.pid}", "coord")])
+
+    def _degraded_set(self, proxy: Proxy, sl: StripeList, ds: int,
+                      key: bytes, value: bytes) -> bool:
+        self.stats["degraded_requests"] += 1
+        t = self._coord_hop(proxy, len(key))
+        obj_bytes = object_size(len(key), len(value))
+        if self._is_failed(ds):
+            r = self.coordinator.redirected_server(sl, ds)
+            rs = self._rs(r)
+            t += self.net.phase([Leg("set_redirect", obj_bytes,
+                                     f"p{proxy.pid}", f"s{r}")])
+            rs.temp_objects[key] = value
+            rs.temp_deletes.discard(key)
+        else:
+            # data server alive; some parity failed — write normally to the
+            # working set, shadow-replicate to the redirected server
+            legs = [Leg("set", obj_bytes, f"p{proxy.pid}", f"s{ds}")]
+            cid, off, seal_events = self._sv(ds).set_object(sl, key, value)
+            for p in sl.parity_servers:
+                if self._is_failed(p):
+                    r = self.coordinator.redirected_server(sl, p)
+                    self._rs(r).temp_replicas[key] = (value, False)
+                    legs.append(Leg("set_replica", obj_bytes,
+                                    f"p{proxy.pid}", f"s{r}"))
+                else:
+                    self._sv(p).store_replica(key, value)
+                    legs.append(Leg("set_replica", obj_bytes,
+                                    f"p{proxy.pid}", f"s{p}"))
+            t += self.net.phase(legs)
+            t += self._handle_seals(sl, ds, seal_events)
+            proxy.buffer_mapping(ds, key, cid)
+        self.net.record("SET_DEG", t)
+        return True
+
+    def _ensure_recon(self, sl: StripeList, failed_sid: int, position: int,
+                      stripe_id: int, r: int) -> tuple[ReconChunk, float]:
+        """On-demand chunk reconstruction at the redirected server (§5.4)."""
+        rs = self._rs(r)
+        cid = self._stripe_chunk_id(sl, stripe_id, position)
+        rc = rs.recon.get(cid.key())
+        if rc is not None:
+            self.stats["recon_chunk_hits"] += 1
+            return rc, 0.0
+        available: dict[int, np.ndarray] = {}
+        legs = []
+        # data positions: sealed-or-zero on working servers
+        for i in range(self.k):
+            owner = sl.data_servers[i]
+            if self._is_failed(owner) or i == position:
+                continue
+            c = self._sv(owner).get_sealed_chunk(
+                self._stripe_chunk_id(sl, stripe_id, i))
+            available[i] = c if c is not None else np.zeros(self.chunk_size, np.uint8)
+            legs.append(Leg("recon_fetch", self.chunk_size, f"s{owner}", f"s{r}"))
+        # parity positions
+        for j in range(self.n - self.k):
+            owner = sl.parity_servers[j]
+            pos = self.k + j
+            if self._is_failed(owner) or pos == position:
+                continue
+            c = self._sv(owner).get_sealed_chunk(
+                self._stripe_chunk_id(sl, stripe_id, pos))
+            if c is not None:
+                available[pos] = c
+                legs.append(Leg("recon_fetch", self.chunk_size, f"s{owner}", f"s{r}"))
+            elif len(available) < self.k:
+                # parity never materialized => no seal happened => zero
+                available[pos] = np.zeros(self.chunk_size, np.uint8)
+                legs.append(Leg("recon_fetch", self.chunk_size, f"s{owner}", f"s{r}"))
+        t = self.net.phase(legs[: self.k]) if legs else 0.0
+        rec = self.code.decode(available, [position], self.chunk_size)
+        rc = ReconChunk(cid, np.array(rec[position], np.uint8))
+        if position < self.k:
+            rc.parse()
+        rs.recon[cid.key()] = rc
+        self.stats["reconstructions"] += 1
+        return rc, t
+
+    def _degraded_get(self, proxy: Proxy, sl: StripeList, ds: int, key: bytes):
+        self.stats["degraded_requests"] += 1
+        t = self._coord_hop(proxy, len(key))
+        r = self.coordinator.redirected_server(sl, ds)
+        rs = self._rs(r)
+        t += self.net.phase([Leg("get_redirect", len(key), f"p{proxy.pid}", f"s{r}")])
+        # 1. degraded-SET / shadowed objects
+        if key in rs.temp_deletes:
+            self.net.record("GET_DEG", t)
+            return None
+        if key in rs.temp_objects:
+            v = rs.temp_objects[key]
+            t += self.net.phase([Leg("get_resp", len(v), f"s{r}", f"p{proxy.pid}")])
+            self.net.record("GET_DEG", t)
+            return v
+        # 2. locate the chunk via the recovered key->chunk-ID mappings
+        cid = self.coordinator.chunk_id_for(ds, key)
+        if cid is None:
+            self.net.record("GET_DEG", t)
+            return None
+        rc = rs.recon.get(cid.key())
+        if rc is None:
+            # 3. unsealed chunk? fetch the replica from a working parity
+            for p in sl.parity_servers:
+                if self._is_failed(p):
+                    continue
+                rep = self._sv(p).get_replica(key)
+                t += self.net.phase([Leg("replica_fetch", len(key),
+                                         f"s{r}", f"s{p}")])
+                if rep is not None:
+                    value, deleted = rep
+                    v = None if deleted else value
+                    if v is not None:
+                        t += self.net.phase([Leg("get_resp", len(v), f"s{r}",
+                                                 f"p{proxy.pid}")])
+                    self.net.record("GET_DEG", t)
+                    return v
+                break  # one probe is enough: replicas are on all parities
+            # 4. sealed chunk: reconstruct on demand (chunk granularity)
+            rc, t_rec = self._ensure_recon(sl, ds, cid.position,
+                                           cid.stripe_id, r)
+            t += t_rec
+        else:
+            self.stats["recon_chunk_hits"] += 1
+        entry = (rc.objects or {}).get(key)
+        if entry is None:
+            self.net.record("GET_DEG", t)
+            return None
+        off, ksz, vsz, deleted = entry
+        if deleted:
+            self.net.record("GET_DEG", t)
+            return None
+        vo = off + 4 + ksz
+        v = rc.buf[vo: vo + vsz].tobytes()
+        t += self.net.phase([Leg("get_resp", len(v), f"s{r}", f"p{proxy.pid}")])
+        self.net.record("GET_DEG", t)
+        return v
+
+    def _degraded_mutate(self, kind: str, proxy: Proxy, sl: StripeList,
+                         ds: int, key: bytes, value: bytes | None) -> bool:
+        self.stats["degraded_requests"] += 1
+        t = self._coord_hop(proxy, len(key))
+        if self._is_failed(ds):
+            ok, t2 = self._degraded_mutate_failed_ds(kind, proxy, sl, ds, key, value)
+            self.net.record(f"{kind.upper()}_DEG", t + t2)
+            return ok
+        # data server alive; failed parity server(s).
+        # Reconstruct-first (§5.4): materialize every failed parity chunk
+        # from the *pre-update* stripe before mutating anything, else the
+        # decoded snapshot would already contain the update and the delta
+        # would be double-applied.
+        srv = self._sv(ds)
+        ref = srv.lookup(key)
+        if ref is None:
+            self.net.record(f"{kind.upper()}_DEG", t)
+            return False
+        pre_cid = srv.chunk_id_of(ref)
+        if srv.sealed[ref.chunk_local_idx]:
+            for j, p in enumerate(sl.parity_servers):
+                if self._is_failed(p):
+                    r = self.coordinator.redirected_server(sl, p)
+                    _, t_rec = self._ensure_recon(sl, p, self.k + j,
+                                                  pre_cid.stripe_id, r)
+                    t += t_rec
+        res = srv.update_value(key, value) if kind == "update" else srv.delete_object(key)
+        if res is None:
+            self.net.record(f"{kind.upper()}_DEG", t)
+            return False
+        cid, sealed, off, xor = res
+        nz = np.nonzero(xor)[0]
+        seg_off = off + (int(nz[0]) if len(nz) else 0)
+        seg = xor[int(nz[0]): int(nz[-1]) + 1] if len(nz) else xor[:0]
+        legs = []
+        for j, p in enumerate(sl.parity_servers):
+            pos = self.k + j
+            if not self._is_failed(p):
+                if sealed:
+                    self._sv(p).apply_data_delta(sl, cid, seg_off, seg,
+                                                 proxy.pid, proxy.seq)
+                else:
+                    nv = value if kind == "update" else b""
+                    self._sv(p).apply_replica_delta(key, nv, kind == "delete",
+                                                    proxy.pid, proxy.seq)
+                legs.append(Leg("delta", len(seg), f"s{ds}", f"s{p}"))
+                continue
+            # failed parity: delta goes to its redirected server (§5.4),
+            # which reconstructs the parity chunk first
+            r = self.coordinator.redirected_server(sl, p)
+            if sealed:
+                rc, t_rec = self._ensure_recon(sl, p, pos, cid.stripe_id, r)
+                t += t_rec
+                full = np.zeros(self.chunk_size, np.uint8)
+                full[seg_off: seg_off + len(seg)] = seg
+                deltas = self.code.xor_delta(cid.position, full)
+                rc.buf ^= deltas[j]
+                rc.dirty = True
+            else:
+                nv = value if kind == "update" else b""
+                self._rs(r).temp_replicas[key] = (nv, kind == "delete")
+            legs.append(Leg("delta_redirect", len(seg), f"s{ds}", f"s{r}"))
+        t += self.net.phase(legs)
+        self.net.record(f"{kind.upper()}_DEG", t)
+        return True
+
+    def _degraded_mutate_failed_ds(self, kind, proxy, sl, ds, key, value):
+        """UPDATE/DELETE when the object's data server is down."""
+        t = 0.0
+        r = self.coordinator.redirected_server(sl, ds)
+        rs = self._rs(r)
+        # degraded-SET'd or shadowed object
+        if key in rs.temp_objects:
+            if kind == "update":
+                rs.temp_objects[key] = value
+            else:
+                rs.temp_objects.pop(key, None)
+                rs.temp_deletes.add(key)
+            return True, t
+        cid = self.coordinator.chunk_id_for(ds, key)
+        if cid is None:
+            return False, t
+        # is the chunk sealed? probe a working parity for a replica
+        probe_parity = next((p for p in sl.parity_servers
+                             if not self._is_failed(p)), None)
+        rep = self._sv(probe_parity).get_replica(key) if probe_parity is not None else None
+        t += self.net.phase([Leg("replica_fetch", len(key), f"s{r}",
+                                 f"s{probe_parity}")])
+        if rep is not None:
+            # unsealed object: shadow the mutation at the redirected server
+            # (migrated back as a normal UPDATE/DELETE on restore)
+            if kind == "update":
+                rs.temp_objects[key] = value
+            else:
+                rs.temp_deletes.add(key)
+            return True, t
+        # sealed chunk: reconstruct-first (§5.4) — the data chunk AND any
+        # failed parity chunks, all from the pre-update stripe — then
+        # mutate and fan out deltas.
+        rc, t_rec = self._ensure_recon(sl, ds, cid.position, cid.stripe_id, r)
+        t += t_rec
+        for j2, p2 in enumerate(sl.parity_servers):
+            if self._is_failed(p2):
+                r2 = self.coordinator.redirected_server(sl, p2)
+                _, t_rec2 = self._ensure_recon(sl, p2, self.k + j2,
+                                               cid.stripe_id, r2)
+                t += t_rec2
+        entry = (rc.objects or {}).get(key)
+        if entry is None or entry[3]:
+            return False, t
+        off, ksz, vsz, _ = entry
+        ext = object_size(ksz, vsz)
+        old = rc.buf[off: off + ext].copy()
+        if kind == "update":
+            if len(value) != vsz:
+                raise ValueError("value size must not change across updates")
+            rc.buf[off + 4 + ksz: off + 4 + ksz + vsz] = np.frombuffer(value, np.uint8)
+        else:
+            vfield = vsz | (1 << 23)
+            rc.buf[off + 1: off + 4] = np.frombuffer(
+                struct.pack("<I", vfield)[:3], np.uint8)
+            rc.buf[off + 4 + ksz: off + 4 + ksz + vsz] = 0
+            rc.objects[key] = (off, ksz, vsz, True)
+        rc.dirty = True
+        xor = old ^ rc.buf[off: off + ext]
+        nz = np.nonzero(xor)[0]
+        seg_off = off + (int(nz[0]) if len(nz) else 0)
+        seg = xor[int(nz[0]): int(nz[-1]) + 1] if len(nz) else xor[:0]
+        legs = []
+        for j, p in enumerate(sl.parity_servers):
+            if self._is_failed(p):
+                r2 = self.coordinator.redirected_server(sl, p)
+                rc2, t_rec2 = self._ensure_recon(sl, p, self.k + j,
+                                                 cid.stripe_id, r2)
+                t += t_rec2
+                full = np.zeros(self.chunk_size, np.uint8)
+                full[seg_off: seg_off + len(seg)] = seg
+                rc2.buf ^= self.code.xor_delta(cid.position, full)[j]
+                rc2.dirty = True
+                legs.append(Leg("delta_redirect", len(seg), f"s{r}", f"s{r2}"))
+            else:
+                self._sv(p).apply_data_delta(sl, cid, seg_off, seg,
+                                             proxy.pid, proxy.seq)
+                legs.append(Leg("delta", len(seg), f"s{r}", f"s{p}"))
+        t += self.net.phase(legs)
+        return True, t
+
+    # ------------------------------------------------------------------
+    # failure / restore transitions (§5.2, §5.5)
+    # ------------------------------------------------------------------
+    def fail_server(self, sid: int) -> dict:
+        """Inject a transient failure; returns transition timings."""
+        self.failed.add(sid)
+        if not self.degraded_enabled:
+            return {"T_N_to_D": 0.0}
+        t = 0.0
+        # NORMAL -> INTERMEDIATE: atomic broadcast includes the failed
+        # (congested) server — hence the higher latency the paper observes.
+        self.coordinator.set_state(sid, ServerState.INTERMEDIATE)
+        legs = [Leg("state_bcast", 16, "coord", f"s{s}", s in self.failed)
+                for s in range(len(self.servers))]
+        legs += [Leg("state_bcast", 16, "coord", f"p{p.pid}") for p in self.proxies]
+        t += self.net.phase(legs)
+        # resolve inconsistency: revert parity deltas of unacked requests
+        replay: list[tuple[int, object]] = []
+        for proxy in self.proxies:
+            unacked = proxy.unacked_seqs()
+            if not unacked:
+                continue
+            legs = []
+            for srv in self.servers:
+                if srv.sid in self.failed:
+                    continue
+                nrev = srv.revert_deltas(proxy.pid, unacked)
+                if nrev:
+                    self.stats["reverted_deltas"] += nrev
+                    legs.append(Leg("revert", 16 * nrev, f"p{proxy.pid}",
+                                    f"s{srv.sid}"))
+            if legs:
+                t += self.net.phase(legs)
+            for seq, req in sorted(proxy.pending.items()):
+                if req.data_server == sid or sid in req.stripe_list.servers:
+                    replay.append((proxy.pid, req))
+        # collect key->chunk-ID mapping backups from proxies (§5.3)
+        proxy_maps = []
+        legs = []
+        for proxy in self.proxies:
+            pm = proxy.mappings_for(sid)
+            proxy_maps.append(pm)
+            legs.append(Leg("mapping_push", sum(len(k) + 8 for k, _ in pm),
+                            f"p{proxy.pid}", "coord"))
+        t += self.net.phase(legs)
+        self.coordinator.merge_proxy_mappings(sid, proxy_maps)
+        # also merge the server's own mapping log that was checkpointed;
+        # plus anything in its log the proxies still buffer — done above.
+        # INTERMEDIATE -> DEGRADED
+        self.coordinator.set_state(sid, ServerState.DEGRADED)
+        legs = [Leg("state_bcast", 16, "coord", f"s{s}")
+                for s in range(len(self.servers)) if s not in self.failed]
+        legs += [Leg("state_bcast", 16, "coord", f"p{p.pid}") for p in self.proxies]
+        t += self.net.phase(legs)
+        timings = {"T_N_to_D": t}
+        # replay incomplete requests as degraded requests
+        for pid, req in replay:
+            self.proxies[pid].pending.pop(req.seq, None)
+            self.proxies[pid].ack(req.seq)
+            if req.kind == "SET":
+                self._degraded_set(self.proxies[pid], req.stripe_list,
+                                   req.data_server, req.key, req.value)
+            elif req.kind == "UPDATE":
+                self._degraded_mutate("update", self.proxies[pid],
+                                      req.stripe_list, req.data_server,
+                                      req.key, req.value)
+            elif req.kind == "DELETE":
+                self._degraded_mutate("delete", self.proxies[pid],
+                                      req.stripe_list, req.data_server,
+                                      req.key, None)
+        return timings
+
+    def restore_server(self, sid: int) -> dict:
+        """Restore a transiently-failed server (§5.5): migrate, then NORMAL."""
+        if sid not in self.failed:
+            return {"T_D_to_N": 0.0}
+        t = 0.0
+        if not self.degraded_enabled:
+            self.failed.discard(sid)
+            return {"T_D_to_N": 0.0}
+        self.coordinator.set_state(sid, ServerState.COORDINATED_NORMAL)
+        legs = [Leg("state_bcast", 16, "coord", f"s{s}")
+                for s in range(len(self.servers))]
+        legs += [Leg("state_bcast", 16, "coord", f"p{p.pid}") for p in self.proxies]
+        t += self.net.phase(legs)
+        self.failed.discard(sid)
+        restored = self._sv(sid)
+        # --- migration from every redirected server ---
+        for r, rs in list(self.redirect.items()):
+            legs = []
+            # 1. dirty reconstructed chunks owned by sid
+            for key_t, rc in list(rs.recon.items()):
+                sl = self.stripe_lists[rc.chunk_id.stripe_list_id]
+                owner = self._chunk_owner(sl, rc.chunk_id.position)
+                if owner != sid:
+                    continue
+                if rc.dirty:
+                    slot = restored.slot_of_chunk(rc.chunk_id)
+                    if slot is None:
+                        slot = restored._alloc_slot(rc.chunk_id)
+                        restored.sealed[slot] = True
+                    restored.region[slot][:] = rc.buf
+                    legs.append(Leg("migrate_chunk", self.chunk_size,
+                                    f"s{r}", f"s{sid}"))
+                    self.stats["migrated_chunks"] += 1
+                    if rc.chunk_id.position < self.k:
+                        # fix the object index for mutated/deleted objects
+                        for okey, (off, ksz, vsz, deleted) in (rc.objects or {}).items():
+                            if deleted:
+                                restored.object_index.delete(okey)
+                del rs.recon[key_t]
+            # 2. degraded-SET objects + shadowed mutations routed to sid
+            for okey in list(rs.temp_objects.keys()):
+                sl2, ds2 = self.mapper.data_server_for(okey)
+                if ds2 != sid:
+                    continue
+                val = rs.temp_objects.pop(okey)
+                legs.append(Leg("migrate_obj", len(okey) + len(val),
+                                f"s{r}", f"s{sid}"))
+                self.stats["migrated_objects"] += 1
+                ref = restored.lookup(okey)
+                if ref is not None and ref.value_size == len(val):
+                    self._update_small(okey, val, 0)
+                else:
+                    if ref is not None:
+                        self._delete_small(okey, 0)
+                    self._set_small(okey, val, 0)
+            for okey in list(rs.temp_deletes):
+                sl2, ds2 = self.mapper.data_server_for(okey)
+                if ds2 != sid:
+                    continue
+                rs.temp_deletes.discard(okey)
+                if restored.lookup(okey) is not None:
+                    self._delete_small(okey, 0)
+            # 3. shadow replicas destined to sid (it was a parity server)
+            for okey, (val, deleted) in list(rs.temp_replicas.items()):
+                sl2, _ = self.mapper.data_server_for(okey)
+                if sid in sl2.parity_servers:
+                    restored.temp_replicas[okey] = (val, deleted)
+                    legs.append(Leg("migrate_replica", len(okey) + len(val),
+                                    f"s{r}", f"s{sid}"))
+                    del rs.temp_replicas[okey]
+            if legs:
+                t += self.net.phase(legs)
+        # 4. heal replica invariants: re-replicate sid's unsealed objects
+        legs = []
+        for lid, ucs in restored.unsealed.items():
+            sl = self.stripe_lists[lid]
+            for uc in ucs:
+                for okey, off in uc.builder.objects:
+                    ref = restored.lookup(okey)
+                    if ref is None or ref.chunk_local_idx != uc.local_idx \
+                            or ref.offset != off:
+                        continue  # superseded copy
+                    val = restored.get_value(okey)
+                    for p in sl.parity_servers:
+                        self._sv(p).store_replica(okey, val)
+                        legs.append(Leg("rereplicate", len(okey) + len(val),
+                                        f"s{sid}", f"s{p}"))
+        if legs:
+            t += self.net.phase(legs)
+        # 5. GC stale replicas: chunks that sealed while sid was down never
+        # popped sid's replicas; a stale replica would shadow post-seal
+        # updates on a future degraded read.
+        self._gc_stale_replicas(sid)
+        # COORDINATED_NORMAL -> NORMAL
+        self.coordinator.set_state(sid, ServerState.NORMAL)
+        legs = [Leg("state_bcast", 16, "coord", f"s{s}")
+                for s in range(len(self.servers))]
+        legs += [Leg("state_bcast", 16, "coord", f"p{p.pid}") for p in self.proxies]
+        t += self.net.phase(legs)
+        return {"T_D_to_N": t}
+
+    def _gc_stale_replicas(self, sid: int):
+        srv = self._sv(sid)
+        for key in list(srv.temp_replicas.keys()):
+            sl, ds = self.mapper.data_server_for(key)
+            if sid not in sl.parity_servers:
+                del srv.temp_replicas[key]
+                continue
+            dsrv = self._sv(ds)
+            ref = dsrv.lookup(key)
+            if ref is not None and dsrv.sealed[ref.chunk_local_idx]:
+                del srv.temp_replicas[key]
+            # ref is None (deleted object): keep the tombstoned replica —
+            # it reads as None either way and may still be needed for a
+            # pending seal rebuild.
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+    def total_memory(self) -> dict:
+        agg: dict[str, int] = {}
+        for s in self.servers:
+            for k, v in s.memory_bytes().items():
+                agg[k] = agg.get(k, 0) + v
+        return agg
+
+    def stored_payload_bytes(self) -> int:
+        return sum(s.bytes_stored for s in self.servers)

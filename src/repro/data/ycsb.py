@@ -1,0 +1,122 @@
+"""YCSB-style workload generator (paper §7 evaluation setup).
+
+Workloads A/B/C/D/F with the paper's request mixes; keys are drawn from a
+heavy-tailed Zipf(0.99) distribution over a preloaded object population,
+matching §7: 24-byte keys; half the objects 8-byte values, half 32-byte.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+WORKLOADS = {
+    # proportions of (GET, UPDATE, SET, RMW)
+    "load": {"set": 1.0},
+    "A": {"get": 0.5, "update": 0.5},
+    "B": {"get": 0.95, "update": 0.05},
+    "C": {"get": 1.0},
+    "D": {"get": 0.95, "set": 0.05},
+    "F": {"get": 0.5, "rmw": 0.5},
+}
+
+
+@dataclasses.dataclass
+class YCSBConfig:
+    num_objects: int = 10000
+    key_size: int = 24
+    value_sizes: tuple = (8, 32)
+    zipf_theta: float = 0.99
+    seed: int = 42
+
+
+class ZipfGenerator:
+    """Classic YCSB zeta-based Zipfian over [0, n)."""
+
+    def __init__(self, n: int, theta: float, rng: np.random.Generator):
+        self.n = n
+        self.theta = theta
+        self.rng = rng
+        self.zetan = np.sum(1.0 / np.power(np.arange(1, n + 1), theta))
+        self.alpha = 1.0 / (1.0 - theta)
+        zeta2 = np.sum(1.0 / np.power(np.arange(1, 3), theta))
+        self.eta = (1 - (2.0 / n) ** (1 - theta)) / (1 - zeta2 / self.zetan)
+
+    def sample(self, size: int) -> np.ndarray:
+        u = self.rng.random(size)
+        uz = u * self.zetan
+        out = np.empty(size, dtype=np.int64)
+        cut1 = uz < 1.0
+        cut2 = (~cut1) & (uz < 1.0 + 0.5 ** self.theta)
+        out[cut1] = 0
+        out[cut2] = 1
+        rest = ~(cut1 | cut2)
+        out[rest] = (self.n * np.power(self.eta * u[rest] - self.eta + 1,
+                                       self.alpha)).astype(np.int64)
+        return np.clip(out, 0, self.n - 1)
+
+
+class YCSBWorkload:
+    def __init__(self, cfg: YCSBConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.zipf = ZipfGenerator(cfg.num_objects, cfg.zipf_theta, self.rng)
+        self.inserted = cfg.num_objects  # next insert id (workload D)
+
+    def key(self, i: int) -> bytes:
+        return b"user%019d" % i  # 24 bytes, YCSB-style
+
+    def value_size(self, i: int) -> int:
+        return self.cfg.value_sizes[i % len(self.cfg.value_sizes)]
+
+    def value(self, i: int, version: int = 0) -> bytes:
+        rng = np.random.default_rng(i * 7919 + version)
+        return rng.bytes(self.value_size(i))
+
+    def load_ops(self):
+        """The load phase: SET every object once."""
+        for i in range(self.cfg.num_objects):
+            yield ("set", self.key(i), self.value(i))
+
+    def run_ops(self, workload: str, num_ops: int):
+        mix = WORKLOADS[workload]
+        kinds = list(mix.keys())
+        probs = np.array([mix[k] for k in kinds])
+        choices = self.rng.choice(len(kinds), size=num_ops, p=probs)
+        ids = self.zipf.sample(num_ops)
+        for t in range(num_ops):
+            kind = kinds[choices[t]]
+            i = int(ids[t])
+            if kind == "get":
+                yield ("get", self.key(i), None)
+            elif kind == "update":
+                yield ("update", self.key(i), self.value(i, version=t))
+            elif kind == "set":
+                i = self.inserted
+                self.inserted += 1
+                yield ("set", self.key(i), self.value(i))
+            elif kind == "rmw":
+                yield ("get", self.key(i), None)
+                yield ("update", self.key(i), self.value(i, version=t))
+
+
+def run_workload(cluster, workload: str, num_ops: int,
+                 cfg: YCSBConfig | None = None, num_proxies: int = 4):
+    """Drive a cluster through a workload; returns the op count executed."""
+    w = YCSBWorkload(cfg or YCSBConfig())
+    ops = 0
+    if workload == "load":
+        for t, (kind, key, val) in enumerate(w.load_ops()):
+            cluster.set(key, val, proxy_id=t % num_proxies)
+            ops += 1
+    else:
+        for t, (kind, key, val) in enumerate(w.run_ops(workload, num_ops)):
+            pid = t % num_proxies
+            if kind == "get":
+                cluster.get(key, proxy_id=pid)
+            elif kind == "update":
+                cluster.update(key, val, proxy_id=pid)
+            elif kind == "set":
+                cluster.set(key, val, proxy_id=pid)
+            ops += 1
+    return ops, w

@@ -1,0 +1,15 @@
+"""Version-compat shim for shard_map (moved out of experimental in 0.8)."""
+from __future__ import annotations
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_rep: bool = False):
+    try:
+        import jax
+        if hasattr(jax, "shard_map"):
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check_rep)
+    except TypeError:
+        pass
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_rep)

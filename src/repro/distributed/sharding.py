@@ -1,0 +1,221 @@
+"""Sharding rules: param-path -> PartitionSpec over ("pod","data","model").
+
+Strategy (DESIGN.md §6):
+* batch -> ("pod","data"); FSDP param+optimizer sharding -> "data";
+  tensor parallel -> "model".
+* Attention: Q heads -> "model" (GSPMD handles non-divisible head counts
+  by padding); KV heads replicated (small); decode KV caches shard the
+  *sequence* dim on "model" instead — softmax/contraction over the sharded
+  axis becomes the expected all-reduce pair.
+* MoE: experts -> "model" (EP); dispatch all-to-all inserted by GSPMD.
+* Mamba/RG-LRU: d_inner / recurrent width -> "model".
+* vocab -> "model" for embedding + logits.
+
+Rules match on path substrings; first hit wins.  Everything unmatched is
+replicated (norms, biases, small vectors).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _data_axes(mesh: Mesh) -> tuple:
+    """FSDP axis (just "data"; pods replicate params for fast recovery)."""
+    return ("data",)
+
+
+def _batch_axes(mesh: Mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# (regex on joined path, spec builder(ndim) -> PartitionSpec)
+# paths look like: blocks/0/attn/wq, blocks/2/moe/w_gate, tail/0/mlp/w_up...
+def param_rules(cfg: ModelConfig):
+    d = "data"
+    m = "model"
+
+    def last2(nd, a, b):
+        """spec with last two dims (a, b), leading dims (layer-stack) None."""
+        return P(*([None] * (nd - 2) + [a, b]))
+
+    def last3(nd, a, b, c):
+        return P(*([None] * (nd - 3) + [a, b, c]))
+
+    rules = [
+        # embeddings: (V, d)
+        (r"embeddings/embed$", lambda nd: P(m, d)),
+        (r"embeddings/unembed$", lambda nd: P(d, m)),
+        # attention projections: wq/wk/wv (d, H*hd), wo (H*hd, d)
+        (r"attn/wq$", lambda nd: last2(nd, d, m)),
+        (r"attn/wk$", lambda nd: last2(nd, d, None)),
+        (r"attn/wv$", lambda nd: last2(nd, d, None)),
+        (r"attn/wo$", lambda nd: last2(nd, m, d)),
+        # MLA
+        (r"mla/w_dq$", lambda nd: last2(nd, d, None)),
+        (r"mla/w_uq$", lambda nd: last3(nd, None, m, None)),
+        (r"mla/wq$", lambda nd: last3(nd, d, m, None)),
+        (r"mla/w_dkv$", lambda nd: last2(nd, d, None)),
+        (r"mla/w_uk$", lambda nd: last3(nd, None, m, None)),
+        (r"mla/w_uv$", lambda nd: last3(nd, None, m, None)),
+        (r"mla/wo$", lambda nd: last2(nd, m, d)),
+        # MLP: (d, f) / (f, d)
+        (r"mlp/w_gate$", lambda nd: last2(nd, d, m)),
+        (r"mlp/w_up$", lambda nd: last2(nd, d, m)),
+        (r"mlp/w_down$", lambda nd: last2(nd, m, d)),
+        # MoE: router (d, E); experts (E, d, f)/(E, f, d).  FSDP on the
+        # d dim; sharding the non-contracting f instead was tried in §Perf
+        # iteration 3 and REFUTED (collective wire unchanged, +20% worse).
+        (r"moe/router$", lambda nd: last2(nd, d, None)),
+        (r"moe/w_gate$", lambda nd: last3(nd, m, d, None)),
+        (r"moe/w_up$", lambda nd: last3(nd, m, d, None)),
+        (r"moe/w_down$", lambda nd: last3(nd, m, None, d)),
+        # Mamba2
+        (r"mamba/in_proj$", lambda nd: last2(nd, d, m)),
+        (r"mamba/out_proj$", lambda nd: last2(nd, m, d)),
+        (r"mamba/conv_w$", lambda nd: last2(nd, None, m)),
+        (r"mamba/conv_b$", lambda nd: P(*([None] * (nd - 1) + [m]))),
+        (r"mamba/out_norm", lambda nd: P(*([None] * (nd - 1) + [m]))),
+        # RG-LRU
+        (r"rglru/w_x$", lambda nd: last2(nd, d, m)),
+        (r"rglru/w_gate$", lambda nd: last2(nd, d, m)),
+        (r"rglru/(wa|wi)$", lambda nd: last2(nd, None, m)),
+        (r"rglru/(ba|bi|lam|conv_b)$", lambda nd: P(*([None] * (nd - 1) + [m]))),
+        (r"rglru/conv_w$", lambda nd: last2(nd, None, m)),
+        (r"rglru/w_out$", lambda nd: last2(nd, m, d)),
+    ]
+    return rules
+
+
+def _mesh_sizes(mesh) -> dict:
+    return dict(mesh.shape)
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    sizes = _mesh_sizes(mesh)
+    n = 1
+    for a in axes:
+        n *= sizes.get(a, 1)
+    return n
+
+
+def fit_spec(spec: P, shape, mesh) -> P:
+    """Demote axes that don't divide their dim (manual shard_map and the
+    EC page layout need exact divisibility; GSPMD would pad instead).
+    Axes absent from the mesh are dropped."""
+    sizes = _mesh_sizes(mesh)
+
+    def present(axes):
+        if isinstance(axes, str):
+            return axes if axes in sizes else None
+        kept = tuple(a for a in axes if a in sizes)
+        return kept if kept else None
+
+    out = []
+    for i, axes in enumerate(spec):
+        if axes is not None:
+            axes = present(axes)
+        if axes is None or i >= len(shape):
+            out.append(None if i >= len(shape) else axes)
+            continue
+        if shape[i] % _axis_size(mesh, axes) == 0 and shape[i] > 0:
+            out.append(axes)
+        elif not isinstance(axes, str) and axes:
+            # tuple axes: try a shrinking prefix, e.g. ("pod","data")->("data",)
+            cand = tuple(axes)
+            while cand and shape[i] % _axis_size(mesh, cand) != 0:
+                cand = cand[1:]
+            out.append(cand if cand else None)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(cfg: ModelConfig, params_shape, mesh: Mesh) -> dict:
+    """PartitionSpec pytree matching a params (shape-)pytree."""
+    rules = param_rules(cfg)
+
+    def spec_for(path, leaf):
+        ps = path_str(path)
+        nd = len(leaf.shape)
+        for pat, builder in rules:
+            if re.search(pat, ps):
+                spec = builder(nd)
+                if len(spec) > nd:  # guard tiny/degenerate leaves
+                    return P()
+                return fit_spec(spec, leaf.shape, mesh)
+        return P()  # replicate
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def batch_specs(cfg: ModelConfig, batch_shape, mesh: Mesh) -> dict:
+    """Input batch: leading batch dim -> (pod, data); mrope positions have
+    batch second; scalars replicated."""
+    b = _batch_axes(mesh)
+
+    def spec_for(path, leaf):
+        ps = path_str(path)
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        if "positions" in ps and nd == 3:   # (3, B, S)
+            return fit_spec(P(None, b, None), leaf.shape, mesh)
+        return fit_spec(P(*([b] + [None] * (nd - 1))), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_shape)
+
+
+def cache_specs(cfg: ModelConfig, cache_shape, mesh: Mesh) -> dict:
+    """Decode caches: batch -> (pod,data); the long sequence axis of
+    attention KV / MLA latents -> "model" (sequence-sharded decode)."""
+    b = _batch_axes(mesh)
+    m = "model"
+
+    def spec_for(path, leaf):
+        ps = path_str(path)
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        # leading dim may be the layer stack (repeats): detect via path
+        off = 1 if ps.startswith("blocks/") else 0
+        spec = [None] * nd
+        spec[off] = b                       # batch
+        if re.search(r"/(k|v|latent|k_rope|k_scale|v_scale)$", ps) \
+                and nd >= off + 3:
+            spec[off + 1] = m               # sequence axis
+        elif re.search(r"/ssm$", ps) and nd >= off + 3:
+            spec[off + 1] = m               # ssm heads
+        elif re.search(r"/h$", ps):
+            spec[off + 1] = m               # rg-lru width
+        elif re.search(r"/conv$", ps) and nd >= off + 3:
+            spec[off + 2] = m               # conv channels
+        return fit_spec(P(*spec), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for MemEC's compute hot spots.
+
+* gf256_matmul — stripe encode/decode as bit-plane GF(2^8) matmul;
+* delta_update — fused P' = P ⊕ gamma·(D ⊕ D') parity maintenance;
+* cuckoo_lookup — batched 2x4 index probe via scalar-prefetch row gather;
+* flash_attention — fused causal QK^T->softmax->PV with VMEM scratch
+  (the §Perf cell-B memory lever for dense training/prefill).
+
+`ops` holds the jit'd public wrappers; `ref` the pure-jnp oracles.
+Kernels run in interpret mode on CPU and compiled on TPU.
+"""
+from . import ops, ref
+from .cuckoo_lookup import cuckoo_lookup
+from .delta_update import delta_update
+from .flash_attention import flash_attention
+from .gf256_matmul import build_apow, gf256_matmul
+
+__all__ = ["ops", "ref", "cuckoo_lookup", "delta_update", "flash_attention",
+           "gf256_matmul", "build_apow"]

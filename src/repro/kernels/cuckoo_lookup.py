@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: batched cuckoo-hash probe (data-plane GET path).
+
+Each query probes its two candidate buckets (4 slots each) of the object
+index (paper §3.2).  The TPU-idiomatic form of this gather is *scalar
+prefetch*: the bucket ids are prefetched into SMEM and consumed by the
+BlockSpec index maps, so each grid step DMAs exactly the two (1,4) bucket
+rows it needs from HBM — the Pallas equivalent of a row gather.
+
+64-bit fingerprints are carried as (lo, hi) uint32 pairs: TPUs have no
+64-bit integer lanes, so the comparison is done as two 32-bit equalities.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU grid spec with scalar prefetch
+    from jax.experimental.pallas import tpu as pltpu
+    _HAVE_PLTPU = True
+except Exception:  # pragma: no cover
+    _HAVE_PLTPU = False
+
+
+def _probe_kernel(b1_ref, b2_ref, f1lo, f1hi, o1, f2lo, f2hi, o2,
+                  qlo_ref, qhi_ref, found_ref, slot_ref):
+    q = pl.program_id(0)
+    qlo = qlo_ref[0]
+    qhi = qhi_ref[0]
+    slot_ids = jax.lax.iota(jnp.int32, 4)
+    big = jnp.int32(2 ** 30)
+    hit1 = (f1lo[0] == qlo) & (f1hi[0] == qhi) & (o1[0] != 0)
+    hit2 = (f2lo[0] == qlo) & (f2hi[0] == qhi) & (o2[0] != 0)
+    s1 = jnp.min(jnp.where(hit1, b1_ref[q] * 4 + slot_ids, big))
+    s2 = jnp.min(jnp.where(hit2, b2_ref[q] * 4 + slot_ids, big))
+    s = jnp.minimum(s1, s2)
+    found_ref[0] = (s < big).astype(jnp.int32)
+    slot_ref[0] = jnp.where(s < big, s, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _probe_call(b1, b2, flo, fhi, occ, qlo, qhi, *, interpret):
+    Q = b1.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Q,),
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda q, b1, b2: (b1[q], 0)),
+            pl.BlockSpec((1, 4), lambda q, b1, b2: (b1[q], 0)),
+            pl.BlockSpec((1, 4), lambda q, b1, b2: (b1[q], 0)),
+            pl.BlockSpec((1, 4), lambda q, b1, b2: (b2[q], 0)),
+            pl.BlockSpec((1, 4), lambda q, b1, b2: (b2[q], 0)),
+            pl.BlockSpec((1, 4), lambda q, b1, b2: (b2[q], 0)),
+            pl.BlockSpec((1,), lambda q, b1, b2: (q,)),
+            pl.BlockSpec((1,), lambda q, b1, b2: (q,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda q, b1, b2: (q,)),
+            pl.BlockSpec((1,), lambda q, b1, b2: (q,)),
+        ],
+    )
+    return pl.pallas_call(
+        _probe_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((Q,), jnp.int32),
+                   jax.ShapeDtypeStruct((Q,), jnp.int32)],
+        interpret=interpret,
+    )(b1, b2, flo, fhi, occ, flo, fhi, occ, qlo, qhi)
+
+
+def cuckoo_lookup(fingerprints, occupied, h1, h2, fp, *,
+                  interpret: bool | None = None):
+    """Batched probe.
+
+    fingerprints: (B,4) uint64 (numpy or jnp); occupied: (B,4) bool;
+    h1/h2: (Q,) uint64 hashes; fp: (Q,) uint64 fingerprints.
+    Returns (found bool (Q,), slot int32 (Q,) = bucket*4+slot or -1).
+    """
+    import numpy as np
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    fingerprints = np.asarray(fingerprints, dtype=np.uint64)
+    B = fingerprints.shape[0]
+    flo = jnp.asarray((fingerprints & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+    fhi = jnp.asarray((fingerprints >> np.uint64(32)).astype(np.uint32))
+    occ = jnp.asarray(np.asarray(occupied), dtype=jnp.int32)
+    h1 = np.asarray(h1, dtype=np.uint64)
+    h2 = np.asarray(h2, dtype=np.uint64)
+    fp = np.asarray(fp, dtype=np.uint64)
+    b1 = jnp.asarray((h1 % B).astype(np.int32))
+    b2 = jnp.asarray((h2 % B).astype(np.int32))
+    qlo = jnp.asarray((fp & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+    qhi = jnp.asarray((fp >> np.uint64(32)).astype(np.uint32))
+    found, slot = _probe_call(b1, b2, flo, fhi, occ, qlo, qhi,
+                              interpret=interpret)
+    return found.astype(bool), slot

@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: fused causal flash attention (QK^T -> online
+softmax -> PV in one VMEM pass).
+
+§Perf cell B identified the fp32 score round-trips of the pure-JAX
+blockwise attention as the top memory lever for the dense train cells
+(est. −35 % t_memory): XLA materializes the (bq, bkv) scores and the
+online-softmax carries through HBM between scan steps, where a fused
+kernel keeps them in VMEM scratch.
+
+Grid (BH, nq, nkv), iterated kv-fastest; scratch (acc, m, l) persists
+across the kv axis and the output tile is written on the last kv step —
+the standard TPU flash-attention schedule.  Causal masking by absolute
+positions; GQA is handled by the caller expanding KV heads (the wrapper
+does it lazily per head group).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  bq: int, bkv: int, nkv: int, scale: float, causal: bool):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                    # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                    # (bkv, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    if causal:
+        qp = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        kp = kj * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        s = jnp.where(qp >= kp, s, NEG_INF)
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + \
+        jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kj == nkv - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bkv", "causal",
+                                             "interpret"))
+def _flash_call(q, k, v, *, bq, bkv, causal, interpret):
+    BH, Sq, hd = q.shape
+    Skv = k.shape[1]
+    nq, nkv = Sq // bq, Skv // bkv
+    scale = 1.0 / np.sqrt(hd)
+    kernel = functools.partial(_flash_kernel, bq=bq, bkv=bkv, nkv=nkv,
+                               scale=scale, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),   # acc
+            pltpu.VMEM((bq,), jnp.float32),      # running max
+            pltpu.VMEM((bq,), jnp.float32),      # running denom
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_kv: int = 128, interpret: bool | None = None):
+    """q: (B, Sq, H, hd); k/v: (B, Skv, KV, hd).  Returns (B, Sq, H, hd).
+
+    GQA: each group of H//KV query heads shares a KV head; the wrapper
+    expands by indexing (no materialized repeat).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Skv)
+    # pad to tile multiples (padded kv masked by causal vs real positions)
+    Sq_p = -(-Sq // bq) * bq
+    Skv_p = -(-Skv // bkv) * bkv
+    if Sq_p != Sq:
+        q = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0)))
+    if Skv_p != Skv:
+        k = jnp.pad(k, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0)))
+    # (B, H, S, hd) flat over batch*heads; kv expanded by head-group index
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq_p, hd)
+    kv_idx = np.arange(H) // G
+    kf = k.transpose(0, 2, 1, 3)[:, kv_idx].reshape(B * H, Skv_p, hd)
+    vf = v.transpose(0, 2, 1, 3)[:, kv_idx].reshape(B * H, Skv_p, hd)
+    out = _flash_call(qf, kf, vf, bq=bq, bkv=bkv, causal=causal,
+                      interpret=interpret)
+    out = out.reshape(B, H, Sq_p, hd).transpose(0, 2, 1, 3)
+    return out[:, :Sq]

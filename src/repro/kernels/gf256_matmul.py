@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: GF(2^8) matrix multiply (stripe encode/decode).
+
+TPU adaptation (DESIGN.md §4): the CPU path (ISA-L) gathers 16-entry PSHUFB
+tables per product — byte gathers don't vectorize on the TPU VPU.  Instead
+we use the bit-plane decomposition
+
+    gamma * x  =  XOR_{b : bit b of x set}  (gamma * 2^b)
+
+so a stripe encode P[m,C] = A[m,k] (*) D[k,C] becomes, per C-tile:
+
+    P[r] = XOR_{i<k, b<8}  ((D[i] >> b) & 1) * APOW[r,i,b]
+
+where APOW[r,i,b] = A[r,i] * 2^b in GF(2^8) is a tiny host-precomputed
+table.  The kernel body is pure shift/and/multiply/xor on int32 lanes —
+fully VPU-vectorizable, no gathers, no MXU.  m*k*8 fused ops per tile
+(e.g. 128 for (n,k)=(10,8)): the op is HBM-bandwidth-bound by design.
+
+Tiling: grid over the byte axis; D tile (k, BC) and P tile (m, BC) live in
+VMEM; APOW (m,k,8 int32) is broadcast to every grid step.  BC=2048 keeps
+the working set (k+m)*BC + 32*m*k ~ 20-40 KB, far under the ~16 MB VMEM
+budget, and 2048 = 16 lanes * 128 keeps the last dim lane-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import gf256
+
+DEFAULT_BLOCK_C = 2048
+
+
+def build_apow(A: np.ndarray) -> np.ndarray:
+    """APOW[r,i,b] = A[r,i] * 2^b over GF(2^8), int32 (m,k,8)."""
+    A = np.asarray(A, dtype=np.uint8)
+    pow2 = np.array([1 << b for b in range(8)], dtype=np.uint8)
+    return gf256.MUL_TABLE[A[..., None], pow2[None, None, :]].astype(np.int32)
+
+
+def _gf_matmul_kernel(apow_ref, d_ref, o_ref, *, m: int, k: int):
+    d = d_ref[...].astype(jnp.int32)                      # (k, BC)
+    acc = [jnp.zeros(d.shape[1:], jnp.int32) for _ in range(m)]
+    for i in range(k):
+        di = d[i]
+        for b in range(8):
+            bit = (di >> b) & 1                           # (BC,) 0/1
+            for r in range(m):
+                acc[r] = acc[r] ^ (bit * apow_ref[r, i, b])
+    o_ref[...] = jnp.stack(acc).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "k", "block_c", "interpret"))
+def _gf_matmul_call(apow, data, *, m, k, block_c, interpret):
+    C = data.shape[1]
+    grid = (C // block_c,)
+    return pl.pallas_call(
+        functools.partial(_gf_matmul_kernel, m=m, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k, 8), lambda c: (0, 0, 0)),
+            pl.BlockSpec((k, block_c), lambda c: (0, c)),
+        ],
+        out_specs=pl.BlockSpec((m, block_c), lambda c: (0, c)),
+        out_shape=jax.ShapeDtypeStruct((m, C), jnp.uint8),
+        interpret=interpret,
+    )(apow, data)
+
+
+def gf256_matmul(A: np.ndarray, data: jax.Array, *,
+                 block_c: int = DEFAULT_BLOCK_C,
+                 interpret: bool | None = None) -> jax.Array:
+    """Compute A (*) data over GF(2^8).
+
+    A: (m, k) uint8 host matrix (encode parity matrix or decode inverse);
+    data: (k, C) uint8.  C is padded to a multiple of block_c internally.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    A = np.asarray(A, dtype=np.uint8)
+    m, k = A.shape
+    data = jnp.asarray(data, dtype=jnp.uint8)
+    assert data.shape[0] == k, (data.shape, k)
+    C = data.shape[1]
+    block_c = min(block_c, _round_up(C, 128))
+    Cp = _round_up(C, block_c)
+    if Cp != C:
+        data = jnp.pad(data, ((0, 0), (0, Cp - C)))
+    apow = jnp.asarray(build_apow(A))
+    out = _gf_matmul_call(apow, data, m=m, k=k, block_c=block_c,
+                          interpret=interpret)
+    return out[:, :C]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult

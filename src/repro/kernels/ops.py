@@ -1,0 +1,108 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Every op dispatches to the Pallas kernel (interpret-mode on CPU, compiled
+on TPU); `use_ref=True` routes to the pure-jnp oracle instead — benchmarks
+use this to compare, tests to cross-validate.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import gf256
+from repro.core.codes import RSCode
+
+from . import ref as _ref
+from .cuckoo_lookup import cuckoo_lookup
+from .delta_update import delta_update
+from .gf256_matmul import gf256_matmul
+
+
+def encode_stripe(code: RSCode, data: jax.Array, *, use_ref: bool = False,
+                  interpret: bool | None = None) -> jax.Array:
+    """(k, C) data chunks -> (m, C) parity chunks."""
+    A = code.parity_matrix
+    if use_ref:
+        return _ref.rs_encode_ref(A, data)
+    return gf256_matmul(A, data, interpret=interpret)
+
+
+def decode_stripe(code: RSCode, available: dict[int, jax.Array],
+                  wanted: list[int], chunk_size: int, *,
+                  use_ref: bool = False,
+                  interpret: bool | None = None) -> dict[int, jax.Array]:
+    """Reconstruct stripe positions from any k available chunks.
+
+    The (k,k) decode-matrix inversion runs on the host (failure sets are
+    concrete coordinator events); the (k,k)x(k,C) products run on device.
+    """
+    inv, idx = code.decode_matrix(list(available.keys()))
+    stacked = jnp.stack([jnp.asarray(available[i], jnp.uint8) for i in idx])
+    mm = _ref.rs_decode_ref if use_ref else (
+        lambda M, D: gf256_matmul(np.asarray(M), D, interpret=interpret))
+    data = mm(inv, stacked)
+    out = {}
+    G = code.generator
+    need_par = [w for w in wanted if w >= code.k]
+    for w in wanted:
+        if w < code.k:
+            out[w] = data[w]
+    if need_par:
+        par = mm(G[need_par], data)
+        for r, w in enumerate(need_par):
+            out[w] = par[r]
+    return out
+
+
+def apply_parity_delta(code: RSCode, parity: jax.Array, data_index: int,
+                       old: jax.Array, new: jax.Array, *,
+                       use_ref: bool = False,
+                       interpret: bool | None = None) -> jax.Array:
+    """Fused P' = P ⊕ gamma_i (old ⊕ new) for all m parity rows."""
+    gammas = code.parity_matrix[:, data_index].astype(np.int32)
+    if use_ref:
+        return _ref.delta_update_ref(parity, jnp.asarray(gammas), old, new)
+    return delta_update(parity, jnp.asarray(gammas), old, new,
+                        interpret=interpret)
+
+
+def batched_index_lookup(index, keys: list[bytes], *, use_ref: bool = False,
+                         interpret: bool | None = None):
+    """Probe a CuckooIndex for many keys at once on device.
+
+    Returns (found bool (Q,), slot int32 (Q,)).  Fingerprint equality is
+    exact at the table level; callers resolve the slot to the stored entry.
+    """
+    from repro.core.index import hash_pair
+    fps, occ = index.bucket_arrays()
+    h1s, h2s, qs = [], [], []
+    for key in keys:
+        h1, h2 = hash_pair(key)
+        h1s.append(h1)
+        h2s.append(h2)
+        qs.append(h1 if h1 != 0 else 1)
+    h1a = np.array(h1s, dtype=np.uint64)
+    h2a = np.array(h2s, dtype=np.uint64)
+    fpa = np.array(qs, dtype=np.uint64)
+    if use_ref:
+        B = fps.shape[0]
+        flo = jnp.asarray((fps & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+        fhi = jnp.asarray((fps >> np.uint64(32)).astype(np.uint32))
+        found, slot = _ref.cuckoo_lookup_ref(
+            flo, fhi, jnp.asarray(occ, dtype=jnp.int32),
+            jnp.asarray((h1a % B).astype(np.int32)),
+            jnp.asarray((h2a % B).astype(np.int32)),
+            jnp.asarray((fpa & np.uint64(0xFFFFFFFF)).astype(np.uint32)),
+            jnp.asarray((fpa >> np.uint64(32)).astype(np.uint32)))
+        return found, slot
+    return cuckoo_lookup(fps, occ, h1a, h2a, fpa, interpret=interpret)
+
+
+def bytes_of(x: jax.Array) -> jax.Array:
+    """Bit-cast any tensor to its flat uint8 byte view (for EC over params)."""
+    return gf256.bytes_view(x)
+
+
+def from_bytes(b: jax.Array, dtype, shape) -> jax.Array:
+    return gf256.from_bytes_view(b, dtype, shape)

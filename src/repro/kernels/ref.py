@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These mirror the numpy host data plane (`repro.core.gf256/codes`) in JAX so
+every kernel has an in-framework reference implementation to sweep against.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import gf256
+
+
+def _tables():
+    return jnp.asarray(gf256.EXP_TABLE), jnp.asarray(gf256.LOG_TABLE)
+
+
+def gf256_mul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Elementwise GF(2^8) product via log/exp tables."""
+    exp, log = _tables()
+    a = a.astype(jnp.uint8)
+    b = b.astype(jnp.uint8)
+    prod = exp[(log[a.astype(jnp.int32)] + log[b.astype(jnp.int32)]) % 255]
+    return jnp.where((a == 0) | (b == 0), jnp.uint8(0), prod)
+
+
+def gf256_matmul_ref(A: jax.Array, D: jax.Array) -> jax.Array:
+    """GF(2^8) matmul (m,k) x (k,C) -> (m,C) with XOR accumulation."""
+    A = jnp.asarray(A, dtype=jnp.uint8)
+    D = jnp.asarray(D, dtype=jnp.uint8)
+    m, k = A.shape
+    out = jnp.zeros((m,) + D.shape[1:], dtype=jnp.uint8)
+    for i in range(k):
+        out = out ^ gf256_mul_ref(
+            jnp.broadcast_to(A[:, i][:, None], (m,) + D.shape[1:]), D[i][None])
+    return out
+
+
+def delta_update_ref(parity: jax.Array, gammas: jax.Array,
+                     old: jax.Array, new: jax.Array) -> jax.Array:
+    """P_j' = P_j ⊕ gamma_j * (old ⊕ new)   (paper §2 linearity).
+
+    parity: (m, C); gammas: (m,); old/new: (C,).
+    """
+    xor = old.astype(jnp.uint8) ^ new.astype(jnp.uint8)
+    m = parity.shape[0]
+    scaled = gf256_mul_ref(
+        jnp.broadcast_to(gammas.astype(jnp.uint8)[:, None], (m, xor.shape[-1])),
+        jnp.broadcast_to(xor[None], (m, xor.shape[-1])))
+    return parity ^ scaled
+
+
+def cuckoo_lookup_ref(flo: jax.Array, fhi: jax.Array, occupied: jax.Array,
+                      b1: jax.Array, b2: jax.Array,
+                      qlo: jax.Array, qhi: jax.Array
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Batched 2-bucket x 4-slot probe.
+
+    Fingerprints are carried as (lo, hi) uint32 pairs (JAX defaults to
+    32-bit; TPUs have no 64-bit lanes).  flo/fhi: (B,4) tables;
+    occupied: (B,4); b1/b2: (Q,) int32 bucket indices; qlo/qhi: (Q,).
+    Returns (found: (Q,) bool, slot: (Q,) int32 = bucket*4+slot or -1).
+    """
+    hit1 = (occupied[b1] != 0) & (flo[b1] == qlo[:, None]) & (fhi[b1] == qhi[:, None])
+    hit2 = (occupied[b2] != 0) & (flo[b2] == qlo[:, None]) & (fhi[b2] == qhi[:, None])
+    slot_ids = jnp.arange(4, dtype=jnp.int32)[None, :]
+    big = jnp.int32(2 ** 30)
+    s1 = jnp.min(jnp.where(hit1, b1[:, None] * 4 + slot_ids, big), axis=1)
+    s2 = jnp.min(jnp.where(hit2, b2[:, None] * 4 + slot_ids, big), axis=1)
+    slot = jnp.minimum(s1, s2)
+    found = slot < big
+    return found, jnp.where(found, slot, -1)
+
+
+def rs_encode_ref(parity_matrix: np.ndarray, data: jax.Array) -> jax.Array:
+    """Stripe encode: (k, C) data -> (m, C) parity."""
+    return gf256_matmul_ref(jnp.asarray(parity_matrix), data)
+
+
+def rs_decode_ref(inv_matrix: np.ndarray, available: jax.Array) -> jax.Array:
+    """Data reconstruction given host-inverted decode matrix (k,k)x(k,C)."""
+    return gf256_matmul_ref(jnp.asarray(inv_matrix), available)

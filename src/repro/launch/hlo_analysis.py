@@ -1,0 +1,317 @@
+"""Scan-aware cost analysis of post-SPMD HLO.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified
+by calibration: a scan of 8 matmuls reports 1 matmul of flops), which
+undercounts everything in scan-over-layers models by the trip count —
+including the FSDP all-gathers *inside* the layer scan.  This module
+re-derives flops / bytes / collective traffic by parsing the HLO module,
+walking the call graph, and multiplying by ``known_trip_count``:
+
+* dot flops:      2 * prod(result dims) * prod(lhs contracting dims)
+* elementwise:    1 flop per result element (fusions: result elements)
+* bytes:          operand + result bytes per instruction; fusion = one op
+                  (internals fused); call ops pass by reference (0 bytes)
+* collectives:    per-kind operand/wire bytes (ring model), multiplied by
+                  enclosing trip counts
+
+Validated against XLA cost_analysis on scan-free graphs (exact match for
+dots) and against hand-counted scan graphs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+                "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+                "f8e4m3fn": 1, "f8e5m2": 1, "token": 0, "opaque": 0}
+
+_SHAPE_RE = re.compile(
+    r"\b(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|"
+    r"pred|token|c64|c128)\[([0-9,]*)\]")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "power", "negate",
+    "compare", "select", "and", "or", "xor", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "convert", "floor",
+    "ceil", "sign", "cosine", "sine", "logistic", "reduce", "clamp",
+}
+
+
+def _shape_elems_bytes(text: str) -> tuple[int, int]:
+    """Total (elements, bytes) across all shapes in a type string."""
+    elems = 0
+    nbytes = 0
+    for m in _SHAPE_RE.finditer(text):
+        n = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES.get(m.group(1), 1)
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_type: str
+    op: str
+    operands: list
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    shapes: dict  # %name -> result type string
+
+
+_COMP_HEAD = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_INSTR_RE = re.compile(
+    r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^=]*?\)|[\w\[\],\{\}\s]*?))\s*"
+    r"([\w\-]+)\((.*)$")
+
+
+def parse_hlo(text: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur = None
+    comment = re.compile(r"/\*.*?\*/")
+    for raw in text.splitlines():
+        line = comment.sub("", raw).strip()
+        if not line:
+            continue
+        if (line.startswith("ENTRY") or
+                (line.startswith("%") and "->" in line and
+                 line.endswith("{"))):
+            m = _COMP_HEAD.match(line)
+            if m:
+                cur = Computation(m.group(1), [], {})
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    comps["__entry__"] = cur
+            continue
+        if line.startswith("}"):
+            continue
+        if cur is None or " = " not in line:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rtype, op, rest = m.groups()
+        # split call args (up to matching paren) from attributes
+        depth = 0
+        idx = 0
+        for idx, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    break
+                depth -= 1
+        args = rest[:idx]
+        attrs = rest[idx + 1:]
+        operands = re.findall(r"%([\w\.\-]+)", args)
+        cur.instrs.append(Instr(name, rtype, op, operands, attrs))
+        cur.shapes[name] = rtype
+    return comps
+
+
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_CALLS_RE = re.compile(r"calls=%([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TOAPPLY_RE = re.compile(r"to_apply=%([\w\.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_V1_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)+)\}")
+
+
+def _permute_ring_distance(attrs: str) -> float:
+    """Mean circular hop distance of a collective-permute (torus links):
+    a shift-8 permute occupies 8x the per-link bandwidth of a shift-1."""
+    m = _PAIRS_RE.search(attrs)
+    if not m:
+        return 1.0
+    pairs = re.findall(r"\{(\d+),(\d+)\}", m.group(1))
+    if not pairs:
+        return 1.0
+    ids = sorted({int(x) for p in pairs for x in p})
+    rank = {d: i for i, d in enumerate(ids)}
+    n = len(ids)
+    dists = []
+    for s, t in pairs:
+        d = (rank[int(t)] - rank[int(s)]) % n
+        dists.append(min(d, n - d))
+    return sum(dists) / len(dists) if dists else 1.0
+
+
+def _group_size(attrs: str) -> int:
+    m = _GROUPS_RE.search(attrs)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_V1_RE.search(attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_op: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_wire: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_count: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll_op.items():
+            self.coll_op[k] += v * mult
+        for k, v in other.coll_wire.items():
+            self.coll_wire[k] += v * mult
+        for k, v in other.coll_count.items():
+            self.coll_count[k] += v * mult
+
+
+def analyze(text: str) -> dict:
+    comps = parse_hlo(text)
+    entry = comps.get("__entry__")
+    memo: dict[str, Cost] = {}
+
+    def comp_cost(cname: str, stack=()) -> Cost:
+        if cname in memo:
+            return memo[cname]
+        if cname in stack or cname not in comps:
+            return Cost()
+        comp = comps[cname]
+        total = Cost()
+        for ins in comp.instrs:
+            op = ins.op
+            rtype = ins.result_type
+            relems, rbytes = _shape_elems_bytes(rtype)
+            if op == "while":
+                trip = 1
+                m = _TRIP_RE.search(ins.attrs)
+                if m:
+                    trip = int(m.group(1))
+                b = _BODY_RE.search(ins.attrs)
+                c = _COND_RE.search(ins.attrs)
+                if b:
+                    total.add(comp_cost(b.group(1), stack + (cname,)), trip)
+                if c:
+                    total.add(comp_cost(c.group(1), stack + (cname,)),
+                              trip + 1)
+                continue
+            if op in ("call", "async-start"):
+                m = _CALLS_RE.search(ins.attrs) or _TOAPPLY_RE.search(ins.attrs)
+                if m:
+                    total.add(comp_cost(m.group(1), stack + (cname,)))
+                continue
+            if op == "conditional":
+                m = _BRANCH_RE.search(ins.attrs)
+                if m:
+                    subs = re.findall(r"%([\w\.\-]+)", m.group(1))
+                    costs = [comp_cost(s, stack + (cname,)) for s in subs]
+                    if costs:  # worst branch
+                        total.add(max(costs, key=lambda c: c.flops + c.bytes))
+                continue
+            # operand bytes (lookup shapes by name within this computation)
+            obytes = 0
+            for oname in ins.operands:
+                t = comp.shapes.get(oname)
+                if t:
+                    obytes += _shape_elems_bytes(t)[1]
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                g = max(_group_size(ins.attrs), 1)
+                if base == "all-gather":
+                    operand, wire = rbytes / g, rbytes * (g - 1) / g
+                elif base == "all-reduce":
+                    operand, wire = rbytes, 2.0 * rbytes * (g - 1) / g
+                elif base == "reduce-scatter":
+                    operand, wire = rbytes * g, rbytes * (g - 1)
+                elif base == "all-to-all":
+                    operand, wire = rbytes, rbytes * (g - 1) / g
+                else:
+                    # per-link cost scales with torus hop distance
+                    operand = rbytes
+                    wire = float(rbytes) * _permute_ring_distance(ins.attrs)
+                total.coll_op[base] += operand
+                total.coll_wire[base] += wire
+                total.coll_count[base] += 1
+                total.bytes += obytes + rbytes
+                continue
+            if op == "dot":
+                lhs_t = comp.shapes.get(ins.operands[0], "") if ins.operands \
+                    else ""
+                ldims = _dims(lhs_t)
+                cm = _CONTRACT_RE.search(ins.attrs)
+                contract = 1
+                if cm and cm.group(1):
+                    for ci in cm.group(1).split(","):
+                        i = int(ci)
+                        if i < len(ldims):
+                            contract *= ldims[i]
+                total.flops += 2.0 * relems * contract
+                total.bytes += obytes + rbytes
+                continue
+            if op == "fusion":
+                # internals are fused: one result + operands through HBM;
+                # count ~1 flop per output element for the fused loop
+                total.flops += relems
+                total.bytes += obytes + rbytes
+                continue
+            if op in _ELEMENTWISE:
+                total.flops += relems
+                total.bytes += obytes + rbytes
+                continue
+            if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "copy-start", "copy-done", "after-all",
+                      # layout/view ops that fuse into consumers on TPU —
+                      # counting them would double-charge HBM traffic
+                      "copy", "transpose", "reshape", "broadcast", "iota",
+                      "convert", "slice", "pad", "reverse",
+                      "bitcast-convert", "partition-id", "replica-id"):
+                continue
+            # memory-moving ops (dynamic-slice/update, gather, scatter,
+            # concatenate, sort, rng, ...)
+            total.bytes += obytes + rbytes
+        memo[cname] = total
+        return total
+
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0}
+    c = comp_cost(entry.name)
+    coll_total = sum(c.coll_op.values())
+    wire_total = sum(c.coll_wire.values())
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "collective_op_bytes": dict(c.coll_op),
+        "collective_wire_bytes": dict(c.coll_wire),
+        "collective_counts": {k: int(v) for k, v in c.coll_count.items()},
+        "collective_bytes_total": coll_total,
+        "collective_wire_total": wire_total,
+    }

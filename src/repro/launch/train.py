@@ -1,0 +1,118 @@
+"""Training launcher: end-to-end driver with EC in-memory checkpoints.
+
+    PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b \
+        --reduced --steps 200 --batch 8 --seq 128 --ec
+
+On CPU this drives reduced configs (the quickstart example); on a real
+fleet the same driver runs the full configs over the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_reduced
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.distributed import sharding as shd
+from repro.distributed.ecstore import ECConfig
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import Model
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import make_optimizer
+from repro.train.train_step import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ec", action="store_true",
+                    help="maintain an EC in-memory checkpoint")
+    ap.add_argument("--ec-k", type=int, default=2)
+    ap.add_argument("--ec-m", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--mesh", choices=["host", "single", "multi"],
+                    default="host")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = (get_reduced(args.arch) if args.reduced else get_config(args.arch))
+    model = Model(cfg)
+    mesh = {"host": make_host_mesh,
+            "single": make_production_mesh,
+            "multi": lambda: make_production_mesh(multi_pod=True)}[args.mesh]()
+    if args.mesh != "host":
+        from repro.models import set_activation_mesh
+        set_activation_mesh(mesh)
+
+    rng = jax.random.PRNGKey(args.seed)
+    params = model.init(rng)
+    opt = make_optimizer(args.optimizer, lr=args.lr,
+                         warmup_steps=min(20, args.steps // 5 + 1),
+                         total_steps=args.steps)
+    opt_state = opt.init(params)
+    data = SyntheticLM(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch, seed=args.seed,
+        embed_dim=cfg.d_model if cfg.input_mode == "embeddings" else 0,
+        mrope=cfg.rope_kind == "mrope"))
+
+    ec_update_fn = None
+    ec = None
+    if args.ec:
+        params_sh = jax.eval_shape(lambda: params)
+        pspecs = shd.param_specs(cfg, params_sh, mesh)
+        ec_cfg = ECConfig(k=args.ec_k, m=args.ec_m, page_size=256,
+                          axis="data")
+        ec = ckpt.ECCheckpoint(mesh, pspecs, ec_cfg)
+        ec.create(params)
+        print(f"EC checkpoint created: RS({ec_cfg.n},{ec_cfg.k}), "
+              f"overhead {ec_cfg.m}/{ec_cfg.k}")
+
+    step_fn = jax.jit(make_train_step(model, opt))
+    start_step = 0
+    if args.ckpt_dir:
+        last = ckpt.latest_step(args.ckpt_dir)
+        if last is not None:
+            state = ckpt.restore_checkpoint(args.ckpt_dir, last,
+                                            {"p": params, "o": opt_state})
+            params, opt_state = state["p"], state["o"]
+            start_step = last
+            print(f"resumed from step {last}")
+
+    losses = []
+    t0 = time.time()
+    with mesh:
+        for step in range(start_step, args.steps):
+            batch = data.batch(step)
+            old_params = params
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            if ec is not None:
+                ec.update(old_params, params)
+            losses.append(float(metrics["loss"]))
+            if step % args.log_every == 0 or step == args.steps - 1:
+                dt = time.time() - t0
+                print(f"step {step:5d}  loss {losses[-1]:.4f}  "
+                      f"gnorm {float(metrics['grad_norm']):.3f}  "
+                      f"({dt:.1f}s)", flush=True)
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                ckpt.save_checkpoint(args.ckpt_dir, step + 1,
+                                     {"p": params, "o": opt_state})
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

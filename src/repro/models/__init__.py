@@ -1,0 +1,7 @@
+"""Model substrate: unified decoder stack for all assigned architectures."""
+from .config import ModelConfig
+from .layers import set_activation_mesh, shard_act
+from .transformer import Model, apply_layer, init_layer
+
+__all__ = ["ModelConfig", "Model", "apply_layer", "init_layer",
+           "set_activation_mesh", "shard_act"]

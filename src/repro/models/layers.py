@@ -1,0 +1,649 @@
+"""Core layers: norms, RoPE/M-RoPE, blockwise (flash-style) attention,
+GQA / MLA / local attention, SwiGLU, embeddings.
+
+Conventions:
+* params are plain dicts of jnp arrays; `init_*` builds them, `*_apply`
+  consumes them.  Stacking across layers (for scan) happens in
+  transformer.py.
+* activations are (batch, seq, ...) in cfg.dtype; reductions in fp32.
+* attention is blockwise (online softmax over KV tiles) so 32k-token
+  prefill never materializes an (S, S) score matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+NEG_INF = -1e30
+
+# ---------------------------------------------------------------------------
+# activation sharding (GSPMD propagation is lossy through the blockwise-
+# attention reshape/transpose/scan chains — without explicit constraints it
+# replicates activations over the data axis and inserts full-batch
+# all-reduces; verified on the 256-device dry-run).  The launcher installs
+# the mesh; model code stays mesh-agnostic.
+# ---------------------------------------------------------------------------
+
+_ACT_MESH = None
+
+
+def set_activation_mesh(mesh):
+    """Install (or clear, with None) the mesh used for activation
+    sharding constraints.  Called by launchers before tracing."""
+    global _ACT_MESH
+    _ACT_MESH = mesh
+
+
+def shard_act(x, *dims):
+    """with_sharding_constraint by logical dims.
+
+    dims entries: "batch" -> ("pod","data") filtered to mesh axes;
+    "model"; None.  A dim smaller than its axis group is demoted to
+    replicated (padding a dim below the axis size wastes >2x); larger
+    non-divisible dims are allowed (GSPMD pads, bounded waste).
+    """
+    if _ACT_MESH is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = _ACT_MESH
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = []
+    for i, d in enumerate(dims):
+        if d is None or i >= x.ndim:
+            spec.append(None)
+            continue
+        axes = (tuple(a for a in ("pod", "data") if a in sizes)
+                if d == "batch" else (d,))
+        axes = tuple(a for a in axes if a in sizes)
+        n = 1
+        for a in axes:
+            n *= sizes[a]
+        if not axes or x.shape[i] < n:
+            # try a shrinking prefix for composite batch axes
+            while axes and x.shape[i] < n:
+                axes = axes[1:]
+                n = 1
+                for a in axes:
+                    n *= sizes[a]
+            if not axes:
+                spec.append(None)
+                continue
+        spec.append(axes if len(axes) > 1 else axes[0])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _init(rng, shape, scale=0.02, dtype=jnp.float32):
+    return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)       # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs        # (B,S,hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections: tuple[int, ...]):
+    """M-RoPE (Qwen2-VL): positions3 (3, B, S) for (t, h, w); head-dim
+    frequency pairs are split into `sections` (summing to hd/2), each
+    section rotated by its own position stream."""
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)       # (half,)
+    sec_id = np.repeat(np.arange(len(sections)), sections)       # (half,)
+    pos = positions3.astype(jnp.float32)[sec_id, :, :]            # (half,B,S)
+    ang = jnp.moveaxis(pos, 0, -1) * freqs                        # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def position_embed(cfg: ModelConfig, q, k, positions):
+    if cfg.rope_kind == "rope":
+        return (apply_rope(q, positions, cfg.rope_theta),
+                apply_rope(k, positions, cfg.rope_theta))
+    if cfg.rope_kind == "mrope":
+        return (apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections),
+                apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections))
+    return q, k
+
+
+# ---------------------------------------------------------------------------
+# blockwise attention (online softmax over KV tiles; never materializes SxS)
+# ---------------------------------------------------------------------------
+
+def _model_axis_size() -> int:
+    if _ACT_MESH is None:
+        return 1
+    sizes = dict(zip(_ACT_MESH.axis_names, _ACT_MESH.devices.shape))
+    return sizes.get("model", 1)
+
+
+def _head_parallel(cfg: ModelConfig, H: int) -> bool:
+    M = _model_axis_size()
+    want = (cfg.attn_parallel == "head" or
+            (cfg.attn_parallel == "auto" and H % max(M, 1) == 0))
+    return want and M > 1 and H % M == 0
+
+
+def _attn_block(q, k, v, mask, softcap):
+    """q (M,B,H,bq,hd) k/v (B,H,bkv,hd) (KV already expanded to H);
+    mask broadcastable to (M,B,H,bq,bkv) or None.
+    Returns online-softmax partials: out (M,B,H,bq,hd), m, l."""
+    scores = jnp.einsum("mbhqd,bhtd->mbhqt", q.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    scores = scores / np.sqrt(q.shape[-1])
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1)                                  # (M,B,H,bq)
+    p = jnp.exp(scores - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    out = jnp.einsum("mbhqt,bhtd->mbhqd", p, v.astype(jnp.float32))
+    return out, m, l
+
+
+def blockwise_attention(q, k, v, cfg: ModelConfig, *, causal: bool = True,
+                        q_offset: int = 0, window: int = 0, kv_mask=None):
+    """q: (B,Sq,H,hd); k,v: (B,Skv,KVH,hd).
+
+    Striped sequence-parallel flash attention: Q tiles are STRIPED over
+    the "model" axis (tile t -> stripe t mod M), so every mesh column
+    works on a different part of the sequence in the same kv-scan step —
+    context parallelism without head sharding (head counts rarely divide
+    a 16-wide TP axis; sequence lengths always do).  Striping (not
+    contiguous chunking) balances the causal triangle across stripes.
+    KV tiles are replicated over "model" and expanded KV->H per tile.
+    Online softmax over KV tiles; peak memory O(M * bq * bkv) per head.
+    window > 0 adds a sliding-window distance mask (qp - kp < window);
+    kv_mask (B, Skv) bool marks per-row valid KV entries.
+    """
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    Maxis = _model_axis_size()
+    head_par = _head_parallel(cfg, H)
+    # head-parallel: no striping (M=1), H dim sharded on "model" instead
+    M = 1 if head_par else Maxis
+    hspec = "model" if head_par else None
+    sspec = None if head_par else "model"
+    bq = min(cfg.attn_block_q, max(Sq // M, 16))
+    bkv = min(cfg.attn_block_kv, Skv)
+    nkv = -(-Skv // bkv)
+    # pad Sq so the tile count is a multiple of M
+    nq = -(-Sq // bq)
+    nq = -(-nq // M) * M
+    Sq_p, Skv_p = nq * bq, nkv * bkv
+    n_local = nq // M
+    if Sq_p != Sq:
+        q = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0)))
+    if Skv_p != Skv:
+        k = jnp.pad(k, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0)))
+        if kv_mask is not None:
+            kv_mask = jnp.pad(kv_mask, ((0, 0), (0, Skv_p - Skv)))
+    # tile t = l*M + m  ->  xs index l, stripe m (sharded over "model")
+    qt = q.reshape(B, n_local, M, bq, H, hd).transpose(1, 2, 0, 4, 3, 5)
+    qt = shard_act(qt, None, sspec, "batch", hspec, None, None)
+    kb = k.reshape(B, nkv, bkv, KV, hd).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, nkv, bkv, KV, hd).transpose(1, 0, 3, 2, 4)
+    kb = shard_act(kb, None, "batch", None, None, None)
+    vb = shard_act(vb, None, "batch", None, None, None)
+    kv_pos = jnp.arange(Skv_p)
+    kv_valid = kv_pos < Skv
+    kvm = (kv_mask.reshape(B, nkv, bkv).transpose(1, 0, 2)
+           if kv_mask is not None else None)
+    stripe = jnp.arange(M)
+
+    def q_step(_, li_qblk):
+        li, qblk = li_qblk  # qblk: (M, B, H, bq, hd)
+
+        def kv_step(carry, kj_kv):
+            acc, m_run, l_run = carry
+            if kvm is None:
+                kj, kblk, vblk = kj_kv
+                row_mask = None
+            else:
+                kj, kblk, vblk, row_mask = kj_kv
+            # expand KV heads -> H for this tile only (B,KV,bkv,hd)->(B,H,..)
+            k_exp = shard_act(jnp.repeat(kblk, G, axis=1),
+                              "batch", hspec, None, None)
+            v_exp = shard_act(jnp.repeat(vblk, G, axis=1),
+                              "batch", hspec, None, None)
+            # q positions of stripe m: (li*M + m)*bq + r
+            qp = (q_offset + (li * M + stripe)[:, None] * bq
+                  + jnp.arange(bq)[None, :])               # (M, bq)
+            kp = jax.lax.dynamic_slice(kv_pos, (kj * bkv,), (bkv,))
+            mask = jax.lax.dynamic_slice(
+                kv_valid, (kj * bkv,), (bkv,))[None, None, :]
+            mask = jnp.broadcast_to(mask, (M, 1, bkv))
+            if causal:
+                mask = mask & (qp[:, :, None] >= kp[None, None, :])
+            if window:
+                mask = mask & (qp[:, :, None] - kp[None, None, :] < window)
+            # (M, bq, bkv) -> (M, 1, 1, bq, bkv); row_mask (B,bkv)
+            full_mask = mask[:, None, None, :, :]
+            if row_mask is not None:
+                full_mask = full_mask & row_mask[None, :, None, None, :]
+            out, m, l = _attn_block(qblk, k_exp, v_exp, full_mask,
+                                    cfg.attn_logit_softcap)
+            m_new = jnp.maximum(m_run, m)
+            a = jnp.exp(m_run - m_new)
+            b = jnp.exp(m - m_new)
+            acc = acc * a[..., None] + out * b[..., None]
+            l_new = l_run * a + l * b
+            return (acc, m_new, l_new), None
+
+        acc0 = shard_act(jnp.zeros((M, B, H, bq, hd), jnp.float32),
+                         sspec, "batch", hspec, None, None)
+        m0 = jnp.full((M, B, H, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((M, B, H, bq), jnp.float32)
+        xs = ((jnp.arange(nkv), kb, vb) if kvm is None
+              else (jnp.arange(nkv), kb, vb, kvm))
+        (acc, m_f, l_f), _ = jax.lax.scan(kv_step, (acc0, m0, l0), xs)
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(n_local), qt))
+    # outs: (n_local, M, B, H, bq, hd) -> (B, Sq, H, hd)
+    out = outs.transpose(2, 0, 1, 4, 3, 5).reshape(B, Sq_p, H, hd)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def _quantize_kv(x):
+    """Per-vector symmetric int8: x (B,S,KV,hd) -> (int8, scale (B,S,KV))."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1),
+                        1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decode_attention_q8(q, k8, ks, v8, vs, cur_len, softcap: float = 0.0):
+    """int8-KV decode: scales factored out of the dots so the cache sweep
+    reads 1 byte/element; scale corrections apply to the (B,H,S) scores."""
+    B, S, KV, hd = k8.shape
+    H = q.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg.astype(jnp.float32),
+                        k8.astype(jnp.float32)) / np.sqrt(hd)
+    scores = scores * ks.transpose(0, 2, 1)[:, :, None, :]
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    valid = (jnp.arange(S) < cur_len)[None, None, None, :]
+    scores = jnp.where(valid, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    pv = p * vs.transpose(0, 2, 1)[:, :, None, :]
+    out = jnp.einsum("bkgs,bskh->bkgh", pv, v8.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cur_len, softcap: float = 0.0):
+    """Single-token attention over a (B, S, KVH, hd) cache.
+
+    Plain (non-blockwise) form: scores are (B, H, S) — small for Sq=1 —
+    and a sequence-sharded cache lets GSPMD turn the softmax/contraction
+    into the expected all-reduces.
+    """
+    B, S, KV, hd = k_cache.shape
+    H = q.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) / np.sqrt(hd)
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    valid = (jnp.arange(S) < cur_len)[None, None, None, :]
+    scores = jnp.where(valid, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (A = global, W = local/windowed)
+# ---------------------------------------------------------------------------
+
+def init_attention(rng, cfg: ModelConfig):
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(rng, 4)
+    dt = _dtype(cfg)
+    return {
+        "wq": _init(ks[0], (d, H * hd), dtype=dt),
+        "wk": _init(ks[1], (d, KV * hd), dtype=dt),
+        "wv": _init(ks[2], (d, KV * hd), dtype=dt),
+        "wo": _init(ks[3], (H * hd, d), dtype=dt),
+    }
+
+
+def attention_apply(params, x, cfg: ModelConfig, positions, *,
+                    local: bool = False, cache=None, cache_len=None,
+                    valid_len=None):
+    """x: (B,S,d).  cache (decode): dict(k,v,(B,Smax,KV,hd)); cache_len
+    scalar = write slot (ring position for local layers); valid_len =
+    number of valid cache entries (defaults to cache_len+1).
+    Returns (out, new_cache)."""
+    B, S, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    hp = _head_parallel(cfg, H)
+    q = shard_act((x @ params["wq"]).reshape(B, S, H, hd),
+                  "batch", None if hp else "model",
+                  "model" if hp else None, None)
+    k = shard_act((x @ params["wk"]).reshape(B, S, KV, hd),
+                  "batch", None, None, None)
+    v = shard_act((x @ params["wv"]).reshape(B, S, KV, hd),
+                  "batch", None, None, None)
+    q, k = position_embed(cfg, q, k, positions)
+    if cache is None:
+        if local and cfg.local_window and cfg.local_window < S:
+            out = _local_attention(q, k, v, cfg)
+        else:
+            out = blockwise_attention(q, k, v, cfg, causal=True)
+        new_cache = {"k": k, "v": v}
+    else:
+        assert S == 1, "decode step is single-token"
+        n_valid = (cache_len + 1) if valid_len is None else valid_len
+        if "k_scale" in cache:                      # int8 KV cache
+            k8, ks = _quantize_kv(k)
+            v8, vs = _quantize_kv(v)
+            kc = jax.lax.dynamic_update_slice(
+                cache["k"], k8, (0, cache_len, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache["v"], v8, (0, cache_len, 0, 0))
+            ksc = jax.lax.dynamic_update_slice(
+                cache["k_scale"], ks.astype(cache["k_scale"].dtype),
+                (0, cache_len, 0))
+            vsc = jax.lax.dynamic_update_slice(
+                cache["v_scale"], vs.astype(cache["v_scale"].dtype),
+                (0, cache_len, 0))
+            out = decode_attention_q8(q, kc, ksc, vc, vsc, n_valid,
+                                      cfg.attn_logit_softcap)
+            new_cache = {"k": kc, "v": vc, "k_scale": ksc, "v_scale": vsc}
+        else:
+            kc = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, cache_len, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, cache_len, 0, 0))
+            out = decode_attention(q, kc, vc, n_valid, cfg.attn_logit_softcap)
+            new_cache = {"k": kc, "v": vc}
+    out = shard_act(out, "batch", None if hp else "model",
+                    "model" if hp else None, None)
+    out = shard_act(out.reshape(B, S, H * hd) @ params["wo"],
+                    "batch", None, None)
+    return out, new_cache
+
+
+def _local_attention(q, k, v, cfg: ModelConfig):
+    """Sliding-window attention: fold windows into batch; each window
+    attends to itself + the previous window (standard SWA tiling)."""
+    B, S, H, hd = q.shape
+    W = cfg.local_window
+    nW = -(-S // W)
+    Sp = nW * W
+    if Sp != S:
+        pad = ((0, 0), (0, Sp - S), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    KV = k.shape[2]
+    qw = q.reshape(B, nW, W, H, hd)
+    kw = k.reshape(B, nW, W, KV, hd)
+    vw = v.reshape(B, nW, W, KV, hd)
+    prev_k = jnp.pad(kw[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    prev_v = jnp.pad(vw[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    k_ctx = jnp.concatenate([prev_k, kw], axis=2)   # (B,nW,2W,KV,hd)
+    v_ctx = jnp.concatenate([prev_v, vw], axis=2)
+    qf = qw.reshape(B * nW, W, H, hd)
+    kf = k_ctx.reshape(B * nW, 2 * W, KV, hd)
+    vf = v_ctx.reshape(B * nW, 2 * W, KV, hd)
+    # window 0 has no real previous window: mask its zero-padded prev keys
+    prev_valid = jnp.broadcast_to((jnp.arange(nW) > 0)[None, :],
+                                  (B, nW)).reshape(B * nW)
+    kv_mask = jnp.concatenate([
+        jnp.broadcast_to(prev_valid[:, None], (B * nW, W)),
+        jnp.ones((B * nW, W), bool)], axis=1)
+    out = blockwise_attention(qf, kf, vf, cfg, causal=True, q_offset=W,
+                              window=W, kv_mask=kv_mask)
+    out = out.reshape(B, nW, W, H, hd).reshape(B, Sp, H, hd)
+    return out[:, :S]
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, MiniCPM3 / DeepSeek style)
+# ---------------------------------------------------------------------------
+
+def init_mla(rng, cfg: ModelConfig):
+    d, H = cfg.d_model, cfg.num_heads
+    r, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+    nope, rope, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(rng, 8)
+    dt = _dtype(cfg)
+    p = {
+        "w_dkv": _init(ks[0], (d, r + rope), dtype=dt),
+        "kv_norm": init_rmsnorm(r),
+        "w_uk": _init(ks[1], (r, H, nope), dtype=dt),
+        "w_uv": _init(ks[2], (r, H, vdim), dtype=dt),
+        "wo": _init(ks[3], (H * vdim, d), dtype=dt),
+    }
+    if qr:
+        p["w_dq"] = _init(ks[4], (d, qr), dtype=dt)
+        p["q_norm"] = init_rmsnorm(qr)
+        p["w_uq"] = _init(ks[5], (qr, H, nope + rope), dtype=dt)
+    else:
+        p["wq"] = _init(ks[6], (d, H, nope + rope), dtype=dt)
+    return p
+
+
+def mla_apply(params, x, cfg: ModelConfig, positions, *, cache=None,
+              cache_len=None):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    r, nope, rope_d, vdim = (cfg.kv_lora_rank, cfg.qk_nope_dim,
+                             cfg.qk_rope_dim, cfg.v_head_dim)
+    # queries
+    if "w_dq" in params:
+        ql = rmsnorm(params["q_norm"], x @ params["w_dq"])
+        q = jnp.einsum("bsr,rhd->bshd", ql, params["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    q = shard_act(q, "batch", "model", None, None)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    # latent kv
+    ckv = shard_act(x @ params["w_dkv"], "batch", None, None)   # (B,S,r+rope)
+    latent = rmsnorm(params["kv_norm"], ckv[..., :r])
+    k_rope = ckv[..., r:][:, :, None, :]                         # (B,S,1,rope)
+    q_rope, k_rope = position_embed(cfg, q_rope, k_rope, positions)
+    if cache is None:
+        out = _mla_blockwise(q_nope, q_rope, latent, k_rope, params, cfg)
+        new_cache = {"latent": latent, "k_rope": k_rope[:, :, 0, :]}
+    else:
+        assert S == 1
+        lc = jax.lax.dynamic_update_slice(
+            cache["latent"], latent.astype(cache["latent"].dtype),
+            (0, cache_len, 0))
+        rc = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope[:, :, 0, :].astype(cache["k_rope"].dtype),
+            (0, cache_len, 0))
+        out = _mla_decode(q_nope, q_rope, lc, rc, params, cache_len + 1)
+        new_cache = {"latent": lc, "k_rope": rc}
+    out = out.reshape(B, S, H * vdim) @ params["wo"]
+    return out, new_cache
+
+
+def _mla_blockwise(q_nope, q_rope, latent, k_rope, params, cfg: ModelConfig):
+    """Prefill: expand the latent to per-head K/V one KV-tile at a time.
+    Q tiles are striped over the "model" axis like blockwise_attention."""
+    B, Sq, H, _ = q_nope.shape
+    M = _model_axis_size()
+    bq = min(cfg.attn_block_q, max(Sq // M, 16))
+    bkv = min(cfg.attn_block_kv, Sq)
+    nkv = -(-Sq // bkv)
+    nq = -(-(-(-Sq // bq)) // M) * M
+    Sqp, Skvp = nq * bq, nkv * bkv
+    n_local = nq // M
+    vdim = cfg.v_head_dim
+    if Sqp != Sq:
+        pad = ((0, 0), (0, Sqp - Sq), (0, 0), (0, 0))
+        q_nope, q_rope = jnp.pad(q_nope, pad), jnp.pad(q_rope, pad)
+    latent_p, krope_p = latent, k_rope[:, :, 0, :]
+    if Skvp != Sq:
+        latent_p = jnp.pad(latent_p, ((0, 0), (0, Skvp - Sq), (0, 0)))
+        krope_p = jnp.pad(krope_p, ((0, 0), (0, Skvp - Sq), (0, 0)))
+
+    lat_b = latent_p.reshape(B, nkv, bkv, -1).transpose(1, 0, 2, 3)
+    kr_b = krope_p.reshape(B, nkv, bkv, -1).transpose(1, 0, 2, 3)
+    # tile t = l*M + m: (n_local, M, B, H, bq, e)
+    qn = q_nope.reshape(B, n_local, M, bq, H, -1).transpose(1, 2, 0, 4, 3, 5)
+    qr = q_rope.reshape(B, n_local, M, bq, H, -1).transpose(1, 2, 0, 4, 3, 5)
+    qn = shard_act(qn, None, "model", "batch", None, None, None)
+    qr = shard_act(qr, None, "model", "batch", None, None, None)
+    scale = 1.0 / np.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    stripe = jnp.arange(M)
+
+    def q_step(_, args):
+        li, qnb, qrb = args  # (M, B, H, bq, e)
+
+        def kv_step(carry, kv):
+            acc, m_run, l_run = carry
+            kj, lat, kr = kv
+            k_nope = jnp.einsum("btr,rhd->bhtd", lat, params["w_uk"])
+            v_blk = jnp.einsum("btr,rhd->bhtd", lat, params["w_uv"])
+            s = (jnp.einsum("mbhqd,bhtd->mbhqt", qnb.astype(jnp.float32),
+                            k_nope.astype(jnp.float32))
+                 + jnp.einsum("mbhqd,btd->mbhqt", qrb.astype(jnp.float32),
+                              kr.astype(jnp.float32))) * scale
+            qp = ((li * M + stripe)[:, None] * bq
+                  + jnp.arange(bq)[None, :])              # (M, bq)
+            kp = kj * bkv + jnp.arange(bkv)
+            mask = qp[:, :, None] >= kp[None, None, :]    # (M, bq, bkv)
+            s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+            m = jnp.max(s, axis=-1)
+            p = jnp.exp(s - m[..., None])
+            l = jnp.sum(p, axis=-1)
+            o = jnp.einsum("mbhqt,bhtd->mbhqd", p, v_blk.astype(jnp.float32))
+            m_new = jnp.maximum(m_run, m)
+            a, b2 = jnp.exp(m_run - m_new), jnp.exp(m - m_new)
+            return (acc * a[..., None] + o * b2[..., None],
+                    m_new, l_run * a + l * b2), None
+
+        acc0 = shard_act(jnp.zeros((M, B, H, bq, vdim), jnp.float32),
+                         "model", "batch", None, None, None)
+        m0 = jnp.full((M, B, H, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((M, B, H, bq), jnp.float32)
+        (acc, _, l_f), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0), (jnp.arange(nkv), lat_b, kr_b))
+        return None, acc / jnp.maximum(l_f, 1e-30)[..., None]
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(n_local), qn, qr))
+    # (n_local, M, B, H, bq, v) -> (B, Sqp, H, v)
+    out = outs.transpose(2, 0, 1, 4, 3, 5).reshape(B, Sqp, H, vdim)
+    return out[:, :Sq].astype(q_nope.dtype)
+
+
+def _mla_decode(q_nope, q_rope, latent_c, krope_c, params, cur_len):
+    """Absorbed decode: attention in latent space, O(S*r) per head."""
+    B, _, H, _ = q_nope.shape
+    r = latent_c.shape[-1]
+    scale = 1.0 / np.sqrt(q_nope.shape[-1] + q_rope.shape[-1])
+    q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, params["w_uk"])  # (B,1,H,r)
+    s = (jnp.einsum("bshr,btr->bhst", q_abs.astype(jnp.float32),
+                    latent_c.astype(jnp.float32))
+         + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                      krope_c.astype(jnp.float32))) * scale
+    S = latent_c.shape[1]
+    valid = (jnp.arange(S) < cur_len)[None, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhst,btr->bshr", p, latent_c.astype(jnp.float32))
+    out = jnp.einsum("bshr,rhd->bshd", ctx, params["w_uv"].astype(jnp.float32))
+    return out.astype(q_nope.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    dt = _dtype(cfg)
+    return {"w_gate": _init(ks[0], (d, f), dtype=dt),
+            "w_up": _init(ks[1], (d, f), dtype=dt),
+            "w_down": _init(ks[2], (f, d), dtype=dt)}
+
+
+def mlp_apply(params, x):
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    h = shard_act(h, "batch", None, "model")
+    return shard_act(h @ params["w_down"], "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def init_embeddings(rng, cfg: ModelConfig):
+    ks = jax.random.split(rng, 2)
+    V = cfg.padded_vocab
+    p = {"embed": _init(ks[0], (V, cfg.d_model))}
+    if not cfg.tie_embeddings:
+        p["unembed"] = _init(ks[1], (cfg.d_model, V))
+    return p
+
+
+def embed(params, tokens, cfg: ModelConfig):
+    x = params["embed"][tokens].astype(_dtype(cfg))
+    return shard_act(x, "batch", None, None)
+
+
+def unembed(params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = x @ params["unembed"].astype(x.dtype)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return shard_act(logits, "batch", None, "model")

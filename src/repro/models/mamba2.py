@@ -1,0 +1,188 @@
+"""Mamba-2 block: SSD (state-space duality) with chunked scan.
+
+Forward uses the SSD algorithm of arXiv:2405.21060: split the sequence
+into chunks of length Q; compute the intra-chunk (quadratic, attention-
+like) term and carry the (H, P, N) chunk states through a linear
+recurrence across chunks.  Peak memory is O(B*H*Q^2 + S/Q * B*H*P*N) —
+never the O(S * H*P*N) of a naive associative scan over every step,
+which is what makes the 524288-token shape feasible.
+
+Decode keeps (conv_state (B, convdim, w-1), ssm_state (B, H, P, N)) and
+steps in O(1) per token — the reason the long_500k cell runs for this
+family while full-attention archs skip it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import _dtype, _init, init_rmsnorm, rmsnorm, shard_act
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    P = cfg.ssm_headdim
+    N = cfg.ssm_state
+    G = cfg.ssm_groups
+    return di, H, P, N, G
+
+
+def init_mamba2(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    di, H, P, N, G = _dims(cfg)
+    conv_dim = di + 2 * G * N
+    ks = jax.random.split(rng, 5)
+    dt = _dtype(cfg)
+    return {
+        # order: [z (di), x (di), B (G*N), C (G*N), dt (H)]
+        "in_proj": _init(ks[0], (d, 2 * di + 2 * G * N + H), dtype=dt),
+        "conv_w": _init(ks[1], (cfg.ssm_conv, conv_dim), scale=0.1,
+                        dtype=jnp.float32),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "out_norm": init_rmsnorm(di),
+        "out_proj": _init(ks[2], (di, d), dtype=dt),
+    }
+
+
+def _split_proj(proj, cfg: ModelConfig):
+    di, H, P, N, G = _dims(cfg)
+    z = proj[..., :di]
+    xBC = proj[..., di: di + di + 2 * G * N]
+    dt = proj[..., -H:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv along seq: xBC (B,S,D), w (K,D)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC, dtype=jnp.float32)
+    for i in range(K):
+        out = out + pad[:, i: i + xBC.shape[1], :].astype(jnp.float32) * w[i]
+    return jax.nn.silu(out + b).astype(xBC.dtype)
+
+
+def _segsum(a_chunk):
+    """log-space cumulative products L[i,j] = prod_{j<s<=i} a_s, (.., Q, Q).
+    a_chunk: (..., Q) log decay per step."""
+    Q = a_chunk.shape[-1]
+    cs = jnp.cumsum(a_chunk, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # sum_{j<s<=i}
+    mask = np.tril(np.ones((Q, Q), bool), 0)
+    return jnp.where(mask, diff, -np.inf)
+
+
+def mamba2_forward(params, x, cfg: ModelConfig):
+    """x: (B, S, d) -> (B, S, d); full-sequence SSD."""
+    B, S, d = x.shape
+    di, H, P, N, G = _dims(cfg)
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, f"seq {S} not divisible by ssd chunk {Q}"
+    nc = S // Q
+
+    proj = shard_act(x @ params["in_proj"], "batch", None, "model")
+    z, xBC, dt = _split_proj(proj, cfg)
+    xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    xBC = shard_act(xBC, "batch", None, "model")
+    xs = shard_act(xBC[..., :di].reshape(B, S, H, P),
+                   "batch", None, "model", None)
+    Bm = xBC[..., di: di + G * N].reshape(B, S, G, N)
+    Cm = xBC[..., di + G * N:].reshape(B, S, G, N)
+    # heads share groups: expand G -> H
+    rep = H // G
+    Bm = jnp.repeat(Bm, rep, axis=2)                    # (B,S,H,N)
+    Cm = jnp.repeat(Cm, rep, axis=2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(params["A_log"])                       # (H,)
+    dA = dt * A                                          # log decay (B,S,H)
+
+    # chunked shapes: (B, nc, Q, ...)
+    def chunk(t):
+        return t.reshape(B, nc, Q, *t.shape[2:])
+
+    xs_c, B_c, C_c, dA_c, dt_c = map(chunk, (xs, Bm, Cm, dA, dt))
+    dAh = dA_c.transpose(0, 1, 3, 2)                    # (B,nc,H,Q)
+
+    # intra-chunk (diagonal) term
+    L = jnp.exp(_segsum(dAh))                           # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bchqn,bchkn->bchqk",
+                        C_c.transpose(0, 1, 3, 2, 4), B_c.transpose(0, 1, 3, 2, 4))
+    M = scores * L
+    xdt = xs_c * dt_c[..., None]                        # weight dt into x
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", M, xdt)
+
+    # chunk states: S_c = sum_k decay_to_end(k) * B_k x_k^T
+    decay_end = jnp.exp(jnp.cumsum(dAh[..., ::-1], axis=-1)[..., ::-1]
+                        - dAh)                          # (B,nc,H,Q) decay from k (exclusive) to end
+    states = jnp.einsum("bchk,bckhn,bckhp->bchpn",
+                        decay_end, B_c, xdt)
+    # inter-chunk recurrence: carry (B,H,P,N)
+    chunk_decay = jnp.exp(jnp.sum(dAh, axis=-1))        # (B,nc,H)
+
+    def scan_fn(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry  # emit state *entering* the chunk
+
+    init = jnp.zeros((B, H, P, N), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    # inter-chunk contribution: y_off[q] = C_q . (decay_into(q) * S_prev)
+    decay_in = jnp.exp(jnp.cumsum(dAh, axis=-1))        # (B,nc,H,Q) decay from chunk start through q
+    y_off = jnp.einsum("bcqhn,bchpn,bchq->bcqhp",
+                       C_c, prev_states, decay_in)
+    y = shard_act((y_diag + y_off).reshape(B, S, H, P),
+                  "batch", None, "model", None)
+    y = y + xs.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = shard_act(y.reshape(B, S, di), "batch", None, "model")
+    y = rmsnorm(params["out_norm"], (y * jax.nn.silu(z.astype(jnp.float32))
+                                     ).astype(x.dtype))
+    return shard_act(y @ params["out_proj"], "batch", None, None)
+
+
+def mamba2_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di, H, P, N, G = _dims(cfg)
+    conv_dim = di + 2 * G * N
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+    }
+
+
+def mamba2_step(params, x, cfg: ModelConfig, cache):
+    """Single-token step: x (B, 1, d) -> (B, 1, d), O(1) state update."""
+    B = x.shape[0]
+    di, H, P, N, G = _dims(cfg)
+    proj = x[:, 0] @ params["in_proj"]                  # (B, proj)
+    z, xBC, dt = _split_proj(proj, cfg)
+    conv_in = jnp.concatenate(
+        [cache["conv"], xBC[:, None, :].astype(cache["conv"].dtype)], axis=1)
+    w = params["conv_w"]
+    acc = jnp.einsum("bkd,kd->bd", conv_in.astype(jnp.float32), w)
+    xBC = jax.nn.silu(acc + params["conv_b"]).astype(x.dtype)
+    new_conv = conv_in[:, 1:]
+    xs = xBC[..., :di].reshape(B, H, P)
+    Bm = jnp.repeat(xBC[..., di: di + G * N].reshape(B, G, N), H // G, axis=1)
+    Cm = jnp.repeat(xBC[..., di + G * N:].reshape(B, G, N), H // G, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt * A)                                # (B,H)
+    upd = jnp.einsum("bhn,bhp,bh->bhpn", Bm.astype(jnp.float32),
+                     xs.astype(jnp.float32), dt)
+    ssm = cache["ssm"] * da[..., None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", Cm.astype(jnp.float32), ssm)
+    y = y + xs.astype(jnp.float32) * params["D"][None, :, None]
+    y = y.reshape(B, di)
+    y = rmsnorm(params["out_norm"],
+                (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype))
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, {"conv": new_conv, "ssm": ssm}

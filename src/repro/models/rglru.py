@@ -1,0 +1,105 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The temporal-mixing block is: linear in-projections (x branch + gate
+branch), short causal conv on the x branch, then the Real-Gated LRU:
+
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    log a_t = -c * softplus(Lambda) * r_t
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses an associative scan over (a, b) pairs (the recurrence is
+linear); decode is an O(1) state update — together with the 2048-token
+local-attention window this bounds serving state, which is why the
+long_500k cell runs for this arch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _dtype, _init, shard_act
+
+
+def init_rglru(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = jax.random.split(rng, 6)
+    dt = _dtype(cfg)
+    return {
+        "w_x": _init(ks[0], (d, d), dtype=dt),
+        "w_gate": _init(ks[1], (d, d), dtype=dt),
+        "conv_w": _init(ks[2], (cfg.rglru_conv, d), scale=0.1,
+                        dtype=jnp.float32),
+        "conv_b": jnp.zeros((d,), jnp.float32),
+        "wa": _init(ks[3], (d, d), scale=0.01, dtype=jnp.float32),
+        "ba": jnp.zeros((d,), jnp.float32),
+        "wi": _init(ks[4], (d, d), scale=0.01, dtype=jnp.float32),
+        "bi": jnp.zeros((d,), jnp.float32),
+        "lam": jnp.linspace(0.9, 5.0, d).astype(jnp.float32),  # softplus arg
+        "w_out": _init(ks[5], (d, d), dtype=dt),
+    }
+
+
+def _conv(x, w, b, state=None):
+    """Causal depthwise conv; state (B, K-1, d) for decode."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+        new_state = None
+    else:
+        pad = jnp.concatenate([state, x.astype(state.dtype)], axis=1)
+        new_state = pad[:, -(K - 1):]
+    out = jnp.zeros(x.shape, jnp.float32)
+    for i in range(K):
+        out = out + pad[:, i: i + x.shape[1], :].astype(jnp.float32) * w[i]
+    return (out + b).astype(x.dtype), new_state
+
+
+def _lru_gates(params, xb, cfg: ModelConfig):
+    r = jax.nn.sigmoid(xb.astype(jnp.float32) @ params["wa"] + params["ba"])
+    i = jax.nn.sigmoid(xb.astype(jnp.float32) @ params["wi"] + params["bi"])
+    log_a = -cfg.rglru_c * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * (
+        i * xb.astype(jnp.float32))
+    return a, gated_in
+
+
+def rglru_forward(params, x, cfg: ModelConfig):
+    """x: (B, S, d) -> (B, S, d)."""
+    xb = shard_act(x @ params["w_x"], "batch", None, "model")
+    gate = jax.nn.gelu((x @ params["w_gate"]).astype(jnp.float32))
+    gate = shard_act(gate, "batch", None, "model")
+    xb, _ = _conv(xb, params["conv_w"], params["conv_b"])
+    a, gin = _lru_gates(params, xb, cfg)
+    a = shard_act(a, "batch", None, "model")
+    gin = shard_act(gin, "batch", None, "model")
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gin), axis=1)
+    y = (h * gate).astype(x.dtype)
+    return shard_act(y @ params["w_out"], "batch", None, None)
+
+
+def rglru_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, cfg.rglru_conv - 1, cfg.d_model), dtype),
+        "h": jnp.zeros((batch, cfg.d_model), jnp.float32),
+    }
+
+
+def rglru_step(params, x, cfg: ModelConfig, cache):
+    """x: (B, 1, d); O(1) recurrent state update."""
+    xb = x @ params["w_x"]
+    gate = jax.nn.gelu((x @ params["w_gate"]).astype(jnp.float32))
+    xb, new_conv = _conv(xb, params["conv_w"], params["conv_b"],
+                         state=cache["conv"])
+    a, gin = _lru_gates(params, xb, cfg)
+    h = cache["h"] * a[:, 0] + gin[:, 0]
+    y = (h[:, None, :] * gate).astype(x.dtype)
+    return y @ params["w_out"], {"conv": new_conv, "h": h}

@@ -1,0 +1,256 @@
+"""Model assembly: scan-over-layers decoder with heterogeneous patterns.
+
+The layer stack is `cfg.layer_pattern` tiled to num_layers.  Layers are
+grouped into repeating *units* (e.g. "RRA"): per unit position, parameters
+of all repeats are stacked on a leading axis and consumed by `lax.scan` —
+one trace regardless of depth (88-layer Mistral compiles as fast as a
+2-layer smoke model).  The `num_layers % len(unit)` remainder layers run
+unstacked after the scan.
+
+Caches are stacked the same way, so prefill/decode also scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (attention_apply, embed, init_attention, init_embeddings,
+                     init_mla, init_mlp, init_rmsnorm, mla_apply, mlp_apply,
+                     rmsnorm, unembed)
+from .mamba2 import (init_mamba2, mamba2_forward, mamba2_init_cache,
+                     mamba2_step)
+from .moe import init_moe, moe_apply
+from .rglru import init_rglru, rglru_forward, rglru_init_cache, rglru_step
+
+MIXER_KINDS = {"A": "attn", "W": "attn", "M": "attn", "L": "mla",
+               "S": "mamba", "R": "rglru"}
+FFN_KINDS = {"A": "mlp", "W": "mlp", "L": "mlp", "R": "mlp", "M": "moe",
+             "S": None}
+
+
+# ---------------------------------------------------------------------------
+# single-layer init / apply
+# ---------------------------------------------------------------------------
+
+def init_layer(rng, kind: str, cfg: ModelConfig):
+    k1, k2 = jax.random.split(rng)
+    p = {"ln1": init_rmsnorm(cfg.d_model)}
+    mixer = MIXER_KINDS[kind]
+    if mixer == "attn":
+        p["attn"] = init_attention(k1, cfg)
+    elif mixer == "mla":
+        p["mla"] = init_mla(k1, cfg)
+    elif mixer == "mamba":
+        p["mamba"] = init_mamba2(k1, cfg)
+    elif mixer == "rglru":
+        p["rglru"] = init_rglru(k1, cfg)
+    ffn = FFN_KINDS[kind]
+    if ffn:
+        p["ln2"] = init_rmsnorm(cfg.d_model)
+        p[ffn] = init_moe(k2, cfg) if ffn == "moe" else init_mlp(k2, cfg)
+    return p
+
+
+def apply_layer(params, x, kind: str, cfg: ModelConfig, positions, *,
+                cache=None, cache_len=None, valid_len=None):
+    """Returns (x, new_cache)."""
+    h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    mixer = MIXER_KINDS[kind]
+    if mixer == "attn":
+        out, new_cache = attention_apply(
+            params["attn"], h, cfg, positions, local=(kind == "W"),
+            cache=cache, cache_len=cache_len, valid_len=valid_len)
+    elif mixer == "mla":
+        out, new_cache = mla_apply(params["mla"], h, cfg, positions,
+                                   cache=cache, cache_len=cache_len)
+    elif mixer == "mamba":
+        if cache is None:
+            out, new_cache = mamba2_forward(params["mamba"], h, cfg), None
+        else:
+            out, new_cache = mamba2_step(params["mamba"], h, cfg, cache)
+    elif mixer == "rglru":
+        if cache is None:
+            out, new_cache = rglru_forward(params["rglru"], h, cfg), None
+        else:
+            out, new_cache = rglru_step(params["rglru"], h, cfg, cache)
+    x = x + out
+    ffn = FFN_KINDS[kind]
+    if ffn:
+        h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+        out = (moe_apply(params[ffn], h, cfg) if ffn == "moe"
+               else mlp_apply(params[ffn], h))
+        x = x + out
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# stacked-unit model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    @property
+    def unit(self) -> str:
+        return self.cfg.layer_pattern
+
+    @property
+    def repeats(self) -> int:
+        return self.cfg.num_layers // len(self.unit)
+
+    @property
+    def tail(self) -> str:
+        return self.unit[: self.cfg.num_layers % len(self.unit)]
+
+    # -- init ---------------------------------------------------------------
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        k_emb, k_blocks, k_tail = jax.random.split(rng, 3)
+        params = {"embeddings": init_embeddings(k_emb, cfg),
+                  "final_norm": init_rmsnorm(cfg.d_model)}
+        blocks = []
+        for u, kind in enumerate(self.unit):
+            keys = jax.random.split(jax.random.fold_in(k_blocks, u),
+                                    max(self.repeats, 1))
+            if self.repeats:
+                blocks.append(jax.vmap(
+                    lambda k, kind=kind: init_layer(k, kind, cfg))(keys))
+            else:
+                blocks.append(None)
+        params["blocks"] = blocks
+        params["tail"] = [init_layer(jax.random.fold_in(k_tail, i), kind, cfg)
+                          for i, kind in enumerate(self.tail)]
+        return params
+
+    # -- helpers --------------------------------------------------------------
+    def _embed_in(self, params, batch):
+        cfg = self.cfg
+        if cfg.input_mode == "embeddings" and "embeddings" in batch:
+            x = batch["embeddings"].astype(jnp.dtype(cfg.dtype))
+            B, S = x.shape[:2]
+        else:
+            x = embed(params["embeddings"], batch["tokens"], cfg)
+            B, S = batch["tokens"].shape
+        positions = batch.get("positions")
+        if positions is None:
+            base = jnp.arange(S, dtype=jnp.int32)[None, :]
+            positions = jnp.broadcast_to(base, (B, S))
+            if cfg.rope_kind == "mrope":
+                positions = jnp.broadcast_to(positions[None], (3, B, S))
+        return x, positions
+
+    def _remat(self, fn):
+        if self.cfg.remat == "full":
+            return jax.checkpoint(fn, policy=None)
+        if self.cfg.remat == "dots":
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        return fn
+
+    # -- forward (training / scoring) ----------------------------------------
+    def apply(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        x, positions = self._embed_in(params, batch)
+
+        def unit_body(x, unit_params):
+            for u, kind in enumerate(self.unit):
+                x, _ = apply_layer(unit_params[u], x, kind, cfg, positions)
+            return x
+
+        body = self._remat(unit_body)
+        if self.repeats:
+            x, _ = jax.lax.scan(lambda c, ps: (body(c, ps), None),
+                                x, tuple(params["blocks"]))
+        for i, kind in enumerate(self.tail):
+            x, _ = apply_layer(params["tail"][i], x, kind, cfg, positions)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return unembed(params["embeddings"], x, cfg)
+
+    # -- cache ---------------------------------------------------------------
+    def _layer_cache(self, kind: str, batch: int, max_len: int, dtype):
+        cfg = self.cfg
+        mixer = MIXER_KINDS[kind]
+        if mixer == "attn":
+            S = max_len if kind != "W" else min(max_len, cfg.local_window)
+            shape = (batch, S, cfg.num_kv_heads, cfg.head_dim)
+            if cfg.kv_cache_dtype == "int8":
+                return {"k": jnp.zeros(shape, jnp.int8),
+                        "v": jnp.zeros(shape, jnp.int8),
+                        "k_scale": jnp.zeros(shape[:-1], jnp.float32),
+                        "v_scale": jnp.zeros(shape[:-1], jnp.float32)}
+            return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        if mixer == "mla":
+            return {"latent": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+                    "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype)}
+        if mixer == "mamba":
+            return mamba2_init_cache(cfg, batch, dtype=jnp.float32)
+        if mixer == "rglru":
+            return rglru_init_cache(cfg, batch, dtype=jnp.float32)
+        raise ValueError(kind)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        def stack(tree):
+            return jax.tree.map(
+                lambda x: jnp.zeros((self.repeats,) + x.shape, x.dtype), tree)
+
+        blocks = [stack(self._layer_cache(kind, batch, max_len, dtype))
+                  if self.repeats else None for kind in self.unit]
+        tail = [self._layer_cache(kind, batch, max_len, dtype)
+                for kind in self.tail]
+        return {"blocks": blocks, "tail": tail}
+
+    # -- decode step -----------------------------------------------------------
+    def decode_step(self, params, cache, tokens, cur_len, positions=None):
+        """tokens: (B,) int32 (or (B,1,d) embeddings); cur_len: scalar count
+        of tokens already in the cache.  Returns (logits (B,V), new_cache)."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        if cfg.input_mode == "embeddings" and tokens.ndim == 3:
+            x = tokens.astype(jnp.dtype(cfg.dtype))
+        else:
+            x = embed(params["embeddings"], tokens[:, None], cfg)
+        if positions is None:
+            pos = jnp.full((B, 1), cur_len, jnp.int32)
+            if cfg.rope_kind == "mrope":
+                pos = jnp.broadcast_to(pos[None], (3, B, 1))
+        else:
+            pos = positions
+        W = cfg.local_window or 0
+
+        def step_one(x, layer_params, layer_cache, kind):
+            if kind == "W" and W:
+                # ring buffer: write slot wraps; valid count saturates at W
+                return apply_layer(layer_params, x, kind, cfg, pos,
+                                   cache=layer_cache, cache_len=cur_len % W,
+                                   valid_len=jnp.minimum(cur_len + 1, W))
+            return apply_layer(layer_params, x, kind, cfg, pos,
+                               cache=layer_cache, cache_len=cur_len)
+
+        # scan over repeats, applying the whole unit per step — the layer
+        # ORDER matches apply(): unit[0], unit[1], ..., unit[0], ...
+        def unit_step(x, xs):
+            ps_list, cache_list = xs
+            new_caches = []
+            for u, kind in enumerate(self.unit):
+                x, nc = step_one(x, ps_list[u], cache_list[u], kind)
+                new_caches.append(nc)
+            return x, tuple(new_caches)
+
+        new_blocks = list(cache["blocks"])
+        if self.repeats:
+            x, ncaches = jax.lax.scan(
+                unit_step, x,
+                (tuple(params["blocks"]), tuple(cache["blocks"])))
+            new_blocks = list(ncaches)
+        new_tail = []
+        for i, kind in enumerate(self.tail):
+            x, nc = step_one(x, params["tail"][i], cache["tail"][i], kind)
+            new_tail.append(nc)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = unembed(params["embeddings"], x, cfg)
+        return logits[:, 0], {"blocks": new_blocks, "tail": new_tail}

@@ -1,0 +1,77 @@
+"""Training step: CE loss, grad clip, optimizer, optional EC parity fusion.
+
+The EC-fused step is the paper's UPDATE path applied to training state:
+the optimizer's parameter delta (old XOR new bytes) feeds the gamma-scaled
+delta-parity collectives every step, keeping an erasure-coded in-memory
+copy of the model continuously fresh (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+
+from .optimizer import Optimizer, apply_updates, clip_by_global_norm
+
+
+def cross_entropy(logits, labels, z_loss: float = 1e-4):
+    """logits (B,S,Vp) (padded vocab), labels (B,S) int32 < logical vocab."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    loss = lse - gold
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return loss.mean()
+
+
+def make_loss_fn(model: Model):
+    def loss_fn(params, batch):
+        logits = model.apply(params, batch)
+        loss = cross_entropy(logits, batch["labels"])
+        return loss, {"loss": loss}
+    return loss_fn
+
+
+def make_train_step(model: Model, optimizer: Optimizer, *,
+                    grad_clip: float = 1.0, ec_update_fn=None,
+                    donate: bool = True):
+    """Returns train_step(params, opt_state, batch[, ec_parity]).
+
+    ec_update_fn(old_params, new_params, parity) -> new_parity is the
+    shard_map'd delta-parity closure from `distributed.ecstore`; when
+    given, the step threads and refreshes the EC parity buffer.
+    """
+    loss_fn = make_loss_fn(model)
+
+    def base_step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        new_params = apply_updates(params, updates)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return new_params, opt_state, metrics
+
+    if ec_update_fn is None:
+        return base_step
+
+    def ec_step(params, opt_state, batch, ec_parity):
+        new_params, opt_state, metrics = base_step(params, opt_state, batch)
+        new_parity = ec_update_fn(params, new_params, ec_parity)
+        return new_params, opt_state, new_parity, metrics
+
+    return ec_step
+
+
+def eval_step(model: Model):
+    loss_fn = make_loss_fn(model)
+
+    def step(params, batch):
+        loss, _ = loss_fn(params, batch)
+        return loss
+
+    return step

@@ -1,0 +1,25 @@
+"""Shared pytest fixtures.
+
+NOTE: no XLA_FLAGS here on purpose — smoke tests run on the single real
+CPU device; tests needing a multi-device mesh spawn a subprocess with
+their own --xla_force_host_platform_device_count (see test_ecstore.py).
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def subprocess_env():
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    return env

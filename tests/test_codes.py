@@ -1,0 +1,106 @@
+"""Erasure codes: MDS property, delta-update linearity, RDP double-failure."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.codes import NoCode, RDPCode, RSCode, XORCode, make_code
+
+C = 256  # small chunk size for test speed (divisible by p-1=16)
+
+
+def _stripe(code, rng, chunk=C):
+    data = rng.integers(0, 256, (code.k, chunk), dtype=np.uint8)
+    parity = code.encode(data)
+    return data, parity, np.concatenate([data, parity])
+
+
+@given(st.data())
+@settings(max_examples=25, deadline=None)
+def test_rs_mds_property(data):
+    """Any n-k erasures are recoverable (MDS)."""
+    n, k = data.draw(st.sampled_from([(10, 8), (14, 10), (6, 4), (5, 3)]))
+    code = RSCode(n=n, k=k)
+    seed = data.draw(st.integers(0, 2**31))
+    rng = np.random.default_rng(seed)
+    d, p, stripe = _stripe(code, rng)
+    erased = data.draw(st.sets(st.integers(0, n - 1), min_size=1,
+                               max_size=n - k))
+    avail = {i: stripe[i] for i in range(n) if i not in erased}
+    rec = code.decode(avail, sorted(erased), C)
+    for i in erased:
+        assert np.array_equal(rec[i], stripe[i]), f"position {i}"
+
+
+@given(st.integers(0, 2**31), st.integers(0, 7), st.integers(1, C))
+@settings(max_examples=25, deadline=None)
+def test_rs_delta_equals_reencode(seed, idx, span):
+    """P' = P xor gamma*(D xor D') == encode of the updated stripe (§2)."""
+    code = RSCode(n=10, k=8)
+    rng = np.random.default_rng(seed)
+    d, p, _ = _stripe(code, rng)
+    new = d.copy()
+    off = rng.integers(0, C - span + 1)
+    new[idx, off:off + span] = rng.integers(0, 256, span, dtype=np.uint8)
+    delta = code.parity_delta(idx, d[idx], new[idx])
+    assert np.array_equal(p ^ delta, code.encode(new))
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=15, deadline=None)
+def test_rdp_double_erasure(seed):
+    code = make_code("rdp", 10, 8)
+    rng = np.random.default_rng(seed)
+    d, p, stripe = _stripe(code, rng)
+    i, j = rng.choice(10, size=2, replace=False)
+    avail = {x: stripe[x] for x in range(10) if x not in (i, j)}
+    rec = code.decode(avail, [int(i), int(j)], C)
+    assert np.array_equal(rec[int(i)], stripe[i])
+    assert np.array_equal(rec[int(j)], stripe[j])
+
+
+@given(st.integers(0, 2**31), st.integers(0, 7))
+@settings(max_examples=15, deadline=None)
+def test_rdp_delta_equals_reencode(seed, idx):
+    code = make_code("rdp", 10, 8)
+    rng = np.random.default_rng(seed)
+    d, p, _ = _stripe(code, rng)
+    new = d.copy()
+    new[idx, 5:37] = rng.integers(0, 256, 32, dtype=np.uint8)
+    delta = code.parity_delta(idx, d[idx], new[idx])
+    assert np.array_equal(p ^ delta, code.encode(new))
+
+
+def test_xor_code(rng):
+    code = XORCode(n=9, k=8)
+    d, p, stripe = _stripe(code, rng)
+    rec = code.decode({i: stripe[i] for i in range(9) if i != 3}, [3], C)
+    assert np.array_equal(rec[3], d[3])
+    delta = code.parity_delta(2, d[2], d[2] ^ 0xFF)
+    new = d.copy()
+    new[2] = d[2] ^ 0xFF
+    assert np.array_equal(p ^ delta, code.encode(new))
+
+
+def test_nocode(rng):
+    code = NoCode(n=10)
+    d = rng.integers(0, 256, (10, C), dtype=np.uint8)
+    assert code.encode(d).shape == (0, C)
+    with pytest.raises(ValueError):
+        code.decode({i: d[i] for i in range(9)}, [9], C)
+
+
+def test_beyond_tolerance_raises(rng):
+    code = RSCode(n=10, k=8)
+    d, p, stripe = _stripe(code, rng)
+    avail = {i: stripe[i] for i in range(7)}  # only 7 < k
+    with pytest.raises(ValueError):
+        code.decode(avail, [8], C)
+
+
+def test_make_code_dispatch():
+    assert isinstance(make_code("rs", 10, 8), RSCode)
+    assert isinstance(make_code("rdp", 10, 8), RDPCode)
+    assert isinstance(make_code("xor", 9, 8), XORCode)
+    assert isinstance(make_code("none", 10, 10), NoCode)
+    with pytest.raises(ValueError):
+        make_code("zfec", 10, 8)

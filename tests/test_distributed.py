@@ -1,0 +1,314 @@
+"""Distributed layer: EC state store (subprocess with a multi-device mesh),
+elastic fleet monitor, sharding rules, analysis formulas."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from conftest import subprocess_env
+
+
+def run_sub(code: str, devices: int = 12) -> subprocess.CompletedProcess:
+    env = subprocess_env()
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, timeout=600,
+                          env=env)
+
+
+@pytest.mark.slow
+def test_ecstore_encode_delta_reconstruct_vs_oracle():
+    """Distributed parity (rotational stripe lists over the data axis)
+    matches the RS oracle; reconstruction recovers a zeroed device."""
+    p = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        import jax.sharding as jshard
+        from repro.distributed._compat import shard_map
+        from repro.distributed.ecstore import (ECConfig, parity_delta_update,
+                                               reconstruct_failed, encode_parity)
+        from repro.core.codes import RSCode
+        mesh = jax.make_mesh((12, 1), ("data", "model"),
+                             axis_types=(jshard.AxisType.Auto,)*2)
+        from jax.sharding import PartitionSpec as P
+        cfg = ECConfig(k=8, m=2, page_size=64)
+        A, Pn = 12, 16
+        rng = np.random.default_rng(0)
+        state = rng.integers(0, 256, (A, 1, Pn, cfg.page_size), dtype=np.uint8)
+        sspec = P("data", "model", None, None)
+        pspec = P("data", "model", None, None, None)
+        wrap = lambda f, i, o: shard_map(f, mesh=mesh, in_specs=i, out_specs=o,
+                                         check_rep=False)
+        def enc(pages):
+            def f(pg):
+                out = encode_parity(pg.reshape(pg.shape[2:]), cfg)
+                return out.reshape((1, 1) + out.shape)
+            return wrap(f, (sspec,), pspec)(pages)
+        with mesh:
+            parity = np.asarray(jax.jit(enc)(jnp.asarray(state)))
+        code = RSCode(n=10, k=8)
+        def oracle():
+            out = np.zeros((A, 1, cfg.m, Pn // cfg.k, cfg.page_size), np.uint8)
+            for l in range(A):
+                for s in range(Pn // cfg.k):
+                    data = np.stack([state[(l + j) % A, 0, s * cfg.k + j]
+                                     for j in range(cfg.k)])
+                    par = code.encode(data)
+                    for r in range(cfg.m):
+                        out[(l + cfg.k + r) % A, 0, r, s] = par[r]
+            return out
+        assert np.array_equal(parity, oracle()), "encode"
+        new = state.copy()
+        new[3, 0, 5] ^= rng.integers(0, 256, cfg.page_size, dtype=np.uint8)
+        xor = state ^ new
+        def upd(xp, par):
+            def f(x, p):
+                out = parity_delta_update(x.reshape(x.shape[2:]),
+                                          p.reshape(p.shape[2:]), cfg)
+                return out.reshape((1, 1) + out.shape)
+            return wrap(f, (sspec, pspec), pspec)(xp, par)
+        with mesh:
+            parity2 = np.asarray(jax.jit(upd)(jnp.asarray(xor),
+                                              jnp.asarray(parity)))
+        state = new
+        assert np.array_equal(parity2, oracle()), "delta"
+        # systolic chain variant (§Perf C1) is byte-exact vs direct
+        from repro.distributed.ecstore import parity_delta_update_chain
+        def upd_chain(xp, par):
+            def f(x, p):
+                out = parity_delta_update_chain(x.reshape(x.shape[2:]),
+                                                p.reshape(p.shape[2:]), cfg)
+                return out.reshape((1, 1) + out.shape)
+            return wrap(f, (sspec, pspec), pspec)(xp, par)
+        with mesh:
+            parity2c = np.asarray(jax.jit(upd_chain)(jnp.asarray(xor),
+                                                     jnp.asarray(parity)))
+        assert np.array_equal(parity2c, parity2), "chain variant"
+        def rec(pages, par):
+            def f(pg, p):
+                out = reconstruct_failed(pg.reshape(pg.shape[2:]),
+                                         p.reshape(p.shape[2:]),
+                                         jnp.int32(3), cfg)
+                return out.reshape((1, 1) + out.shape)
+            return wrap(f, (sspec, pspec), sspec)(pages, par)
+        holed = state.copy(); holed[3] = 0
+        with mesh:
+            got = np.asarray(jax.jit(rec)(jnp.asarray(holed),
+                                          jnp.asarray(parity2)))
+        assert np.array_equal(got[0, 0], state[3, 0]), "reconstruct"
+        # double failure: both pages AND parity of the failed pair lost
+        from repro.distributed.ecstore import reconstruct_failed_pair
+        def recpair(f1, f2):
+            def g(pages, par):
+                def f(pg, p):
+                    out = reconstruct_failed_pair(
+                        pg.reshape(pg.shape[2:]), p.reshape(p.shape[2:]),
+                        f1, f2, A, cfg)
+                    return out.reshape((1, 1) + out.shape)
+                return wrap(f, (sspec, pspec), sspec)(pages, par)
+            return g
+        for f1, f2 in [(3, 7), (2, 3), (0, 11)]:
+            holed2 = state.copy(); holed2[f1] = 0; holed2[f2] = 0
+            parz = parity2.copy(); parz[f1] = 0; parz[f2] = 0
+            with mesh:
+                r1 = np.asarray(jax.jit(recpair(f1, f2))(
+                    jnp.asarray(holed2), jnp.asarray(parz)))
+                r2 = np.asarray(jax.jit(recpair(f2, f1))(
+                    jnp.asarray(holed2), jnp.asarray(parz)))
+            assert np.array_equal(r1[0, 0], state[f1, 0]), (f1, f2)
+            assert np.array_equal(r2[0, 0], state[f2, 0]), (f2, f1)
+        print("ECSTORE_OK")
+    """)
+    assert "ECSTORE_OK" in p.stdout, p.stderr[-2000:]
+
+
+@pytest.mark.slow
+def test_ec_checkpoint_protects_training_state():
+    """Train a few steps with per-step EC parity maintenance; reconstruct
+    a lost data-axis shard and verify it matches the live state bytes."""
+    p = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        import jax.sharding as jshard
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_reduced
+        from repro.models import Model
+        from repro.distributed import sharding as shd
+        from repro.distributed.ecstore import ECConfig, ECStateStore
+        from repro.train.optimizer import make_optimizer
+        from repro.train.train_step import make_train_step
+        from repro.data.pipeline import DataConfig, SyntheticLM
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jshard.AxisType.Auto,)*2)
+        cfg = get_reduced("starcoder2-3b")
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        pspecs = shd.param_specs(cfg, jax.eval_shape(lambda: params), mesh)
+        store = ECStateStore(mesh, pspecs, ECConfig(k=2, m=1, page_size=256))
+        opt = make_optimizer("adamw", lr=1e-3, total_steps=10)
+        opt_state = opt.init(params)
+        data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                      global_batch=4))
+        step = jax.jit(make_train_step(model, opt))
+        with mesh:
+            parity = store.encode(params)
+            for i in range(3):
+                old = params
+                params, opt_state, m = step(params, opt_state, data.batch(i))
+                parity = store.delta_update(old, params, parity)
+            pages = store.local_pages(params)
+            rec = store.reconstruct(params, parity, failed_index=1)
+        pages = np.asarray(pages)
+        rec = np.asarray(rec)
+        # reconstruction of data-axis position 1 (any model column)
+        assert np.array_equal(rec[0, 0], pages[1, 0]), "model col 0"
+        assert np.array_equal(rec[0, 1], pages[1, 1]), "model col 1"
+        print("ECCKPT_OK")
+    """, devices=8)
+    assert "ECCKPT_OK" in p.stdout, p.stderr[-2000:]
+
+
+class TestElastic:
+    def test_heartbeat_miss_degrades(self):
+        from repro.distributed.elastic import ElasticConfig, FleetMonitor
+        from repro.core.coordinator import ServerState
+        mon = FleetMonitor(4, ElasticConfig(heartbeat_interval=1.0,
+                                            miss_threshold=3))
+        for t in range(3):
+            for h in range(4):
+                mon.heartbeat(h, float(t))
+        # host 2 goes silent
+        for t in range(3, 8):
+            for h in (0, 1, 3):
+                mon.heartbeat(h, float(t))
+        plan = mon.check(8.0)
+        assert plan.kind == "reconstruct"
+        assert plan.failed_hosts == [2]
+        assert mon.states()[2] == ServerState.DEGRADED
+
+    def test_straggler_detection(self):
+        from repro.distributed.elastic import ElasticConfig, FleetMonitor
+        mon = FleetMonitor(4, ElasticConfig(straggler_factor=2.0))
+        for t in range(10):
+            for h in range(4):
+                mon.heartbeat(h, float(t))
+                mon.report_step_time(h, 1.0 if h != 3 else 5.0)
+        plan = mon.check(10.0)
+        assert plan.kind == "reconstruct"
+        assert 3 in plan.failed_hosts
+
+    def test_restore_path(self):
+        from repro.distributed.elastic import FleetMonitor
+        from repro.core.coordinator import ServerState
+        mon = FleetMonitor(3)
+        for h in range(3):
+            mon.heartbeat(h, 0.0)
+        plan = mon.check(100.0)   # everyone missed -> rescale advice
+        assert plan.kind == "rescale"
+        mon.restore(0, 101.0)
+        assert mon.states()[0] == ServerState.COORDINATED_NORMAL
+        mon.migration_done(0, 102.0)
+        assert mon.states()[0] == ServerState.NORMAL
+
+    def test_below_min_hosts_requires_disk(self):
+        from repro.distributed.elastic import ElasticConfig, FleetMonitor
+        mon = FleetMonitor(2, ElasticConfig(min_hosts=2))
+        mon.heartbeat(0, 0.0)
+        mon.heartbeat(1, 0.0)
+        plan = mon.check(50.0)
+        assert plan.kind == "rescale"
+
+
+class TestShardingRules:
+    def test_param_specs_cover_all_archs(self):
+        import jax
+        import jax.sharding as jshard
+        from repro.configs import ARCH_NAMES, get_reduced
+        from repro.distributed import sharding as shd
+        from repro.models import Model
+        mesh = jax.make_mesh((1, 1), ("data", "model"),
+                             axis_types=(jshard.AxisType.Auto,) * 2)
+        for arch in ARCH_NAMES:
+            cfg = get_reduced(arch)
+            shapes = jax.eval_shape(Model(cfg).init, jax.random.PRNGKey(0))
+            specs = shd.param_specs(cfg, shapes, mesh)
+            n_spec = len(jax.tree.leaves(
+                specs, is_leaf=lambda x: hasattr(x, "_normalized_spec") or
+                x.__class__.__name__ == "PartitionSpec"))
+            n_leaf = len(jax.tree.leaves(shapes))
+            assert n_spec == n_leaf, arch
+
+    def test_fit_spec_demotes_indivisible(self):
+        from jax.sharding import AbstractMesh, PartitionSpec as P
+        from repro.distributed.sharding import fit_spec
+        mesh = AbstractMesh((4, 2), ("data", "model"))
+        assert fit_spec(P("data", "model"), (8, 6), mesh) == P("data", "model")
+        assert fit_spec(P("data", "model"), (7, 6), mesh) == P(None, "model")
+        # unknown axis ("pod") dropped; remaining must divide
+        assert fit_spec(P(("pod", "data"), None), (4, 3), mesh) == \
+            P(("data",), None)
+
+
+class TestAnalysis:
+    def test_figure2_paper_claims(self):
+        """Paper §3.3: K=8, V<10, (10,8): AllRep 4.1-4.8x, Hybrid 3.3-4.7x,
+        AllEnc 1.7-1.9x (up to 60% / 58.9% reduction)."""
+        from repro.core.analysis import (AnalysisParams,
+                                         redundancy_all_encoding,
+                                         redundancy_all_replication,
+                                         redundancy_hybrid_encoding)
+        for V in range(2, 10):
+            p = AnalysisParams(K=8, V=V, n=10, k=8)
+            ar = redundancy_all_replication(p)
+            hy = redundancy_hybrid_encoding(p)
+            ae = redundancy_all_encoding(p)
+            assert 4.1 <= ar <= 4.81, (V, ar)
+            assert 3.3 <= hy <= 4.71, (V, hy)
+            assert 1.65 <= ae <= 1.91, (V, ae)  # 1.678@V=9 rounds to "1.7"
+        # max reductions quoted by the paper
+        p2 = AnalysisParams(K=8, V=2, n=10, k=8)
+        red_ar = 1 - redundancy_all_encoding(p2) / redundancy_all_replication(p2)
+        red_hy = 1 - redundancy_all_encoding(p2) / redundancy_hybrid_encoding(p2)
+        assert red_ar == pytest.approx(0.60, abs=0.02)
+        assert red_hy == pytest.approx(0.589, abs=0.02)
+
+    def test_crossover_V180(self):
+        """Paper: all-encoding < 1.3x for V>=180; hybrid needs V>=890."""
+        from repro.core.analysis import crossover_value
+        v_ae = crossover_value(8, (10, 8), 1.3, "all-encoding")
+        v_hy = crossover_value(8, (10, 8), 1.3, "hybrid-encoding")
+        assert 150 <= v_ae <= 200, v_ae
+        assert 850 <= v_hy <= 930, v_hy
+
+
+@pytest.mark.slow
+def test_dryrun_cell_compiles():
+    """Deliverable (e) guard: one full-config cell lowers + compiles on the
+    production mesh machinery (16 virtual devices for CI speed)."""
+    p = run_sub("""
+        import os
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        import jax.sharding as jshard
+        mesh = jax.make_mesh((4, 4), ("data", "model"),
+                             axis_types=(jshard.AxisType.Auto,) * 2)
+        from repro.launch.dryrun import build_cell, collective_bytes
+        built, why = build_cell("starcoder2-3b", "decode_32k", mesh)
+        assert built is not None, why
+        step, args, in_sh, out_sh, meta = built
+        to_named = lambda t: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), t,
+            is_leaf=lambda x: isinstance(x, P))
+        with mesh:
+            compiled = jax.jit(step, in_shardings=to_named(in_sh),
+                               out_shardings=to_named(out_sh)
+                               ).lower(*args).compile()
+        assert compiled.memory_analysis() is not None
+        from repro.launch.hlo_analysis import analyze
+        r = analyze(compiled.as_text())
+        assert r["flops"] > 0 and r["bytes"] > 0
+        print("DRYRUN_CELL_OK")
+    """, devices=16)
+    assert "DRYRUN_CELL_OK" in p.stdout, p.stderr[-2000:]

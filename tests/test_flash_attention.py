@@ -1,0 +1,62 @@
+"""Fused flash-attention Pallas kernel: shape/GQA sweeps vs plain softmax."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+
+
+def oracle(q, k, v, causal=True):
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    kv_idx = np.arange(H) // G
+    ke = k[:, :, kv_idx].transpose(0, 2, 1, 3)
+    ve = v[:, :, kv_idx].transpose(0, 2, 1, 3)
+    qe = q.transpose(0, 2, 1, 3).astype(np.float32)
+    s = np.einsum("bhqd,bhtd->bhqt", qe, ke.astype(np.float32)) / np.sqrt(hd)
+    if causal:
+        mask = np.arange(Sq)[:, None] >= np.arange(k.shape[1])[None, :]
+        s = np.where(mask, s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    o = np.einsum("bhqt,bhtd->bhqd", p, ve.astype(np.float32))
+    return o.transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd,bq,bkv", [
+    (2, 256, 4, 2, 64, 128, 128),
+    (1, 200, 8, 8, 32, 128, 64),     # MHA + ragged seq (padding path)
+    (2, 384, 6, 3, 128, 128, 256),
+    (1, 64, 2, 1, 16, 32, 32),       # MQA
+])
+def test_flash_matches_oracle(B, S, H, KV, hd, bq, bkv, rng):
+    q = rng.standard_normal((B, S, H, hd)).astype(np.float32)
+    k = rng.standard_normal((B, S, KV, hd)).astype(np.float32)
+    v = rng.standard_normal((B, S, KV, hd)).astype(np.float32)
+    got = np.asarray(flash_attention(jnp.asarray(q), jnp.asarray(k),
+                                     jnp.asarray(v), block_q=bq,
+                                     block_kv=bkv))
+    np.testing.assert_allclose(got, oracle(q, k, v), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_non_causal(rng):
+    q = rng.standard_normal((1, 128, 4, 32)).astype(np.float32)
+    k = rng.standard_normal((1, 128, 4, 32)).astype(np.float32)
+    v = rng.standard_normal((1, 128, 4, 32)).astype(np.float32)
+    got = np.asarray(flash_attention(jnp.asarray(q), jnp.asarray(k),
+                                     jnp.asarray(v), causal=False,
+                                     block_q=64, block_kv=64))
+    np.testing.assert_allclose(got, oracle(q, k, v, causal=False),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_bf16(rng):
+    q = rng.standard_normal((1, 128, 4, 64)).astype(np.float32)
+    k = rng.standard_normal((1, 128, 2, 64)).astype(np.float32)
+    v = rng.standard_normal((1, 128, 2, 64)).astype(np.float32)
+    got = np.asarray(flash_attention(
+        jnp.asarray(q, jnp.bfloat16), jnp.asarray(k, jnp.bfloat16),
+        jnp.asarray(v, jnp.bfloat16), block_q=64, block_kv=64)
+    ).astype(np.float32)
+    np.testing.assert_allclose(got, oracle(q, k, v), atol=0.05, rtol=0.05)

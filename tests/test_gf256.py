@@ -1,0 +1,74 @@
+"""GF(2^8) arithmetic: field axioms + bit-plane lift correctness."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gf256
+
+byte = st.integers(0, 255)
+
+
+@given(byte, byte, byte)
+@settings(max_examples=50, deadline=None)
+def test_field_axioms(a, b, c):
+    mul = lambda x, y: int(gf256.MUL_TABLE[x, y])
+    # commutativity / associativity
+    assert mul(a, b) == mul(b, a)
+    assert mul(a, mul(b, c)) == mul(mul(a, b), c)
+    # distributivity over XOR (field addition)
+    assert mul(a, b ^ c) == mul(a, b) ^ mul(a, c)
+    # identities
+    assert mul(a, 1) == a
+    assert mul(a, 0) == 0
+
+
+@given(st.integers(1, 255))
+@settings(max_examples=50, deadline=None)
+def test_inverse(a):
+    inv = gf256.gf_inv_np(a)
+    assert int(gf256.MUL_TABLE[a, inv]) == 1
+
+
+def test_inverse_of_zero_raises():
+    with pytest.raises(ZeroDivisionError):
+        gf256.gf_inv_np(0)
+
+
+@given(byte, byte)
+@settings(max_examples=30, deadline=None)
+def test_mul_matrix_lift(c, x):
+    """Multiplication by c == its 8x8 GF(2) matrix acting on bit vectors."""
+    M = gf256.gf_mul_matrix(c)
+    bits = np.array([(x >> i) & 1 for i in range(8)], dtype=np.uint8)
+    out_bits = (M @ bits) % 2
+    out = int(sum(int(b) << i for i, b in enumerate(out_bits)))
+    assert out == int(gf256.MUL_TABLE[c, x])
+
+
+def test_matrix_inverse_roundtrip(rng):
+    for _ in range(5):
+        while True:
+            M = rng.integers(0, 256, (6, 6), dtype=np.uint8)
+            try:
+                Minv = gf256.gf_mat_inv(M)
+                break
+            except np.linalg.LinAlgError:
+                continue
+        I = gf256.gf_matmul_np(M, Minv)
+        assert np.array_equal(I, np.eye(6, dtype=np.uint8))
+
+
+def test_device_tables_agree(rng):
+    import jax.numpy as jnp
+    a = rng.integers(0, 256, 128, dtype=np.uint8)
+    b = rng.integers(0, 256, 128, dtype=np.uint8)
+    dev = np.asarray(gf256.gf_mul(jnp.asarray(a), jnp.asarray(b)))
+    assert np.array_equal(dev, gf256.gf_mul_np(a, b))
+
+
+def test_bytes_view_roundtrip(rng):
+    import jax.numpy as jnp
+    x = jnp.asarray(rng.standard_normal((4, 6)).astype(np.float32))
+    b = gf256.bytes_view(x)
+    y = gf256.from_bytes_view(b, jnp.float32, (4, 6))
+    assert np.array_equal(np.asarray(x), np.asarray(y))

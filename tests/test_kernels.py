@@ -1,0 +1,107 @@
+"""Pallas kernels: shape/dtype sweeps vs the pure-jnp oracle (ref.py) and
+the numpy host data plane.  Interpret mode on CPU."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.codes import RSCode
+from repro.core.index import CuckooIndex
+from repro.kernels import ops
+from repro.kernels.gf256_matmul import build_apow, gf256_matmul
+from repro.kernels.delta_update import delta_update
+from repro.kernels import ref as kref
+
+
+@pytest.mark.parametrize("m,k", [(2, 8), (4, 10), (1, 4), (8, 8)])
+@pytest.mark.parametrize("C", [128, 1000, 4096, 5000])
+def test_gf256_matmul_shapes(m, k, C, rng):
+    A = rng.integers(0, 256, (m, k), dtype=np.uint8)
+    D = rng.integers(0, 256, (k, C), dtype=np.uint8)
+    got = np.asarray(gf256_matmul(A, jnp.asarray(D)))
+    want = np.asarray(kref.gf256_matmul_ref(jnp.asarray(A), jnp.asarray(D)))
+    assert np.array_equal(got, want)
+    from repro.core.gf256 import gf_matmul_np
+    assert np.array_equal(got, gf_matmul_np(A, D))
+
+
+@given(st.integers(0, 2**31), st.sampled_from([64, 256, 2048]),
+       st.sampled_from([256, 512, 4096]))
+@settings(max_examples=10, deadline=None)
+def test_gf256_matmul_block_sizes(seed, block_c, C):
+    rng = np.random.default_rng(seed)
+    A = rng.integers(0, 256, (2, 8), dtype=np.uint8)
+    D = rng.integers(0, 256, (8, C), dtype=np.uint8)
+    got = np.asarray(gf256_matmul(A, jnp.asarray(D), block_c=block_c))
+    from repro.core.gf256 import gf_matmul_np
+    assert np.array_equal(got, gf_matmul_np(A, D))
+
+
+@pytest.mark.parametrize("m,C", [(2, 4096), (4, 1000), (1, 128)])
+def test_delta_update_kernel(m, C, rng):
+    parity = rng.integers(0, 256, (m, C), dtype=np.uint8)
+    old = rng.integers(0, 256, C, dtype=np.uint8)
+    new = rng.integers(0, 256, C, dtype=np.uint8)
+    gammas = rng.integers(0, 256, m, dtype=np.uint8)
+    got = np.asarray(delta_update(jnp.asarray(parity),
+                                  jnp.asarray(gammas.astype(np.int32)),
+                                  jnp.asarray(old), jnp.asarray(new)))
+    want = np.asarray(kref.delta_update_ref(
+        jnp.asarray(parity), jnp.asarray(gammas), jnp.asarray(old),
+        jnp.asarray(new)))
+    assert np.array_equal(got, want)
+
+
+def test_encode_decode_stripe_via_kernels(rng):
+    code = RSCode(n=10, k=8)
+    data = rng.integers(0, 256, (8, 4096), dtype=np.uint8)
+    par = np.asarray(ops.encode_stripe(code, jnp.asarray(data)))
+    assert np.array_equal(par, code.encode(data))
+    stripe = np.concatenate([data, par])
+    avail = {i: jnp.asarray(stripe[i]) for i in range(10) if i not in (0, 5)}
+    rec = ops.decode_stripe(code, avail, [0, 5], 4096)
+    assert np.array_equal(np.asarray(rec[0]), stripe[0])
+    assert np.array_equal(np.asarray(rec[5]), stripe[5])
+
+
+def test_apply_parity_delta_matches_host(rng):
+    code = RSCode(n=10, k=8)
+    data = rng.integers(0, 256, (8, 4096), dtype=np.uint8)
+    par = code.encode(data)
+    new3 = data[3].copy()
+    new3[10:200] = rng.integers(0, 256, 190, dtype=np.uint8)
+    got = np.asarray(ops.apply_parity_delta(
+        code, jnp.asarray(par), 3, jnp.asarray(data[3]), jnp.asarray(new3)))
+    d2 = data.copy()
+    d2[3] = new3
+    assert np.array_equal(got, code.encode(d2))
+
+
+@pytest.mark.parametrize("nbuckets,n_keys", [(64, 100), (256, 800)])
+def test_cuckoo_lookup_kernel(nbuckets, n_keys, rng):
+    idx = CuckooIndex(num_buckets=nbuckets)
+    keys = [b"obj%06d" % i for i in range(n_keys)]
+    for i, k in enumerate(keys):
+        idx.insert(k, i)
+    probe = keys[::3] + [b"nope%04d" % i for i in range(40)]
+    fk, sk = ops.batched_index_lookup(idx, probe)
+    fr, sr = ops.batched_index_lookup(idx, probe, use_ref=True)
+    fk, sk, fr, sr = map(np.asarray, (fk, sk, fr, sr))
+    assert np.array_equal(fk, fr) and np.array_equal(sk, sr)
+    expect = np.array([k in idx for k in probe])
+    assert np.array_equal(fk, expect)
+    for k, f, s in zip(probe, fk, sk):
+        if f:
+            b, sl = divmod(int(s), 4)
+            assert idx.slot_data[(b, sl)][0] == k
+
+
+def test_apow_table():
+    from repro.core.gf256 import MUL_TABLE
+    A = np.array([[3, 7], [11, 200]], dtype=np.uint8)
+    ap = build_apow(A)
+    assert ap.shape == (2, 2, 8)
+    for r in range(2):
+        for i in range(2):
+            for b in range(8):
+                assert ap[r, i, b] == MUL_TABLE[A[r, i], 1 << b]

@@ -1,0 +1,89 @@
+"""End-to-end system behaviour: YCSB workloads over MemEC + baselines,
+mirroring the paper's §7 evaluation setup at reduced scale."""
+import numpy as np
+import pytest
+
+from repro.core import (AllReplicationCluster, HybridEncodingCluster,
+                        MemECCluster)
+from repro.data.ycsb import WORKLOADS, YCSBConfig, YCSBWorkload, run_workload
+
+
+def test_ycsb_zipf_skew():
+    cfg = YCSBConfig(num_objects=5000, seed=1)
+    w = YCSBWorkload(cfg)
+    ids = w.zipf.sample(20000)
+    top = np.bincount(ids, minlength=cfg.num_objects)
+    # zipf(0.99): the hottest key takes a few % of traffic
+    assert top.max() / len(ids) > 0.02
+    assert (ids < cfg.num_objects).all() and (ids >= 0).all()
+
+
+def test_ycsb_mixes():
+    assert WORKLOADS["A"] == {"get": 0.5, "update": 0.5}
+    assert WORKLOADS["C"] == {"get": 1.0}
+    w = YCSBWorkload(YCSBConfig(num_objects=100, seed=2))
+    kinds = [k for k, _, _ in w.run_ops("B", 1000)]
+    get_frac = kinds.count("get") / len(kinds)
+    assert 0.9 < get_frac <= 1.0
+
+
+@pytest.mark.parametrize("factory", [
+    lambda: MemECCluster(num_servers=16, scheme="rs", n=10, k=8,
+                         chunk_size=512, max_unsealed=2),
+    lambda: AllReplicationCluster(num_servers=16, n=10, k=8),
+    lambda: HybridEncodingCluster(num_servers=16, scheme="rs", n=10, k=8,
+                                  chunk_size=512),
+])
+def test_workload_a_on_all_data_models(factory):
+    cl = factory()
+    cfg = YCSBConfig(num_objects=1200)
+    run_workload(cl, "load", 0, cfg)
+    ops, w = run_workload(cl, "A", 1500, cfg)
+    assert ops == 1500
+    # spot-check consistency: a value of the right size is served
+    probe = YCSBWorkload(cfg)
+    for i in (0, 1, 7, 42):
+        v = cl.get(probe.key(i))
+        assert v is not None and len(v) == probe.value_size(i)
+
+
+def test_degraded_workload_end_to_end():
+    """Exp 4 analogue: run A, fail a server mid-workload, finish, restore."""
+    cl = MemECCluster(num_servers=16, scheme="rs", n=10, k=8,
+                      chunk_size=512, max_unsealed=2)
+    cfg = YCSBConfig(num_objects=1500)
+    run_workload(cl, "load", 0, cfg)
+    run_workload(cl, "A", 600, cfg)
+    cl.fail_server(4)
+    run_workload(cl, "A", 600, cfg)
+    assert cl.stats["degraded_requests"] > 0
+    cl.restore_server(4)
+    run_workload(cl, "C", 400, cfg)
+    assert cl.net.latencies["GET"]
+    deg = (cl.net.latencies.get("GET_DEG") or
+           cl.net.latencies.get("UPDATE_DEG"))
+    assert deg
+
+
+def test_hybrid_degraded_read():
+    cl = HybridEncodingCluster(num_servers=16, scheme="rs", n=10, k=8,
+                               chunk_size=512)
+    cfg = YCSBConfig(num_objects=800)
+    run_workload(cl, "load", 0, cfg)
+    w = YCSBWorkload(cfg)
+    sl, ds = cl.mapper.data_server_for(w.key(5))
+    cl.fail_server(ds)
+    v = cl.get(w.key(5))
+    assert v == w.value(5)
+    cl.restore_server(ds)
+
+
+def test_allrep_survives_failures():
+    cl = AllReplicationCluster(num_servers=16, n=10, k=8)
+    cfg = YCSBConfig(num_objects=500)
+    run_workload(cl, "load", 0, cfg)
+    w = YCSBWorkload(cfg)
+    cl.fail_server(0)
+    cl.fail_server(1)
+    for i in range(0, 100, 7):
+        assert cl.get(w.key(i)) == w.value(i)
