@@ -27,13 +27,23 @@ def make_hybrid(**kw):
     return HybridEncodingCluster(num_servers=16, scheme="rs", n=10, k=8, **kw)
 
 
-def timed_workload(cluster, workload: str, num_ops: int, cfg: YCSBConfig):
+def timed_workload(cluster, workload: str, num_ops: int, cfg: YCSBConfig,
+                   batch_size: int = 1):
     """Run a workload; return (wall_s, ops, modeled stats snapshot)."""
     cluster.net.reset() if hasattr(cluster.net, "reset") else None
     t0 = time.perf_counter()
-    ops, _ = run_workload(cluster, workload, num_ops, cfg)
+    ops, _ = run_workload(cluster, workload, num_ops, cfg,
+                          batch_size=batch_size)
     wall = time.perf_counter() - t0
     return wall, ops
+
+
+def modeled_seq_kops(cluster, ops: int) -> float:
+    """Sequential-client throughput: ops over total modeled request time.
+    Bandwidth-based `modeled_kops` is invariant to batching (same bytes);
+    this metric shows the phase-amortization win of multi-key requests."""
+    total_s = sum(sum(v) for v in cluster.net.latencies.values())
+    return ops / total_s / 1e3 if total_s > 0 else float("nan")
 
 
 def server_endpoints(num_servers=16):

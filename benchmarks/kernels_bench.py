@@ -6,6 +6,7 @@ encode reads k*C + writes m*C bytes; delta reads 3C + writes C per row.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -19,19 +20,21 @@ from .common import emit
 
 
 def timeit(fn, *args, reps=5):
-    fn(*args)  # warmup/compile
+    jax.block_until_ready(fn(*args))  # warmup/compile
     t0 = time.perf_counter()
     for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
+        # block EVERY rep: jax dispatch is async, so timing only the loop
+        # and syncing once at the end measures enqueue cost, not the op
+        jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / reps * 1e6  # us
 
 
 def run():
     print("# kernel micro-benchmarks (CPU; interpret-mode Pallas)")
+    fast = bool(os.environ.get("MEMEC_BENCH_FAST"))  # verify.sh smoke mode
     rng = np.random.default_rng(0)
     code = RSCode(n=10, k=8)
-    for C in (4096, 65536):
+    for C in (4096,) if fast else (4096, 65536):
         data = jnp.asarray(rng.integers(0, 256, (8, C), dtype=np.uint8))
         us_k = timeit(lambda d: ops.encode_stripe(code, d), data)
         us_r = timeit(lambda d: ops.encode_stripe(code, d, use_ref=True), data)
@@ -61,6 +64,18 @@ def run():
     emit("cuckoo.pallas.q2000", us_c, f"{len(probe)} probes/call")
     us_cr = timeit(lambda: ops.batched_index_lookup(idx, probe, use_ref=True))
     emit("cuckoo.ref.q2000", us_cr, f"{len(probe)} probes/call")
+
+    # CodingEngine backends: per-stripe cost amortization with batching
+    from repro.core.engine import make_engine
+    C = 4096
+    engines = ("numpy", "jax") if fast else ("numpy", "jax", "pallas")
+    for name in engines:
+        eng = make_engine(name, code)
+        for B in (1, 16):
+            data = rng.integers(0, 256, (B, 8, C), dtype=np.uint8)
+            us = timeit(eng.encode_batch, data, reps=3)
+            emit(f"engine.{name}.encode.B{B}", us,
+                 f"{B * (8 + 2) * C}B/call {us / B:.1f}us/stripe")
 
 
 if __name__ == "__main__":

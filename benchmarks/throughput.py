@@ -8,13 +8,16 @@ wall-clock of the simulation is also emitted for reference.
 """
 from __future__ import annotations
 
+import os
+
 from repro.data.ycsb import YCSBConfig
 
 from .common import (cluster_metrics, emit, make_allrep, make_hybrid,
-                     make_memec, timed_workload)
+                     make_memec, modeled_seq_kops, timed_workload)
 
 N_OBJECTS = 4000
 N_OPS = 6000
+BATCH_SIZES = (1, 8, 32)
 
 
 def run():
@@ -40,6 +43,36 @@ def run():
             p95 = m.get("p95_GET_ms", float("nan"))
             print(f"{name},{wl},{m['modeled_kops']:.1f},{p95:.3f},{wall:.2f}")
     emit("exp1.done", 0.0, "see rows above")
+    run_batched_sweep()
+
+
+def run_batched_sweep():
+    """Batch-size x engine-backend sweep over the multi-key client API.
+
+    `seq_kops` (ops over summed modeled request latency) is the metric
+    that exposes batching: a batch's fan-out legs share phases, so
+    batched ops/sec must come out >= the unbatched row.  `modeled_kops`
+    (bandwidth-bound) stays flat by construction — same bytes on the
+    wire.  Extra engine backends via MEMEC_BENCH_ENGINES=numpy,jax,pallas
+    (device backends are interpret-mode-slow on CPU wall-clock; modeled
+    numbers are the comparison that matters there).
+    """
+    print("\n# Batched multi-key sweep — engine x batch_size (modeled)")
+    print("engine,batch,phase,seq_kops,modeled_kops,wall_s")
+    engines = os.environ.get("MEMEC_BENCH_ENGINES", "numpy").split(",")
+    n_obj, n_ops = 2000, 3000
+    cfg = YCSBConfig(num_objects=n_obj)
+    for engine in engines:
+        for batch in BATCH_SIZES:
+            cl = make_memec(scheme="rs", engine=engine)
+            wall, ops = timed_workload(cl, "load", 0, cfg, batch_size=batch)
+            print(f"{engine},{batch},load,{modeled_seq_kops(cl, ops):.1f},"
+                  f"{cluster_metrics(cl, ops)['modeled_kops']:.1f},{wall:.2f}")
+            cl.net.reset()
+            wall, ops = timed_workload(cl, "A", n_ops, cfg, batch_size=batch)
+            print(f"{engine},{batch},A,{modeled_seq_kops(cl, ops):.1f},"
+                  f"{cluster_metrics(cl, ops)['modeled_kops']:.1f},{wall:.2f}")
+    emit("batched_sweep.done", 0.0, "see rows above")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Local verification: tier-1 tests + a short kernel-benchmark smoke so perf
+# regressions (e.g. a kernel silently falling back to per-call dispatch)
+# are caught before review.
+#
+#   scripts/verify.sh            # tier-1 (known-green set) + bench smoke
+#   FULL=1 scripts/verify.sh     # include known jax-version-broken modules
+#   SKIP_BENCH=1 scripts/verify.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# test_distributed / test_hlo_analysis / test_train_serve carry
+# pre-existing failures from jax API drift (jax.sharding.AxisType,
+# cost_analysis() shape) unrelated to the coding core; exclude them by
+# default so the script is a usable regression gate.
+DESELECT=(--ignore=tests/test_distributed.py
+          --ignore=tests/test_hlo_analysis.py
+          --ignore=tests/test_train_serve.py)
+if [ -n "${FULL:-}" ]; then
+    DESELECT=()
+fi
+
+python -m pytest -x -q "${DESELECT[@]}"
+
+if [ -z "${SKIP_BENCH:-}" ]; then
+    # MEMEC_BENCH_FAST trims the sweep to the ~10-second smoke variant
+    MEMEC_BENCH_FAST=1 timeout 120 python -m benchmarks.run --only kernels_bench
+fi
+echo "verify: OK"

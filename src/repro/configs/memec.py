@@ -19,6 +19,12 @@ class MemECConfig:
     max_unsealed: int = 4
     key_size: int = 24
     value_sizes: tuple = (8, 32)
+    # batched coding-engine backend: numpy | jax | pallas (see
+    # core/engine.py).  None defers to $MEMEC_ENGINE, default numpy.
+    engine: str | None = None
+    # multi-key request batch size for the batched client API / YCSB
+    # driver (1 = classic per-key requests)
+    batch_size: int = 1
 
 
 CONFIG = MemECConfig()

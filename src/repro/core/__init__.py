@@ -3,11 +3,18 @@
 Layers:
 * gf256 / codes — GF(2^8) arithmetic + RS/RDP/XOR erasure codes with
   delta-based parity updates (paper §2);
+* engine — the unified batched coding data plane: one `CodingEngine`
+  interface (encode_batch / decode_batch / apply_delta_batch) with
+  pluggable numpy / jax / pallas backends, shared by servers, the
+  cluster's batched request paths, and batched recovery.  Backend
+  selection: the `engine=` constructor knob (configs/memec.py) or the
+  `MEMEC_ENGINE` env var;
 * chunk / index / stripe — the all-encoding data model: 4KB chunk packing,
   cuckoo-hash object & chunk indexes, write-balanced stripe lists (§3, §4.3);
 * server / proxy / coordinator / store — the cluster: decentralized
-  normal-mode requests, coordinated degraded mode, server states, backups,
-  migration (§4, §5);
+  normal-mode requests (single-key and batched multi_get/multi_set/
+  multi_update), coordinated degraded mode, server states, backups,
+  one-shot batched recovery, migration (§4, §5);
 * baselines — all-replication + hybrid-encoding comparison stores (§3.1);
 * analysis — the redundancy formulas of §3.3 (Figure 2).
 """
@@ -17,6 +24,8 @@ from .baselines import AllReplicationCluster, HybridEncodingCluster
 from .chunk import CHUNK_SIZE, ChunkBuilder, ChunkId, ObjectRef
 from .codes import Code, NoCode, RDPCode, RSCode, XORCode, make_code
 from .coordinator import Coordinator, ServerState
+from .engine import (CodingEngine, JaxEngine, NumpyEngine, PallasEngine,
+                     make_engine)
 from .index import CuckooIndex
 from .netsim import CostModel, Leg, NetSim
 from .proxy import Proxy
@@ -29,7 +38,8 @@ __all__ = [
     "redundancy_hybrid_encoding", "AllReplicationCluster",
     "HybridEncodingCluster", "CHUNK_SIZE", "ChunkBuilder", "ChunkId",
     "ObjectRef", "Code", "NoCode", "RDPCode", "RSCode", "XORCode",
-    "make_code", "Coordinator", "ServerState", "CostModel", "Leg", "NetSim",
+    "make_code", "CodingEngine", "JaxEngine", "NumpyEngine", "PallasEngine",
+    "make_engine", "Coordinator", "ServerState", "CostModel", "Leg", "NetSim",
     "Proxy", "Server", "MemECCluster", "PartialFailure", "StripeList",
     "StripeMapper", "generate_stripe_lists",
 ]

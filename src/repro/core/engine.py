@@ -1,0 +1,370 @@
+"""Unified batched coding data plane: one pluggable engine, kernels → cluster.
+
+Every layer of the reproduction used to drive coding through one-chunk-at-
+a-time ``codes.Code`` calls while the Pallas kernels sat in benchmarks.
+``CodingEngine`` is the single seam they now share:
+
+    encode_batch((B, k, C))                 -> (B, m, C) parity
+    decode_batch([avail...], [wanted...])   -> [{pos: chunk}, ...]
+    delta_batch((B,), (B, C))               -> (B, m, C) parity deltas
+    apply_delta_batch((B, m, C), ...)       -> (B, m, C) updated parity
+
+Backends (all byte-identical, cross-validated in ``tests/test_engine.py``):
+
+* ``NumpyEngine``  — wraps the ``codes.Code`` classes one item at a time;
+  the reference oracle and the default for the CPU-only simulation.
+* ``JaxEngine``    — pure-jnp batched path (``kernels/ref.py`` idiom).
+* ``PallasEngine`` — batched Pallas grids over ``gf256_matmul`` /
+  ``delta_update`` for dense GF(2^8) codes (RS, XOR); block-structured
+  XOR codes (RDP) reuse the jnp path (their 0/1 block matrix would blow
+  up the unrolled kernel body).
+
+The device backends share a *block-linear representation* of the code: any
+systematic code here (RS, RDP, XOR, none) is GF(2^8)-linear over sub-block
+rows — a chunk is ``r`` sub-blocks (r=1 for RS/XOR, r=p-1 for RDP) and
+encode is one (m*r, k*r) matrix over GF(2^8), probed generically from the
+numpy oracle with basis vectors.  Decode inverts k available chunk-row
+groups of the systematic generator (host-side, cached per erasure
+pattern); deltas are column slices of the encode matrix.
+
+Selection: ``make_engine(name, code)``; ``name=None`` reads the
+``MEMEC_ENGINE`` env var (``numpy`` | ``jax`` | ``pallas``), defaulting to
+``numpy``.  ``configs/memec.py`` carries the same knob for the cluster.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+
+import numpy as np
+
+from . import gf256
+from .codes import Code, RDPCode
+
+
+# ---------------------------------------------------------------------------
+# Block-linear representation (shared by the device backends)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockRep:
+    """A code as one GF(2^8) matrix over sub-block rows.
+
+    ``r`` sub-blocks per chunk; ``encode``: (m*r, k*r) uint8 with
+    parity_blocks = encode ∘ data_blocks, where chunk (C,) reshapes to
+    (r, C//r) sub-block rows.
+    """
+    r: int
+    encode: np.ndarray  # (m*r, k*r) uint8, read-only
+
+    @property
+    def generator(self) -> np.ndarray:
+        """(n*r, k*r) systematic generator [I ; encode]."""
+        kr = self.encode.shape[1]
+        return np.concatenate([np.eye(kr, dtype=np.uint8), self.encode])
+
+
+@functools.lru_cache(maxsize=None)
+def block_rep(code: Code) -> BlockRep:
+    """Probe the numpy oracle with basis vectors to extract the matrix.
+
+    All codes here are XOR-linear maps with GF(2^8) coefficients, so k*r
+    single-byte probes at chunk width r fully determine the encode matrix.
+    """
+    r = (code.p - 1) if isinstance(code, RDPCode) else 1
+    k, m = code.k, code.m
+    E = np.zeros((m * r, k * r), dtype=np.uint8)
+    for j in range(k * r):
+        probe = np.zeros((k, r), dtype=np.uint8)
+        probe[j // r, j % r] = 1
+        E[:, j] = code.encode(probe).reshape(m * r)
+    E.setflags(write=False)
+    return BlockRep(r=r, encode=E)
+
+
+# ---------------------------------------------------------------------------
+# Engine interface
+# ---------------------------------------------------------------------------
+
+class CodingEngine:
+    """Batched encode/decode/delta over a fixed ``Code``.
+
+    All arrays are host numpy uint8 at the interface (the cluster
+    simulation lives on host); device backends convert internally.
+    """
+
+    name = "base"
+
+    def __init__(self, code: Code):
+        self.code = code
+        self.rep = block_rep(code)
+        # decode-matrix cache: erasure patterns recur per failed server
+        self._inv_cache: dict[tuple[int, ...],
+                              tuple[tuple[int, ...], np.ndarray]] = {}
+
+    # -- core batched ops (implemented by backends) ---------------------
+    def encode_batch(self, data: np.ndarray) -> np.ndarray:
+        """(B, k, C) data chunks -> (B, m, C) parity chunks."""
+        raise NotImplementedError
+
+    def decode_batch(self, available, wanted, chunk_size: int) -> list[dict]:
+        """Reconstruct stripe positions for a batch of stripes.
+
+        ``available``: sequence of {position: chunk (C,)} dicts;
+        ``wanted``: sequence of position lists.  Returns one
+        {position: chunk} dict per stripe.  Items sharing an erasure
+        pattern are decoded together (one matrix inversion + one batched
+        matmul per pattern).
+        """
+        raise NotImplementedError
+
+    def delta_batch(self, data_indices, xors: np.ndarray) -> np.ndarray:
+        """Parity deltas for B independent chunk mutations.
+
+        ``data_indices``: (B,) stripe data positions; ``xors``: (B, C)
+        full-chunk D ⊕ D' per item.  Returns (B, m, C); apply with
+        ``parity ^= delta``.
+        """
+        raise NotImplementedError
+
+    def apply_delta_batch(self, parity: np.ndarray, data_indices,
+                          xors: np.ndarray) -> np.ndarray:
+        """(B, m, C) parity ⊕ delta_batch(data_indices, xors)."""
+        parity = np.asarray(parity, dtype=np.uint8)
+        if parity.shape[1] == 0 or parity.shape[0] == 0:
+            return parity.copy()
+        return parity ^ self.delta_batch(data_indices, xors)
+
+    # -- shared decode plumbing -----------------------------------------
+    def _decode_inverse(self, avail_sig: tuple[int, ...]
+                        ) -> tuple[tuple[int, ...], np.ndarray]:
+        """(positions used, (k*r, k*r) inverse) for an availability set.
+
+        Mirrors ``RSCode.decode_matrix``: sorted positions, first k.  For
+        an MDS code, restricting to any k available chunks is equivalent
+        to erasing the rest — within tolerance, hence invertible.
+        """
+        hit = self._inv_cache.get(avail_sig)
+        if hit is not None:
+            return hit
+        k, r = self.code.k, self.rep.r
+        if len(avail_sig) < k:
+            raise ValueError(
+                f"need {k} chunks, got {len(avail_sig)} — beyond erasure "
+                f"tolerance of {type(self.code).__name__}"
+                f"({self.code.n},{k})")
+        use = avail_sig[:k]
+        G = self.rep.generator
+        rows = np.concatenate([G[p * r:(p + 1) * r] for p in use])
+        inv = gf256.gf_mat_inv(rows)
+        self._inv_cache[avail_sig] = (use, inv)
+        return use, inv
+
+
+class NumpyEngine(CodingEngine):
+    """Reference oracle: loops the host ``codes.Code`` implementation."""
+
+    name = "numpy"
+
+    def encode_batch(self, data):
+        data = np.asarray(data, dtype=np.uint8)
+        B, k, C = data.shape
+        if B == 0:
+            return np.zeros((0, self.code.m, C), np.uint8)
+        return np.stack([self.code.encode(d) for d in data])
+
+    def decode_batch(self, available, wanted, chunk_size):
+        return [self.code.decode(dict(a), list(w), chunk_size)
+                for a, w in zip(available, wanted)]
+
+    def delta_batch(self, data_indices, xors):
+        xors = np.asarray(xors, dtype=np.uint8)
+        B, C = xors.shape
+        if B == 0:
+            return np.zeros((0, self.code.m, C), np.uint8)
+        return np.stack([self.code.xor_delta(int(i), x)
+                         for i, x in zip(data_indices, xors)])
+
+
+# ---------------------------------------------------------------------------
+# Device backends
+# ---------------------------------------------------------------------------
+
+def _jax():
+    import jax
+    import jax.numpy as jnp
+    return jax, jnp
+
+
+@functools.lru_cache(maxsize=None)
+def _jnp_block_matmuls():
+    """jit'd (O,J)x(B,J,Cb) and per-item (B,O,J)x(B,J,Cb) GF(2^8) matmuls."""
+    jax, jnp = _jax()
+    from repro.kernels import ref as kref
+
+    @jax.jit
+    def shared(M, D):
+        prod = kref.gf256_mul_ref(M[None, :, :, None], D[:, None, :, :])
+        return jax.lax.reduce(prod, np.uint8(0), jax.lax.bitwise_xor, (2,))
+
+    @jax.jit
+    def per_item(Ms, D):
+        prod = kref.gf256_mul_ref(Ms[..., None], D[:, None, :, :])
+        return jax.lax.reduce(prod, np.uint8(0), jax.lax.bitwise_xor, (2,))
+
+    return shared, per_item
+
+
+class JaxEngine(CodingEngine):
+    """Pure-jnp batched backend over the block-linear representation."""
+
+    name = "jax"
+
+    # -- device matmul hooks (PallasEngine overrides the dense case) ----
+    def _matmul(self, M: np.ndarray, blocks: np.ndarray) -> np.ndarray:
+        """(O, J) ∘ (B, J, Cb) -> (B, O, Cb) over GF(2^8)."""
+        _, jnp = _jax()
+        shared, _ = _jnp_block_matmuls()
+        return np.asarray(shared(jnp.asarray(M), jnp.asarray(blocks)))
+
+    def _matmul_per_item(self, Ms: np.ndarray, blocks: np.ndarray) -> np.ndarray:
+        """(B, O, J) ∘ (B, J, Cb) -> (B, O, Cb), one matrix per item."""
+        _, jnp = _jax()
+        _, per_item = _jnp_block_matmuls()
+        return np.asarray(per_item(jnp.asarray(Ms), jnp.asarray(blocks)))
+
+    def _blocks(self, chunks: np.ndarray) -> np.ndarray:
+        """(B, x, C) -> (B, x*r, C//r) sub-block rows."""
+        B, x, C = chunks.shape
+        r = self.rep.r
+        if C % r:
+            raise ValueError(f"chunk size {C} not divisible by r={r}")
+        return chunks.reshape(B, x * r, C // r)
+
+    def encode_batch(self, data):
+        data = np.asarray(data, dtype=np.uint8)
+        B, k, C = data.shape
+        m = self.code.m
+        if B == 0 or m == 0:
+            return np.zeros((B, m, C), np.uint8)
+        out = self._matmul(self.rep.encode, self._blocks(data))
+        return out.reshape(B, m, C)
+
+    def decode_batch(self, available, wanted, chunk_size):
+        available = list(available)
+        wanted = [list(w) for w in wanted]
+        results: list[dict | None] = [None] * len(available)
+        k, r, C = self.code.k, self.rep.r, chunk_size
+        groups: dict[tuple, list[int]] = {}
+        for i, (av, w) in enumerate(zip(available, wanted)):
+            groups.setdefault(
+                (tuple(sorted(av.keys())), tuple(w)), []).append(i)
+        G = self.rep.generator
+        for (sig, wsig), idxs in groups.items():
+            use, inv = self._decode_inverse(sig)
+            stacked = np.stack(
+                [np.stack([np.asarray(available[i][p], np.uint8)
+                           for p in use]) for i in idxs])     # (Bg, k, C)
+            data_blocks = self._matmul(inv, self._blocks(stacked))
+            data = data_blocks.reshape(len(idxs), k, C)
+            need_par = [w for w in wsig if w >= k]
+            par = None
+            if need_par:
+                rows = np.concatenate(
+                    [G[p * r:(p + 1) * r] for p in need_par])
+                par = self._matmul(rows, data_blocks).reshape(
+                    len(idxs), len(need_par), C)
+            for bi, i in enumerate(idxs):
+                out = {}
+                for w in wsig:
+                    out[w] = (data[bi, w] if w < k
+                              else par[bi, need_par.index(w)])
+                results[i] = out
+        return results
+
+    def delta_batch(self, data_indices, xors):
+        xors = np.asarray(xors, dtype=np.uint8)
+        B, C = xors.shape
+        m, k, r = self.code.m, self.code.k, self.rep.r
+        if B == 0 or m == 0:
+            return np.zeros((B, m, C), np.uint8)
+        idx = np.asarray(data_indices, dtype=np.int64)
+        # per-item column block of the encode matrix: (B, m*r, r)
+        cols = self.rep.encode.reshape(m * r, k, r)[:, idx, :]
+        Ms = np.ascontiguousarray(np.transpose(cols, (1, 0, 2)))
+        blocks = xors.reshape(B, r, C // r)
+        out = self._matmul_per_item(Ms, blocks)
+        return out.reshape(B, m, C)
+
+
+class PallasEngine(JaxEngine):
+    """Batched Pallas grids for dense GF(2^8) codes (r == 1).
+
+    RS and XOR hit the `gf256_matmul`/`delta_update` kernels with a
+    (batch, C-tile) grid; RDP's (m*r, k*r) 0/1 block matrix would unroll
+    into a pathological kernel body, so r > 1 inherits the jnp path —
+    still device-side, still byte-identical.
+    """
+
+    name = "pallas"
+
+    def _matmul(self, M, blocks):
+        if self.rep.r != 1:
+            return super()._matmul(M, blocks)
+        from repro.kernels.gf256_matmul import gf256_matmul_batched
+        return np.asarray(gf256_matmul_batched(M, blocks))
+
+    def _gammas(self, data_indices) -> np.ndarray:
+        idx = np.asarray(data_indices, dtype=np.int64)
+        return np.ascontiguousarray(
+            self.rep.encode[:, idx].T).astype(np.int32)   # (B, m)
+
+    def delta_batch(self, data_indices, xors):
+        if self.rep.r != 1 or self.code.m == 0:
+            return super().delta_batch(data_indices, xors)
+        xors = np.asarray(xors, dtype=np.uint8)
+        B, C = xors.shape
+        if B == 0:
+            return np.zeros((B, self.code.m, C), np.uint8)
+        from repro.kernels.delta_update import delta_apply_batched
+        # parity=None: delta-only kernel — no dead parity streams
+        return np.asarray(delta_apply_batched(
+            None, self._gammas(data_indices), xors))
+
+    def apply_delta_batch(self, parity, data_indices, xors):
+        if self.rep.r != 1:
+            return super().apply_delta_batch(parity, data_indices, xors)
+        parity = np.asarray(parity, dtype=np.uint8)
+        if parity.shape[0] == 0 or parity.shape[1] == 0:
+            return parity.copy()
+        from repro.kernels.delta_update import delta_apply_batched
+        return np.asarray(delta_apply_batched(
+            parity, self._gammas(data_indices), xors))
+
+
+# ---------------------------------------------------------------------------
+# Selection
+# ---------------------------------------------------------------------------
+
+ENGINES = {
+    "numpy": NumpyEngine,
+    "jax": JaxEngine,
+    "pallas": PallasEngine,
+}
+
+
+def make_engine(name: str | None, code: Code) -> CodingEngine:
+    """Build a backend for ``code``.
+
+    ``name=None`` falls back to ``$MEMEC_ENGINE`` then ``"numpy"``.
+    """
+    if isinstance(name, CodingEngine):
+        return name
+    name = (name or os.environ.get("MEMEC_ENGINE") or "numpy").lower()
+    try:
+        cls = ENGINES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown coding engine {name!r}; pick from {sorted(ENGINES)}")
+    return cls(code)

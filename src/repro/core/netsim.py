@@ -69,6 +69,24 @@ class NetSim:
             worst = max(worst, self.cost.leg(leg.nbytes, leg.to_failed))
         return worst
 
+    def serialized_phase(self, legs: list[Leg]) -> float:
+        """Bulk-transfer phase: each destination drains its inbound legs
+        sequentially (link-limited), destinations proceed in parallel —
+        max over dst of sum(leg costs).  Use where volume, not a single
+        RTT, dominates (e.g. batched recovery); `phase` would report the
+        max single leg regardless of how much data moves."""
+        per_dst: dict[str, float] = defaultdict(float)
+        for leg in legs:
+            wire = leg.nbytes + self.cost.header_bytes
+            self.bytes_by_kind[leg.kind] += wire
+            self.msgs_by_kind[leg.kind] += 1
+            if leg.src:
+                self.bytes_by_endpoint[leg.src] += wire
+            if leg.dst:
+                self.bytes_by_endpoint[leg.dst] += wire
+            per_dst[leg.dst] += self.cost.leg(leg.nbytes, leg.to_failed)
+        return max(per_dst.values()) if per_dst else 0.0
+
     def record(self, req_kind: str, latency_s: float):
         self.latencies[req_kind].append(latency_s)
         self.ops_by_kind[req_kind] += 1

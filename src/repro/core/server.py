@@ -28,6 +28,7 @@ import numpy as np
 from .chunk import (CHUNK_SIZE, ChunkBuilder, ChunkId, ObjectRef,
                     object_size, pack_object, parse_objects)
 from .codes import Code
+from .engine import CodingEngine, NumpyEngine
 from .index import CuckooIndex
 from .stripe import StripeList
 
@@ -63,9 +64,14 @@ class DeltaRecord:
 
 class Server:
     def __init__(self, sid: int, code: Code, chunk_size: int = CHUNK_SIZE,
-                 max_unsealed_per_list: int = 4, mapping_ckpt_every: int = 256):
+                 max_unsealed_per_list: int = 4, mapping_ckpt_every: int = 256,
+                 engine: CodingEngine | None = None):
         self.sid = sid
         self.code = code
+        # all parity math goes through the batched coding engine (the
+        # cluster passes its shared backend; standalone servers get the
+        # numpy oracle)
+        self.engine = engine if engine is not None else NumpyEngine(code)
         self.chunk_size = chunk_size
         self.max_unsealed = max_unsealed_per_list
         self.mapping_ckpt_every = mapping_ckpt_every
@@ -240,10 +246,11 @@ class Server:
             self.sealed[idx] = True  # parity chunks are never appended to
         return idx
 
-    def apply_seal(self, ev: SealEvent) -> np.ndarray:
-        """Parity role: rebuild the sealed data chunk from replicas, fold it
-        into the parity chunk, and drop the replicas (paper §4.2)."""
-        sl = ev.stripe_list
+    def rebuild_seal_chunk(self, ev: SealEvent) -> tuple[int, int, np.ndarray]:
+        """Parity role, step 1 of a seal: rebuild the sealed data chunk from
+        replicas, allocate the parity slot, and drop the replicas.  Returns
+        (parity slot, data position, rebuilt chunk); the parity fold itself
+        is batched across seal events by the caller (paper §4.2)."""
         rebuilt = np.zeros(self.chunk_size, np.uint8)
         off = 0
         for key in ev.ordered_keys:
@@ -255,14 +262,29 @@ class Server:
                                deleted=deleted)
             rebuilt[off: off + len(blob)] = np.frombuffer(blob, np.uint8)
             off += len(blob)
-        data_pos = ev.chunk_id.position
-        deltas = self.code.xor_delta(data_pos, rebuilt)  # (m, C)
-        ppos = sl.parity_servers.index(self.sid)
-        idx = self._parity_slot_for(sl, ev.chunk_id.stripe_id)
-        self.region[idx] ^= deltas[ppos]
+        idx = self._parity_slot_for(ev.stripe_list, ev.chunk_id.stripe_id)
         for key in ev.ordered_keys:
             self.temp_replicas.pop(key, None)
-        return rebuilt
+        return idx, ev.chunk_id.position, rebuilt
+
+    def apply_seal(self, ev: SealEvent) -> np.ndarray:
+        """Parity role: rebuild + fold one sealed chunk (B=1 case of
+        `fold_seal_batch`)."""
+        return self.fold_seal_batch([ev])[0]
+
+    def fold_seal_batch(self, events: list[SealEvent]) -> list[np.ndarray]:
+        """Parity role: rebuild all sealed chunks, then fold their parity
+        contributions in one batched engine call."""
+        if not events:
+            return []
+        rebuilds = [self.rebuild_seal_chunk(ev) for ev in events]
+        positions = np.array([pos for _, pos, _ in rebuilds])
+        xors = np.stack([reb for _, _, reb in rebuilds])
+        deltas = self.engine.delta_batch(positions, xors)  # (B, m, C)
+        for ev, (idx, _, _), delta in zip(events, rebuilds, deltas):
+            ppos = ev.stripe_list.parity_servers.index(self.sid)
+            self.region[idx] ^= delta[ppos]
+        return [reb for _, _, reb in rebuilds]
 
     def apply_data_delta(self, sl: StripeList, chunk_id: ChunkId, offset: int,
                          xor_seg: np.ndarray, proxy_id: int, seq: int):
@@ -270,13 +292,21 @@ class Server:
         revert (§5.3)."""
         full = np.zeros(self.chunk_size, np.uint8)
         full[offset: offset + len(xor_seg)] = xor_seg
-        deltas = self.code.xor_delta(chunk_id.position, full)
+        deltas = self.engine.delta_batch(
+            np.array([chunk_id.position]), full[None])[0]  # (m, C)
         ppos = sl.parity_servers.index(self.sid)
+        self.apply_data_delta_row(sl, chunk_id, deltas[ppos], proxy_id, seq)
+
+    def apply_data_delta_row(self, sl: StripeList, chunk_id: ChunkId,
+                             delta_row: np.ndarray, proxy_id: int, seq: int):
+        """Parity role: fold a precomputed delta row for this server's
+        parity position (the multi-key path computes rows for all parity
+        servers in one batched engine call)."""
         idx = self._parity_slot_for(sl, chunk_id.stripe_id)
-        self.region[idx] ^= deltas[ppos]
+        self.region[idx] ^= delta_row
         self.delta_buffer[proxy_id].append(DeltaRecord(
             proxy_id=proxy_id, seq=seq, local_idx=idx, offset=0,
-            applied=deltas[ppos].copy()))
+            applied=np.array(delta_row, np.uint8)))
 
     def apply_replica_delta(self, key: bytes, new_value: bytes, deleted: bool,
                             proxy_id: int, seq: int):

@@ -101,16 +101,21 @@ class YCSBWorkload:
 
 
 def run_workload(cluster, workload: str, num_ops: int,
-                 cfg: YCSBConfig | None = None, num_proxies: int = 4):
-    """Drive a cluster through a workload; returns the op count executed."""
+                 cfg: YCSBConfig | None = None, num_proxies: int = 4,
+                 batch_size: int = 1):
+    """Drive a cluster through a workload; returns the op count executed.
+
+    ``batch_size > 1`` groups runs of same-kind ops into multi-key
+    requests (``multi_get``/``multi_set``/``multi_update``), amortizing
+    coding and network legs — semantics match sequential execution.
+    """
     w = YCSBWorkload(cfg or YCSBConfig())
+    stream = (w.load_ops() if workload == "load"
+              else w.run_ops(workload, num_ops))
     ops = 0
-    if workload == "load":
-        for t, (kind, key, val) in enumerate(w.load_ops()):
-            cluster.set(key, val, proxy_id=t % num_proxies)
-            ops += 1
-    else:
-        for t, (kind, key, val) in enumerate(w.run_ops(workload, num_ops)):
+    batched = batch_size > 1 and hasattr(cluster, "multi_set")
+    if not batched:
+        for t, (kind, key, val) in enumerate(stream):
             pid = t % num_proxies
             if kind == "get":
                 cluster.get(key, proxy_id=pid)
@@ -119,4 +124,31 @@ def run_workload(cluster, workload: str, num_ops: int,
             elif kind == "set":
                 cluster.set(key, val, proxy_id=pid)
             ops += 1
+        return ops, w
+
+    buf: list[tuple] = []
+    buf_kind: str | None = None
+    flushes = 0
+
+    def flush():
+        nonlocal buf, buf_kind, flushes
+        if not buf:
+            return
+        pid = flushes % num_proxies
+        flushes += 1
+        if buf_kind == "get":
+            cluster.multi_get([k for k, _ in buf], proxy_id=pid)
+        elif buf_kind == "set":
+            cluster.multi_set(buf, proxy_id=pid)
+        elif buf_kind == "update":
+            cluster.multi_update(buf, proxy_id=pid)
+        buf = []
+
+    for kind, key, val in stream:
+        if kind != buf_kind or len(buf) >= batch_size:
+            flush()
+            buf_kind = kind
+        buf.append((key, val))
+        ops += 1
+    flush()
     return ops, w

@@ -56,6 +56,103 @@ def _delta_call(gammas, parity, old, new, *, m, block_c, interpret):
     )(gammas, parity, old, new)
 
 
+def _scaled_rows(g_ref, x, m: int):
+    """rows[r] = gamma_r * x over GF(2^8) via in-kernel xtime powers."""
+    rows = []
+    for r in range(m):
+        g = g_ref[0, r].astype(jnp.int32)
+        acc = jnp.zeros_like(x)
+        for b in range(8):
+            acc = acc ^ (((x >> b) & 1) * g)
+            g = ((g << 1) ^ jnp.where((g & 0x80) != 0, 0x11D, 0)) & 0xFF
+        rows.append(acc.astype(jnp.uint8))
+    return rows
+
+
+def _delta_apply_batched_kernel(g_ref, p_ref, x_ref, o_ref, *, m: int):
+    x = x_ref[0].astype(jnp.int32)                        # (BC,)
+    rows = _scaled_rows(g_ref, x, m)
+    o_ref[0] = jnp.stack([p_ref[0, r] ^ rows[r] for r in range(m)])
+
+
+def _delta_only_batched_kernel(g_ref, x_ref, o_ref, *, m: int):
+    x = x_ref[0].astype(jnp.int32)                        # (BC,)
+    o_ref[0] = jnp.stack(_scaled_rows(g_ref, x, m))
+
+
+@functools.partial(jax.jit, static_argnames=("m", "block_c", "interpret"))
+def _delta_apply_batched_call(gammas, parity, xor, *, m, block_c, interpret):
+    B, _, C = parity.shape
+    grid = (B, C // block_c)
+    return pl.pallas_call(
+        functools.partial(_delta_apply_batched_kernel, m=m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, m), lambda b, c: (b, 0)),
+            pl.BlockSpec((1, m, block_c), lambda b, c: (b, 0, c)),
+            pl.BlockSpec((1, block_c), lambda b, c: (b, c)),
+        ],
+        out_specs=pl.BlockSpec((1, m, block_c), lambda b, c: (b, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((B, m, C), jnp.uint8),
+        interpret=interpret,
+    )(gammas, parity, xor)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "block_c", "interpret"))
+def _delta_only_batched_call(gammas, xor, *, m, block_c, interpret):
+    B, C = xor.shape
+    grid = (B, C // block_c)
+    return pl.pallas_call(
+        functools.partial(_delta_only_batched_kernel, m=m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, m), lambda b, c: (b, 0)),
+            pl.BlockSpec((1, block_c), lambda b, c: (b, c)),
+        ],
+        out_specs=pl.BlockSpec((1, m, block_c), lambda b, c: (b, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((B, m, C), jnp.uint8),
+        interpret=interpret,
+    )(gammas, xor)
+
+
+def delta_apply_batched(parity: jax.Array | None, gammas: jax.Array,
+                        xor: jax.Array, *, block_c: int = DEFAULT_BLOCK_C,
+                        interpret: bool | None = None) -> jax.Array:
+    """Batched fused delta fold with per-item coefficients.
+
+    parity: (B, m, C); gammas: (B, m) — each batch item may update a
+    different stripe position, hence per-item gamma rows; xor: (B, C) is
+    D ⊕ D' per item.  Returns (B, m, C) updated parity.  This is the
+    batched analogue of `delta_update` (grid = batch x C-tiles).
+
+    ``parity=None`` returns the bare deltas gamma_r·xor — same kernel
+    minus the parity read/write streams, for callers that fold the delta
+    into host-side buffers themselves.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    xor = jnp.asarray(xor, dtype=jnp.uint8)
+    gammas = jnp.asarray(gammas, dtype=jnp.int32)
+    B, m = gammas.shape
+    C = xor.shape[1]
+    if B == 0 or m == 0:
+        return jnp.zeros((B, m, C), jnp.uint8)
+    block_c = min(block_c, _round_up(C, 128))
+    Cp = _round_up(C, block_c)
+    if Cp != C:
+        xor = jnp.pad(xor, ((0, 0), (0, Cp - C)))
+    if parity is None:
+        out = _delta_only_batched_call(gammas, xor, m=m, block_c=block_c,
+                                       interpret=interpret)
+        return out[:, :, :C]
+    parity = jnp.asarray(parity, dtype=jnp.uint8)
+    if Cp != C:
+        parity = jnp.pad(parity, ((0, 0), (0, 0), (0, Cp - C)))
+    out = _delta_apply_batched_call(gammas, parity, xor, m=m,
+                                    block_c=block_c, interpret=interpret)
+    return out[:, :, :C]
+
+
 def delta_update(parity: jax.Array, gammas: jax.Array, old: jax.Array,
                  new: jax.Array, *, block_c: int = DEFAULT_BLOCK_C,
                  interpret: bool | None = None) -> jax.Array:

@@ -70,6 +70,63 @@ def _gf_matmul_call(apow, data, *, m, k, block_c, interpret):
     )(apow, data)
 
 
+def _gf_matmul_batched_kernel(apow_ref, d_ref, o_ref, *, m: int, k: int):
+    d = d_ref[0].astype(jnp.int32)                        # (k, BC)
+    acc = [jnp.zeros(d.shape[1:], jnp.int32) for _ in range(m)]
+    for i in range(k):
+        di = d[i]
+        for b in range(8):
+            bit = (di >> b) & 1
+            for r in range(m):
+                acc[r] = acc[r] ^ (bit * apow_ref[r, i, b])
+    o_ref[0] = jnp.stack(acc).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "k", "block_c", "interpret"))
+def _gf_matmul_batched_call(apow, data, *, m, k, block_c, interpret):
+    B, _, C = data.shape
+    grid = (B, C // block_c)
+    return pl.pallas_call(
+        functools.partial(_gf_matmul_batched_kernel, m=m, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k, 8), lambda b, c: (0, 0, 0)),
+            pl.BlockSpec((1, k, block_c), lambda b, c: (b, 0, c)),
+        ],
+        out_specs=pl.BlockSpec((1, m, block_c), lambda b, c: (b, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((B, m, C), jnp.uint8),
+        interpret=interpret,
+    )(apow, data)
+
+
+def gf256_matmul_batched(A: np.ndarray, data: jax.Array, *,
+                         block_c: int = DEFAULT_BLOCK_C,
+                         interpret: bool | None = None) -> jax.Array:
+    """Batched A (*) data over GF(2^8): one matrix, a whole batch of stripes.
+
+    A: (m, k) uint8 shared across the batch; data: (B, k, C) uint8 ->
+    (B, m, C).  The grid runs (batch, C-tiles) so every stripe's tiles are
+    independent grid steps — the batched analogue of `gf256_matmul`.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    A = np.asarray(A, dtype=np.uint8)
+    m, k = A.shape
+    data = jnp.asarray(data, dtype=jnp.uint8)
+    B, kd, C = data.shape
+    assert kd == k, (data.shape, k)
+    if B == 0 or m == 0:
+        return jnp.zeros((B, m, C), jnp.uint8)
+    block_c = min(block_c, _round_up(C, 128))
+    Cp = _round_up(C, block_c)
+    if Cp != C:
+        data = jnp.pad(data, ((0, 0), (0, 0), (0, Cp - C)))
+    apow = jnp.asarray(build_apow(A))
+    out = _gf_matmul_batched_call(apow, data, m=m, k=k, block_c=block_c,
+                                  interpret=interpret)
+    return out[:, :, :C]
+
+
 def gf256_matmul(A: np.ndarray, data: jax.Array, *,
                  block_c: int = DEFAULT_BLOCK_C,
                  interpret: bool | None = None) -> jax.Array:

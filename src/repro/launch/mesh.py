@@ -10,8 +10,10 @@ import jax
 
 def _mesh(shape, axes):
     import jax.sharding as jshard
-    return jax.make_mesh(
-        shape, axes, axis_types=(jshard.AxisType.Auto,) * len(axes))
+    if hasattr(jshard, "AxisType"):  # explicit axis types need jax >= 0.6
+        return jax.make_mesh(
+            shape, axes, axis_types=(jshard.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

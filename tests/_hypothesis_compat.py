@@ -1,0 +1,139 @@
+"""Deterministic fallback for ``hypothesis`` when it is not installed.
+
+Offline environments lack hypothesis; importing it at module scope used to
+fail collection for five test modules.  This shim re-exports the real
+library when available and otherwise provides a miniature, deterministic
+implementation of the subset the test-suite uses:
+
+* ``given(*strategies)`` — runs the test body over a fixed number of
+  pseudo-random examples drawn from a per-test seeded ``random.Random``
+  (seeded by the test name, so runs are reproducible and order-independent);
+* ``settings(max_examples=..., deadline=...)`` — honours ``max_examples``;
+* ``strategies``/``st`` — integers, binary, lists, tuples, sets,
+  sampled_from, and data() with ``.draw``.
+
+No shrinking, no database, no health checks — just deterministic example
+sweeps so the properties still get meaningful coverage offline.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # type: ignore
+
+    st = strategies
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A strategy is just a seeded-sampler; boundaries are favoured."""
+
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rnd: random.Random):
+            return self._sample(rnd)
+
+    class _DataObject:
+        """Stand-in for hypothesis's ``data()`` draw object."""
+
+        def __init__(self, rnd: random.Random):
+            self._rnd = rnd
+
+        def draw(self, strategy: _Strategy, label: str | None = None):
+            return strategy.sample(self._rnd)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            def sample(rnd):
+                if rnd.random() < 0.15:  # bias toward the boundaries
+                    return rnd.choice((min_value, max_value))
+                return rnd.randint(min_value, max_value)
+            return _Strategy(sample)
+
+        @staticmethod
+        def binary(min_size: int = 0, max_size: int = 16) -> _Strategy:
+            def sample(rnd):
+                n = rnd.randint(min_size, max_size)
+                return bytes(rnd.getrandbits(8) for _ in range(n))
+            return _Strategy(sample)
+
+        @staticmethod
+        def sampled_from(options) -> _Strategy:
+            opts = list(options)
+            return _Strategy(lambda rnd: opts[rnd.randrange(len(opts))])
+
+        @staticmethod
+        def tuples(*strategies_) -> _Strategy:
+            return _Strategy(
+                lambda rnd: tuple(s.sample(rnd) for s in strategies_))
+
+        @staticmethod
+        def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10,
+                  unique_by=None) -> _Strategy:
+            def sample(rnd):
+                n = rnd.randint(min_size, max_size)
+                out, seen, attempts = [], set(), 0
+                while len(out) < n and attempts < n * 20 + 20:
+                    attempts += 1
+                    v = elements.sample(rnd)
+                    if unique_by is not None:
+                        k = unique_by(v)
+                        if k in seen:
+                            continue
+                        seen.add(k)
+                    out.append(v)
+                return out
+            return _Strategy(sample)
+
+        @staticmethod
+        def sets(elements: _Strategy, min_size: int = 0,
+                 max_size: int = 10) -> _Strategy:
+            def sample(rnd):
+                n = rnd.randint(min_size, max_size)
+                out, attempts = set(), 0
+                while len(out) < n and attempts < n * 20 + 20:
+                    attempts += 1
+                    out.add(elements.sample(rnd))
+                return out
+            return _Strategy(sample)
+
+        @staticmethod
+        def data() -> _Strategy:
+            return _Strategy(lambda rnd: _DataObject(rnd))
+
+    strategies = _Strategies()
+    st = strategies
+
+    def settings(max_examples: int = 20, deadline=None, **_ignored):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies_):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*fixture_args, **fixture_kwargs):
+                n = getattr(wrapper, "_compat_max_examples",
+                            getattr(fn, "_compat_max_examples", 20))
+                rnd = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    drawn = tuple(s.sample(rnd) for s in strategies_)
+                    fn(*fixture_args, *drawn, **fixture_kwargs)
+            # pytest must not unwrap to the original signature (it would
+            # treat the strategy-filled parameters as fixtures)
+            wrapper.__dict__.pop("__wrapped__", None)
+            # preserve the attribute if @settings is applied above @given
+            wrapper._compat_max_examples = getattr(
+                fn, "_compat_max_examples", None) or 20
+            return wrapper
+        return deco
+
+
+__all__ = ["given", "settings", "strategies", "st", "HAVE_HYPOTHESIS"]

@@ -1,7 +1,7 @@
 """All-encoding layout: chunk packing, cuckoo index, stripe lists."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 
 from repro.core.chunk import (CHUNK_SIZE, ChunkBuilder, ChunkId,
                               fragment_count, pack_object, parse_objects,

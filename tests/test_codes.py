@@ -1,7 +1,7 @@
 """Erasure codes: MDS property, delta-update linearity, RDP double-failure."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 
 from repro.core.codes import NoCode, RDPCode, RSCode, XORCode, make_code
 

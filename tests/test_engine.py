@@ -1,0 +1,151 @@
+"""CodingEngine cross-backend properties: numpy / jax / pallas backends
+must agree byte-for-byte with the numpy ``Code`` oracle for every scheme,
+batch size, and (odd) chunk width."""
+import numpy as np
+import pytest
+
+from repro.core.codes import make_code
+from repro.core.engine import (ENGINES, JaxEngine, NumpyEngine, PallasEngine,
+                               block_rep, make_engine)
+
+# (scheme, n, k) x chunk widths.  RDP views chunks as (p-1)=16 sub-blocks,
+# so its widths must be multiples of 16 (non-powers-of-two still exercise
+# padding); the dense codes get genuinely odd widths.
+SCHEMES = {
+    ("rs", 10, 8): (37, 129),
+    ("xor", 9, 8): (41, 160),
+    ("rdp", 10, 8): (64, 208),
+    ("none", 10, 10): (33,),
+}
+BATCHES = (1, 3, 16)
+BACKENDS = ("numpy", "jax", "pallas")
+
+
+def _cases():
+    for (scheme, n, k), widths in SCHEMES.items():
+        for C in widths:
+            yield scheme, n, k, C
+
+
+@pytest.fixture(scope="module")
+def engines():
+    cache = {}
+
+    def get(scheme, n, k):
+        if (scheme, n, k) not in cache:
+            code = make_code(scheme, n, k)
+            cache[(scheme, n, k)] = {b: make_engine(b, code)
+                                     for b in BACKENDS}
+        return cache[(scheme, n, k)]
+
+    return get
+
+
+@pytest.mark.parametrize("scheme,n,k,C", _cases())
+@pytest.mark.parametrize("B", BATCHES)
+def test_encode_batch_matches_oracle(scheme, n, k, C, B, engines, rng):
+    code = make_code(scheme, n, k)
+    data = rng.integers(0, 256, (B, code.k, C), dtype=np.uint8)
+    want = np.stack([code.encode(d) for d in data])
+    for backend, eng in engines(scheme, n, k).items():
+        got = eng.encode_batch(data)
+        assert got.shape == (B, code.m, C), backend
+        assert np.array_equal(got, want), (backend, scheme, C, B)
+
+
+@pytest.mark.parametrize("scheme,n,k,C", _cases())
+@pytest.mark.parametrize("B", BATCHES)
+def test_decode_batch_matches_oracle(scheme, n, k, C, B, engines, rng):
+    code = make_code(scheme, n, k)
+    if code.m == 0:
+        pytest.skip("nothing to erase under NoCode")
+    data = rng.integers(0, 256, (B, code.k, C), dtype=np.uint8)
+    stripes = np.concatenate(
+        [data, np.stack([code.encode(d) for d in data])], axis=1)
+    avail, wanted = [], []
+    for b in range(B):  # erasure patterns deliberately vary across items
+        n_erase = int(rng.integers(1, code.m + 1))
+        erased = set(rng.choice(code.n, size=n_erase, replace=False).tolist())
+        avail.append({i: stripes[b, i] for i in range(code.n)
+                      if i not in erased})
+        wanted.append(sorted(erased))
+    want = [code.decode(a, w, C) for a, w in zip(avail, wanted)]
+    for backend, eng in engines(scheme, n, k).items():
+        got = eng.decode_batch(avail, wanted, C)
+        for b in range(B):
+            for w in wanted[b]:
+                assert np.array_equal(got[b][w], want[b][w]), \
+                    (backend, scheme, C, B, b, w)
+
+
+@pytest.mark.parametrize("scheme,n,k,C", _cases())
+@pytest.mark.parametrize("B", BATCHES)
+def test_apply_delta_batch_matches_oracle(scheme, n, k, C, B, engines, rng):
+    code = make_code(scheme, n, k)
+    data = rng.integers(0, 256, (B, code.k, C), dtype=np.uint8)
+    parity = np.stack([code.encode(d) for d in data])
+    idx = rng.integers(0, code.k, B)
+    xors = np.zeros((B, C), np.uint8)
+    for b in range(B):  # sparse spans, like real object updates
+        span = int(rng.integers(1, C + 1))
+        off = int(rng.integers(0, C - span + 1))
+        xors[b, off: off + span] = rng.integers(0, 256, span, dtype=np.uint8)
+    want_delta = np.stack([code.xor_delta(int(i), x)
+                           for i, x in zip(idx, xors)])
+    for backend, eng in engines(scheme, n, k).items():
+        got = eng.delta_batch(idx, xors)
+        assert np.array_equal(got, want_delta), (backend, scheme, C, B)
+        applied = eng.apply_delta_batch(parity, idx, xors)
+        assert np.array_equal(applied, parity ^ want_delta), \
+            (backend, scheme, C, B)
+
+
+@pytest.mark.parametrize("scheme,n,k,C", _cases())
+def test_delta_equals_reencode_through_engine(scheme, n, k, C, engines, rng):
+    """Linearity end-to-end: applying engine deltas == re-encoding."""
+    code = make_code(scheme, n, k)
+    if code.m == 0:
+        pytest.skip("no parity under NoCode")
+    B = 4
+    data = rng.integers(0, 256, (B, code.k, C), dtype=np.uint8)
+    idx = rng.integers(0, code.k, B)
+    new = data.copy()
+    for b in range(B):
+        new[b, idx[b], : C // 2] ^= rng.integers(
+            0, 256, C // 2, dtype=np.uint8)
+    xors = np.stack([data[b, idx[b]] ^ new[b, idx[b]] for b in range(B)])
+    for backend, eng in engines(scheme, n, k).items():
+        parity = eng.encode_batch(data)
+        updated = eng.apply_delta_batch(parity, idx, xors)
+        assert np.array_equal(updated, eng.encode_batch(new)), backend
+
+
+def test_block_rep_matches_rs_parity_matrix():
+    code = make_code("rs", 10, 8)
+    rep = block_rep(code)
+    assert rep.r == 1
+    assert np.array_equal(rep.encode, code.parity_matrix)
+
+
+def test_decode_beyond_tolerance_raises(rng):
+    code = make_code("rs", 10, 8)
+    data = rng.integers(0, 256, (1, 8, 64), dtype=np.uint8)
+    stripe = np.concatenate([data[0], code.encode(data[0])])
+    avail = [{i: stripe[i] for i in range(7)}]  # 7 < k
+    for backend in BACKENDS:
+        with pytest.raises(ValueError):
+            make_engine(backend, code).decode_batch(avail, [[8]], 64)
+
+
+def test_make_engine_selection(monkeypatch):
+    code = make_code("rs", 10, 8)
+    assert isinstance(make_engine("numpy", code), NumpyEngine)
+    assert isinstance(make_engine("jax", code), JaxEngine)
+    assert isinstance(make_engine("pallas", code), PallasEngine)
+    monkeypatch.setenv("MEMEC_ENGINE", "jax")
+    assert isinstance(make_engine(None, code), JaxEngine)
+    monkeypatch.delenv("MEMEC_ENGINE")
+    assert isinstance(make_engine(None, code), NumpyEngine)
+    with pytest.raises(ValueError):
+        make_engine("isal", code)
+    assert set(ENGINES) == {"numpy", "jax", "pallas"}

@@ -1,7 +1,7 @@
 """GF(2^8) arithmetic: field axioms + bit-plane lift correctness."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 
 from repro.core import gf256
 

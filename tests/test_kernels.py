@@ -3,7 +3,7 @@ the numpy host data plane.  Interpret mode on CPU."""
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 
 from repro.core.codes import RSCode
 from repro.core.index import CuckooIndex

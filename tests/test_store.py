@@ -2,7 +2,7 @@
 transitions, consistency resolution, redundancy accounting."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 
 from repro.core import MemECCluster, PartialFailure, ServerState
 from repro.core.chunk import ChunkId
