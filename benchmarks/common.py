@@ -4,7 +4,7 @@ from __future__ import annotations
 import time
 
 from repro.core import (AllReplicationCluster, HybridEncodingCluster,
-                        MemECCluster)
+                        make_cluster)
 from repro.data.ycsb import YCSBConfig, run_workload
 
 
@@ -13,10 +13,12 @@ def emit(name: str, us_per_call: float, derived: str = ""):
 
 
 def make_memec(scheme="rs", n=10, k=8, **kw):
+    """Paper-testbed cluster; pass ``shards=S`` for a sharded one (each
+    shard is a full 16-server testbed)."""
     defaults = dict(num_servers=16, num_proxies=4, c=16, chunk_size=4096,
                     max_unsealed=4)
     defaults.update(kw)
-    return MemECCluster(scheme=scheme, n=n, k=k, **defaults)
+    return make_cluster(scheme=scheme, n=n, k=k, **defaults)
 
 
 def make_allrep(**kw):
@@ -50,15 +52,23 @@ def server_endpoints(num_servers=16):
     return [f"s{i}" for i in range(num_servers)]
 
 
+def endpoints_for(cluster):
+    """Server endpoint labels of a cluster (shard-aware: a ShardedCluster
+    namespaces its per-shard endpoints as ``sh{i}:s{j}``)."""
+    if hasattr(cluster, "server_endpoint_names"):
+        return cluster.server_endpoint_names()
+    return server_endpoints()
+
+
 def cluster_metrics(cluster, ops: int, kinds=("GET", "UPDATE", "SET")):
     """Modeled metrics: aggregate-bandwidth throughput (primary; Zipf hot
     spots smooth out over the paper's 20M-request runs), max-endpoint
     throughput (skew indicator), p95 latencies (ms)."""
     net = cluster.net
+    eps = endpoints_for(cluster)
     out = {
-        "modeled_kops": net.mean_throughput(ops, server_endpoints()) / 1e3,
-        "hotspot_kops": net.bottleneck_throughput(
-            ops, server_endpoints()) / 1e3,
+        "modeled_kops": net.mean_throughput(ops, eps) / 1e3,
+        "hotspot_kops": net.bottleneck_throughput(ops, eps) / 1e3,
     }
     for kind in kinds:
         for suffix in ("", "_DEG"):

@@ -23,11 +23,12 @@ BATCH_SIZES = (1, 8, 32)
 def run():
     print("# Experiment 1 — normal-mode comparison (modeled)")
     print("system,phase,modeled_kops,p95_ms,wall_s")
-    systems = {
-        "memec-nocoding": lambda: make_memec(scheme="none", n=10, k=10),
+    systems = {  # paper comparison: single-testbed clusters (shards=1)
+        "memec-nocoding": lambda: make_memec(scheme="none", n=10, k=10,
+                                             shards=1),
         "allrep-3way": make_allrep,
         "hybrid-rs": make_hybrid,
-        "memec-rs": lambda: make_memec(scheme="rs"),
+        "memec-rs": lambda: make_memec(scheme="rs", shards=1),
     }
     cfg = YCSBConfig(num_objects=N_OBJECTS)
     for name, factory in systems.items():
@@ -47,31 +48,43 @@ def run():
 
 
 def run_batched_sweep():
-    """Batch-size x engine-backend sweep over the multi-key client API.
+    """Shards x engine-backend x batch-size sweep over the multi-key API.
 
     `seq_kops` (ops over summed modeled request latency) is the metric
-    that exposes batching: a batch's fan-out legs share phases, so
-    batched ops/sec must come out >= the unbatched row.  `modeled_kops`
-    (bandwidth-bound) stays flat by construction — same bytes on the
-    wire.  Extra engine backends via MEMEC_BENCH_ENGINES=numpy,jax,pallas
-    (device backends are interpret-mode-slow on CPU wall-clock; modeled
-    numbers are the comparison that matters there).
+    that exposes batching AND sharding: a batch's fan-out legs share
+    phases, and with S>1 the per-shard sub-batches overlap (the facade
+    records max-over-shards latency), so ops/sec must come out >= the
+    unbatched/unsharded rows.  `modeled_kops` (bandwidth-bound) grows
+    with shard count — S independent testbeds add aggregate NIC
+    bandwidth — but stays flat in batch size (same bytes on the wire).
+    Axes via MEMEC_BENCH_ENGINES=numpy,jax,pallas (device backends are
+    interpret-mode-slow on CPU wall-clock; modeled numbers are the
+    comparison that matters there) and MEMEC_BENCH_SHARDS=1,4.
     """
-    print("\n# Batched multi-key sweep — engine x batch_size (modeled)")
-    print("engine,batch,phase,seq_kops,modeled_kops,wall_s")
+    print("\n# Batched multi-key sweep — shards x engine x batch (modeled)")
+    print("shards,engine,batch,phase,seq_kops,modeled_kops,wall_s")
     engines = os.environ.get("MEMEC_BENCH_ENGINES", "numpy").split(",")
+    shard_counts = [int(s) for s in
+                    os.environ.get("MEMEC_BENCH_SHARDS", "1,4").split(",")]
     n_obj, n_ops = 2000, 3000
     cfg = YCSBConfig(num_objects=n_obj)
-    for engine in engines:
-        for batch in BATCH_SIZES:
-            cl = make_memec(scheme="rs", engine=engine)
-            wall, ops = timed_workload(cl, "load", 0, cfg, batch_size=batch)
-            print(f"{engine},{batch},load,{modeled_seq_kops(cl, ops):.1f},"
-                  f"{cluster_metrics(cl, ops)['modeled_kops']:.1f},{wall:.2f}")
-            cl.net.reset()
-            wall, ops = timed_workload(cl, "A", n_ops, cfg, batch_size=batch)
-            print(f"{engine},{batch},A,{modeled_seq_kops(cl, ops):.1f},"
-                  f"{cluster_metrics(cl, ops)['modeled_kops']:.1f},{wall:.2f}")
+    for shards in shard_counts:
+        for engine in engines:
+            for batch in BATCH_SIZES:
+                cl = make_memec(scheme="rs", engine=engine, shards=shards)
+                wall, ops = timed_workload(cl, "load", 0, cfg,
+                                           batch_size=batch)
+                print(f"{shards},{engine},{batch},load,"
+                      f"{modeled_seq_kops(cl, ops):.1f},"
+                      f"{cluster_metrics(cl, ops)['modeled_kops']:.1f},"
+                      f"{wall:.2f}")
+                cl.net.reset()
+                wall, ops = timed_workload(cl, "A", n_ops, cfg,
+                                           batch_size=batch)
+                print(f"{shards},{engine},{batch},A,"
+                      f"{modeled_seq_kops(cl, ops):.1f},"
+                      f"{cluster_metrics(cl, ops)['modeled_kops']:.1f},"
+                      f"{wall:.2f}")
     emit("batched_sweep.done", 0.0, "see rows above")
 
 

@@ -3,12 +3,21 @@
 # regressions (e.g. a kernel silently falling back to per-call dispatch)
 # are caught before review.
 #
-#   scripts/verify.sh            # tier-1 (known-green set) + bench smoke
+#   scripts/verify.sh            # tier-1 minus `slow`-marked tests + bench smoke
+#   scripts/verify.sh --slow     # full suite incl. `slow` + shard-equivalence smoke
 #   FULL=1 scripts/verify.sh     # include known jax-version-broken modules
 #   SKIP_BENCH=1 scripts/verify.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+SLOW=""
+for arg in "$@"; do
+    case "$arg" in
+        --slow) SLOW=1 ;;
+        *) echo "unknown argument: $arg" >&2; exit 2 ;;
+    esac
+done
 
 # test_distributed / test_hlo_analysis / test_train_serve carry
 # pre-existing failures from jax API drift (jax.sharding.AxisType,
@@ -21,7 +30,40 @@ if [ -n "${FULL:-}" ]; then
     DESELECT=()
 fi
 
-python -m pytest -x -q "${DESELECT[@]}"
+if [ -n "$SLOW" ]; then
+    python -m pytest -x -q "${DESELECT[@]}"
+else
+    python -m pytest -x -q -m "not slow" "${DESELECT[@]}"
+fi
+
+if [ -n "$SLOW" ]; then
+    # shard-equivalence smoke: a ShardedCluster (S=4, mixed engines) must
+    # serve byte-identical contents to the unsharded S=1 cluster for the
+    # same seeded batched workload, in normal AND degraded mode.
+    python - <<'EOF'
+from repro.core import make_cluster
+from repro.data.ycsb import YCSBConfig, YCSBWorkload, run_workload
+
+kw = dict(num_servers=16, scheme="rs", n=10, k=8, c=16,
+          chunk_size=512, max_unsealed=2)
+cfg = YCSBConfig(num_objects=1200, seed=3)
+s1 = make_cluster(shards=1, **kw)
+s4 = make_cluster(shards=4, engine="numpy,jax", **kw)
+for cl in (s1, s4):
+    run_workload(cl, "load", 0, cfg, batch_size=16)
+    run_workload(cl, "A", 1500, cfg, batch_size=16)
+s4.fail_server(s4.global_sid(2, 3))
+w = YCSBWorkload(cfg)
+keys = [w.key(i) for i in range(cfg.num_objects)]
+assert s4.multi_get(keys) == s1.multi_get(keys), "shard equivalence broken"
+assert s4.shards[2].stats["degraded_requests"] > 0
+assert sum(s4.shards[i].stats["degraded_requests"] for i in (0, 1, 3)) == 0
+s4.restore_server(s4.global_sid(2, 3))
+assert s4.multi_get(keys) == s1.multi_get(keys)
+print("shard-equivalence smoke: OK "
+      f"(overlap saved {s4.stats['pipeline_overlap_saved_s']*1e3:.1f} modeled ms)")
+EOF
+fi
 
 if [ -z "${SKIP_BENCH:-}" ]; then
     # MEMEC_BENCH_FAST trims the sweep to the ~10-second smoke variant

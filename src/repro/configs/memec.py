@@ -21,10 +21,27 @@ class MemECConfig:
     value_sizes: tuple = (8, 32)
     # batched coding-engine backend: numpy | jax | pallas (see
     # core/engine.py).  None defers to $MEMEC_ENGINE, default numpy.
+    # A comma-separated list assigns backends per shard (cycling), e.g.
+    # "pallas,numpy" = pallas on even shards, numpy on odd.
     engine: str | None = None
     # multi-key request batch size for the batched client API / YCSB
     # driver (1 = classic per-key requests)
     batch_size: int = 1
+    # shard count for core/shard.py's ShardedCluster (hash of key ->
+    # shard; each shard is an independent paper-testbed cluster).  1 =
+    # the paper's single unsharded cluster; None defers to $MEMEC_SHARDS.
+    shards: int | None = 1
 
 
 CONFIG = MemECConfig()
+
+
+def make_configured_cluster(cfg: MemECConfig = CONFIG, **overrides):
+    """Build the cluster this config describes (sharded iff shards > 1)."""
+    from repro.core.shard import make_cluster
+    kw = dict(num_servers=cfg.num_servers, num_proxies=cfg.num_proxies,
+              scheme=cfg.scheme, n=cfg.n, k=cfg.k, c=cfg.c,
+              chunk_size=cfg.chunk_size, max_unsealed=cfg.max_unsealed,
+              engine=cfg.engine, shards=cfg.shards)
+    kw.update(overrides)
+    return make_cluster(**kw)

@@ -15,6 +15,12 @@ Layers:
   normal-mode requests (single-key and batched multi_get/multi_set/
   multi_update), coordinated degraded mode, server states, backups,
   one-shot batched recovery, migration (§4, §5);
+* shard — the scale-out layer: `ShardedCluster` hash-partitions the key
+  space across S independent shard stores (own stripe lists, coordinator,
+  `CodingEngine` — mixed backends allowed), plans multi-key requests
+  across shards with pipelined scatter/gather, and scopes failure
+  recovery per shard.  `make_cluster(shards=... )` / `$MEMEC_SHARDS`;
+  S=1 returns the plain `MemECCluster`;
 * baselines — all-replication + hybrid-encoding comparison stores (§3.1);
 * analysis — the redundancy formulas of §3.3 (Figure 2).
 """
@@ -26,10 +32,13 @@ from .codes import Code, NoCode, RDPCode, RSCode, XORCode, make_code
 from .coordinator import Coordinator, ServerState
 from .engine import (CodingEngine, JaxEngine, NumpyEngine, PallasEngine,
                      make_engine)
+from .engine import engine_specs
 from .index import CuckooIndex
 from .netsim import CostModel, Leg, NetSim
 from .proxy import Proxy
 from .server import Server
+from .shard import (ShardedCluster, ShardedNet, make_cluster, resolve_shards,
+                    shard_for_key)
 from .store import MemECCluster, PartialFailure
 from .stripe import StripeList, StripeMapper, generate_stripe_lists
 
@@ -39,7 +48,8 @@ __all__ = [
     "HybridEncodingCluster", "CHUNK_SIZE", "ChunkBuilder", "ChunkId",
     "ObjectRef", "Code", "NoCode", "RDPCode", "RSCode", "XORCode",
     "make_code", "CodingEngine", "JaxEngine", "NumpyEngine", "PallasEngine",
-    "make_engine", "Coordinator", "ServerState", "CostModel", "Leg", "NetSim",
-    "Proxy", "Server", "MemECCluster", "PartialFailure", "StripeList",
-    "StripeMapper", "generate_stripe_lists",
+    "make_engine", "engine_specs", "Coordinator", "ServerState", "CostModel",
+    "Leg", "NetSim", "Proxy", "Server", "MemECCluster", "PartialFailure",
+    "ShardedCluster", "ShardedNet", "make_cluster", "resolve_shards",
+    "shard_for_key", "StripeList", "StripeMapper", "generate_stripe_lists",
 ]

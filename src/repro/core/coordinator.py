@@ -28,16 +28,26 @@ class ServerState(enum.Enum):
 
 
 class Coordinator:
-    def __init__(self, num_servers: int, stripe_lists: list[StripeList]):
+    def __init__(self, num_servers: int, stripe_lists: list[StripeList],
+                 shard_id: int | None = None):
         self.num_servers = num_servers
         self.stripe_lists = stripe_lists
+        self.shard_id = shard_id  # None for the unsharded cluster
         self.states: dict[int, ServerState] = {
             s: ServerState.NORMAL for s in range(num_servers)}
         # key -> chunk-ID mapping checkpoints, per server (§5.3)
         self.mapping_ckpt: dict[int, dict[bytes, ChunkId]] = defaultdict(dict)
         # merged (checkpoint + proxy buffers) view built at failure time
         self.recovery_mappings: dict[int, dict[bytes, ChunkId]] = {}
-        self.transition_log: list[tuple[str, int, float]] = []
+        # (state name, server, shard, logical step) — deterministic audit
+        # trail for the transition tests; no wall clock on purpose
+        self.transition_log: list[tuple[str, int, int | None, int]] = []
+        self._step = 0
+        # sticky degraded-routing choices: (failed sid, list id) -> server.
+        # Without stickiness, restoring an unrelated server could silently
+        # re-rank `redirected_server` and strand degraded state (temp
+        # objects, reconstructed chunks) at the previous target.
+        self.redirect_assignments: dict[tuple[int, int], int] = {}
 
     # -- state machine -----------------------------------------------------
     def state_of(self, sid: int) -> ServerState:
@@ -53,6 +63,9 @@ class Coordinator:
 
     def set_state(self, sid: int, state: ServerState):
         self.states[sid] = state
+        self._step += 1
+        self.transition_log.append((state.value, sid, self.shard_id,
+                                    self._step))
 
     def any_failure(self) -> bool:
         return any(st != ServerState.NORMAL for st in self.states.values())
@@ -76,8 +89,27 @@ class Coordinator:
 
     # -- degraded routing (§5.4) ---------------------------------------------
     def redirected_server(self, sl: StripeList, failed_sid: int) -> int:
-        """Deterministic choice of a working server in the stripe list."""
+        """Sticky, deterministic choice of a working server in the list.
+
+        The first call for a (failed server, stripe list) pair picks the
+        first available server and records it; later calls return the same
+        target while it stays available, so degraded state accumulated
+        there remains reachable even as *other* servers fail or recover.
+        A target that itself fails triggers a reassignment (the cluster
+        hands its redirect state off, see ``MemECCluster.fail_server``).
+        """
+        akey = (failed_sid, sl.list_id)
+        cur = self.redirect_assignments.get(akey)
+        if cur is not None and self.is_available(cur):
+            return cur
         for s in sl.servers:
             if s != failed_sid and self.is_available(s):
+                self.redirect_assignments[akey] = s
                 return s
         raise RuntimeError("no working server available in stripe list")
+
+    def clear_redirects(self, restored_sid: int):
+        """Drop sticky assignments for a server that came back (§5.5)."""
+        for akey in [a for a in self.redirect_assignments
+                     if a[0] == restored_sid]:
+            del self.redirect_assignments[akey]

@@ -357,14 +357,37 @@ ENGINES = {
 def make_engine(name: str | None, code: Code) -> CodingEngine:
     """Build a backend for ``code``.
 
-    ``name=None`` falls back to ``$MEMEC_ENGINE`` then ``"numpy"``.
+    ``name=None`` falls back to ``$MEMEC_ENGINE`` then ``"numpy"``.  A
+    comma-separated list (the per-shard spelling, e.g. ``pallas,numpy``)
+    collapses to its first entry when a single engine is requested.
     """
     if isinstance(name, CodingEngine):
         return name
     name = (name or os.environ.get("MEMEC_ENGINE") or "numpy").lower()
+    if "," in name:
+        name = name.split(",")[0].strip()
     try:
         cls = ENGINES[name]
     except KeyError:
         raise ValueError(
             f"unknown coding engine {name!r}; pick from {sorted(ENGINES)}")
     return cls(code)
+
+
+def engine_specs(spec, num_shards: int) -> list:
+    """Expand an engine spec into one entry per shard.
+
+    ``spec`` may be None (defer to ``$MEMEC_ENGINE``, itself possibly a
+    comma list), a single backend name, a comma-separated string, a
+    list/tuple of names, or a ``CodingEngine`` instance; shorter lists
+    cycle (e.g. ``"pallas,numpy"`` over 4 shards -> pallas/numpy/pallas/
+    numpy — pallas for hot shards, numpy elsewhere)."""
+    if spec is None:
+        spec = os.environ.get("MEMEC_ENGINE")
+    if isinstance(spec, str) and "," in spec:
+        spec = [s.strip() for s in spec.split(",") if s.strip()]
+    if isinstance(spec, (list, tuple)):
+        if not spec:
+            raise ValueError("empty engine spec list")
+        return [spec[i % len(spec)] for i in range(num_shards)]
+    return [spec] * num_shards

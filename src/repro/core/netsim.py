@@ -54,6 +54,10 @@ class NetSim:
         self.bytes_by_endpoint: dict[str, int] = defaultdict(int)
         self.latencies: dict[str, list[float]] = defaultdict(list)
         self.ops_by_kind: dict[str, int] = defaultdict(int)
+        # monotonic sum of every recorded request latency; lets callers
+        # (e.g. the sharded facade) take O(1) before/after snapshots of
+        # modeled time spent inside a call
+        self.total_recorded_s = 0.0
 
     # -- request construction ------------------------------------------
     def phase(self, legs: list[Leg]) -> float:
@@ -90,6 +94,7 @@ class NetSim:
     def record(self, req_kind: str, latency_s: float):
         self.latencies[req_kind].append(latency_s)
         self.ops_by_kind[req_kind] += 1
+        self.total_recorded_s += latency_s
 
     # -- reporting -------------------------------------------------------
     def percentile(self, req_kind: str, q: float) -> float:

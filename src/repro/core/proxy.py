@@ -32,6 +32,10 @@ class Proxy:
         self.pid = pid
         self.mapper = mapper
         self.seq = 0
+        # mutating requests begun through this proxy (GETs excluded: they
+        # carry no backup) — load-distribution introspection for the
+        # sharded scatter/gather planner tests
+        self.requests_begun = 0
         self.pending: dict[int, PendingRequest] = {}
         self.acked: set[int] = set()
         self.ack_watermark = 0  # all seqs <= watermark are acked
@@ -47,6 +51,7 @@ class Proxy:
               sl: StripeList, data_server: int) -> PendingRequest:
         req = PendingRequest(self.next_seq(), kind, key, value, sl, data_server)
         self.pending[req.seq] = req
+        self.requests_begun += 1
         return req
 
     def ack(self, seq: int):

@@ -1,0 +1,420 @@
+"""Sharded MemEC: hash-partitioned shard stores, pipelined cross-shard batches.
+
+Scaling seam on top of the unsharded cluster (ROADMAP: "sharded stores
+driving per-shard engines").  A ``ShardedCluster`` partitions the key space
+(FNV-1a hash of key -> shard) across S independent ``MemECCluster`` shard
+stores.  Each shard owns its own stripe lists, servers, proxies,
+coordinator state, netsim accounting, and ``CodingEngine`` instance —
+mixed backends per shard are allowed (e.g. ``engine="pallas,numpy"`` puts
+Pallas on hot shards and numpy elsewhere; see ``engine_specs``).
+
+Batched multi-key requests go through a cross-shard scatter/gather
+planner: keys are grouped per shard in request order, the per-shard
+engine+network batches execute concurrently (one worker per shard — real
+wall-clock overlap of coding with other shards' in-flight netsim legs,
+the ROADMAP's async seam), and results merge back in request order.  The
+merged request's modeled latency is the *slowest shard's* batch time
+(full pipeline overlap across disjoint shard hardware); the facade tracks
+how much modeled time the overlap saved versus sequential shard execution
+(``stats["pipeline_overlap_saved_s"]``).
+
+Failures are shard-scoped: ``fail_server``/``restore_server`` take a
+global server id (``shard * servers_per_shard + local``) or an explicit
+``shard=`` kwarg, and recovery of one shard never blocks traffic on the
+others — non-failed shards keep serving decentralized normal-mode
+requests throughout.
+
+The unsharded cluster is the S=1 special case: ``make_cluster`` returns a
+plain ``MemECCluster`` for one shard, so every existing call site keeps
+working; ``shards=`` / ``$MEMEC_SHARDS`` opt in to S>1.
+"""
+from __future__ import annotations
+
+import os
+from collections import defaultdict
+from concurrent.futures import ThreadPoolExecutor
+
+from .index import fnv1a
+from .netsim import NetSim
+from .store import MemECCluster
+
+# dedicated hash seed: shard routing must stay independent of the
+# per-shard two-stage stripe hashing (stripe.py)
+SHARD_SEED = 0x01000193
+
+# batch request kinds the facade re-records with pipelined latencies;
+# the per-shard components are excluded from aggregate latency views
+BATCH_KINDS = ("MGET", "MSET", "MUPDATE")
+
+
+def shard_for_key(key: bytes, num_shards: int) -> int:
+    """Hash-partition the key space across shards."""
+    if num_shards <= 1:
+        return 0
+    return fnv1a(key, seed=SHARD_SEED) % num_shards
+
+
+def resolve_shards(shards=None) -> int:
+    """Shard count from the argument or ``$MEMEC_SHARDS`` (default 1)."""
+    if shards is None:
+        shards = os.environ.get("MEMEC_SHARDS")
+    s = 1 if shards in (None, "") else int(shards)
+    if s < 1:
+        raise ValueError(f"shards must be >= 1, got {s}")
+    return s
+
+
+class ShardedNet:
+    """NetSim-shaped aggregate view over per-shard netsims.
+
+    Single-key request latencies and all byte/message counters come from
+    the shards; the facade's own records (pipelined MGET/MSET/MUPDATE
+    latencies) live in ``local`` and replace the shards' per-shard batch
+    entries in merged views.  Endpoints are namespaced ``sh{i}:s{j}`` for
+    S>1 (each shard is separate hardware) and left bare for S=1 so the
+    view is a drop-in for the unsharded net.
+    """
+
+    def __init__(self, cluster: "ShardedCluster"):
+        self._cl = cluster
+        self.local = NetSim(cluster.shards[0].net.cost)
+        self.cost = self.local.cost
+
+    def _shard_nets(self):
+        return [sh.net for sh in self._cl.shards]
+
+    def _prefix(self, i: int, ep: str) -> str:
+        return ep if self._cl.num_shards == 1 else f"sh{i}:{ep}"
+
+    # -- recording (facade-level merged batches) ------------------------
+    def record(self, req_kind: str, latency_s: float):
+        self.local.record(req_kind, latency_s)
+
+    # -- merged views ----------------------------------------------------
+    @property
+    def latencies(self) -> dict:
+        out = defaultdict(list)
+        for net in self._shard_nets():
+            for kind, xs in net.latencies.items():
+                if kind in BATCH_KINDS:
+                    continue  # subsumed by the facade's pipelined record
+                out[kind].extend(xs)
+        for kind, xs in self.local.latencies.items():
+            out[kind].extend(xs)
+        return dict(out)
+
+    @property
+    def ops_by_kind(self) -> dict:
+        out = defaultdict(int)
+        for net in self._shard_nets():
+            for kind, n in net.ops_by_kind.items():
+                if kind in BATCH_KINDS:
+                    continue
+                out[kind] += n
+        for kind, n in self.local.ops_by_kind.items():
+            out[kind] += n
+        return dict(out)
+
+    @property
+    def bytes_by_kind(self) -> dict:
+        out = defaultdict(int)
+        for net in self._shard_nets():
+            for kind, n in net.bytes_by_kind.items():
+                out[kind] += n
+        return dict(out)
+
+    @property
+    def msgs_by_kind(self) -> dict:
+        out = defaultdict(int)
+        for net in self._shard_nets():
+            for kind, n in net.msgs_by_kind.items():
+                out[kind] += n
+        return dict(out)
+
+    @property
+    def bytes_by_endpoint(self) -> dict:
+        out = {}
+        for i, net in enumerate(self._shard_nets()):
+            for ep, n in net.bytes_by_endpoint.items():
+                out[self._prefix(i, ep)] = n
+        return out
+
+    # -- reporting (same formulas as NetSim) ----------------------------
+    def percentile(self, req_kind: str, q: float) -> float:
+        import numpy as np
+        xs = self.latencies.get(req_kind, [])
+        return float(np.percentile(xs, q)) if xs else float("nan")
+
+    def mean(self, req_kind: str) -> float:
+        xs = self.latencies.get(req_kind, [])
+        return sum(xs) / len(xs) if xs else float("nan")
+
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def _endpoint_pool(self, endpoints):
+        pool = self.bytes_by_endpoint
+        if endpoints is not None:
+            pool = {e: pool.get(e, 0) for e in endpoints}
+        return pool
+
+    def bottleneck_throughput(self, total_ops: int,
+                              endpoints: list[str] | None = None) -> float:
+        pool = self._endpoint_pool(endpoints)
+        if not pool or total_ops == 0:
+            return float("nan")
+        worst = max(pool.values())
+        if worst == 0:
+            return float("inf")
+        return total_ops / (worst / self.cost.bw_Bps)
+
+    def mean_throughput(self, total_ops: int,
+                        endpoints: list[str] | None = None) -> float:
+        pool = self._endpoint_pool(endpoints)
+        if not pool or total_ops == 0:
+            return float("nan")
+        total = sum(pool.values())
+        if total == 0:
+            return float("inf")
+        return total_ops / (total / (len(pool) * self.cost.bw_Bps))
+
+    def reset(self):
+        for net in self._shard_nets():
+            net.reset()
+        self.local.reset()
+
+    def snapshot(self) -> dict:
+        return {
+            "bytes_by_kind": self.bytes_by_kind,
+            "msgs_by_kind": self.msgs_by_kind,
+            "bytes_by_endpoint": self.bytes_by_endpoint,
+        }
+
+
+class ShardedCluster:
+    """Facade over S independent ``MemECCluster`` shard stores.
+
+    Exposes the full cluster request API (single-key + multi-key), with
+    multi-key requests planned across shards and pipelined.  Constructor
+    keywords other than ``shards``/``engine``/``pipeline`` are forwarded
+    verbatim to every shard store.
+    """
+
+    def __init__(self, shards=None, engine=None, pipeline: bool = True,
+                 **cluster_kw):
+        from .engine import engine_specs
+        self.num_shards = resolve_shards(shards)
+        specs = engine_specs(engine, self.num_shards)
+        self.shards = [MemECCluster(engine=specs[i], shard_id=i, **cluster_kw)
+                       for i in range(self.num_shards)]
+        s0 = self.shards[0]
+        self.servers_per_shard = len(s0.servers)
+        self.num_proxies = s0.num_proxies
+        self.code, self.n, self.k = s0.code, s0.n, s0.k
+        self.chunk_size = s0.chunk_size
+        self.degraded_enabled = s0.degraded_enabled
+        self.engines = [sh.engine for sh in self.shards]
+        self.engine = self.engines[0]
+        self.pipeline = bool(pipeline) and self.num_shards > 1
+        self._stats = {"cross_shard_batches": 0, "pipelined_batches": 0,
+                       "pipeline_overlap_saved_s": 0.0}
+        self.net = ShardedNet(self)
+
+    # ------------------------------------------------------------------
+    # routing
+    # ------------------------------------------------------------------
+    def shard_of(self, key: bytes) -> int:
+        return shard_for_key(key, self.num_shards)
+
+    def _shard_for(self, key: bytes) -> MemECCluster:
+        return self.shards[self.shard_of(key)]
+
+    def locate(self, key: bytes):
+        """(shard id, stripe list, data server) for a key."""
+        si = self.shard_of(key)
+        sl, ds = self.shards[si].mapper.data_server_for(key)
+        return si, sl, ds
+
+    def global_sid(self, shard: int, local_sid: int) -> int:
+        return shard * self.servers_per_shard + local_sid
+
+    def _resolve_server(self, sid: int, shard: int | None) -> tuple[int, int]:
+        if shard is None:
+            shard, sid = divmod(sid, self.servers_per_shard)
+        if not 0 <= shard < self.num_shards:
+            raise ValueError(f"no shard {shard}")
+        return shard, sid
+
+    @property
+    def failed(self) -> set[int]:
+        """Global ids of every transiently-failed server across shards."""
+        return {self.global_sid(i, s)
+                for i, sh in enumerate(self.shards) for s in sh.failed}
+
+    @property
+    def stats(self) -> dict:
+        out = dict(self._stats)
+        for sh in self.shards:
+            for k, v in sh.stats.items():
+                out[k] = out.get(k, 0) + v
+        return out
+
+    def server_endpoint_names(self) -> list[str]:
+        return [self.net._prefix(i, ep)
+                for i, sh in enumerate(self.shards)
+                for ep in sh.server_endpoint_names()]
+
+    # ------------------------------------------------------------------
+    # single-key API — decentralized, shard-local
+    # ------------------------------------------------------------------
+    def set(self, key: bytes, value: bytes, proxy_id: int = 0):
+        return self._shard_for(key).set(key, value, proxy_id)
+
+    def get(self, key: bytes, proxy_id: int = 0):
+        return self._shard_for(key).get(key, proxy_id)
+
+    def update(self, key: bytes, value: bytes, proxy_id: int = 0) -> bool:
+        return self._shard_for(key).update(key, value, proxy_id)
+
+    def delete(self, key: bytes, proxy_id: int = 0) -> bool:
+        return self._shard_for(key).delete(key, proxy_id)
+
+    # ------------------------------------------------------------------
+    # multi-key API — cross-shard scatter/gather planner
+    # ------------------------------------------------------------------
+    def _plan(self, keys) -> dict[int, list[int]]:
+        """Group request indices per shard, preserving request order."""
+        groups: dict[int, list[int]] = {}
+        for i, key in enumerate(keys):
+            groups.setdefault(self.shard_of(key), []).append(i)
+        return groups
+
+    def _scatter(self, fn, groups: dict[int, list[int]]):
+        """Run ``fn(shard_index, request_indices)`` for every shard group.
+
+        With pipelining, groups execute on one worker per shard (each
+        worker touches only its own shard's state, so this is safe and
+        deterministic); results return in shard order either way.
+        """
+        items = sorted(groups.items())
+        if self.pipeline and len(items) > 1:
+            # per-call pool: workers release with the call (no idle
+            # threads outliving the batch), spawn cost is negligible
+            # next to the per-shard engine + store work
+            with ThreadPoolExecutor(max_workers=len(items)) as pool:
+                futures = [(si, idxs, pool.submit(fn, si, idxs))
+                           for si, idxs in items]
+                return [(si, idxs, f.result()) for si, idxs, f in futures]
+        return [(si, idxs, fn(si, idxs)) for si, idxs in items]
+
+    def _record_batch(self, kind: str, dts: list[float]):
+        """Merged-request latency under pipelining: the per-shard batches
+        overlap fully (disjoint servers/proxies/engines), so the request
+        completes when the slowest shard does."""
+        if not dts:
+            return
+        self.net.record(kind, max(dts))
+        self._stats["cross_shard_batches"] += 1
+        if len(dts) > 1:
+            self._stats["pipelined_batches"] += 1
+            self._stats["pipeline_overlap_saved_s"] += sum(dts) - max(dts)
+
+    def multi_get(self, keys, proxy_id: int = 0) -> list:
+        keys = list(keys)
+        groups = self._plan(keys)
+        out: list = [None] * len(keys)
+
+        def run(si, idxs):
+            sh = self.shards[si]
+            t0 = sh.net.total_recorded_s
+            vals = sh.multi_get([keys[i] for i in idxs], proxy_id)
+            return vals, sh.net.total_recorded_s - t0
+
+        dts = []
+        for si, idxs, (vals, dt) in self._scatter(run, groups):
+            for i, v in zip(idxs, vals):
+                out[i] = v
+            dts.append(dt)
+        self._record_batch("MGET", dts)
+        return out
+
+    def multi_set(self, items, proxy_id: int = 0) -> list[bool]:
+        items = list(items)
+        groups = self._plan([k for k, _ in items])
+        ok = [False] * len(items)
+
+        def run(si, idxs):
+            sh = self.shards[si]
+            t0 = sh.net.total_recorded_s
+            oks = sh.multi_set([items[i] for i in idxs], proxy_id)
+            return oks, sh.net.total_recorded_s - t0
+
+        dts = []
+        for si, idxs, (oks, dt) in self._scatter(run, groups):
+            for i, o in zip(idxs, oks):
+                ok[i] = o
+            dts.append(dt)
+        self._record_batch("MSET", dts)
+        return ok
+
+    def multi_update(self, items, proxy_id: int = 0) -> list[bool]:
+        items = list(items)
+        groups = self._plan([k for k, _ in items])
+        ok = [False] * len(items)
+
+        def run(si, idxs):
+            sh = self.shards[si]
+            t0 = sh.net.total_recorded_s
+            oks = sh.multi_update([items[i] for i in idxs], proxy_id)
+            return oks, sh.net.total_recorded_s - t0
+
+        dts = []
+        for si, idxs, (oks, dt) in self._scatter(run, groups):
+            for i, o in zip(idxs, oks):
+                ok[i] = o
+            dts.append(dt)
+        self._record_batch("MUPDATE", dts)
+        return ok
+
+    # ------------------------------------------------------------------
+    # shard-scoped failure transitions — one shard's recovery never
+    # blocks the others' traffic
+    # ------------------------------------------------------------------
+    def fail_server(self, sid: int, shard: int | None = None) -> dict:
+        shard, local = self._resolve_server(sid, shard)
+        timings = self.shards[shard].fail_server(local)
+        timings["shard"] = shard
+        return timings
+
+    def restore_server(self, sid: int, shard: int | None = None) -> dict:
+        shard, local = self._resolve_server(sid, shard)
+        timings = self.shards[shard].restore_server(local)
+        timings["shard"] = shard
+        return timings
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+    def total_memory(self) -> dict:
+        agg: dict[str, int] = {}
+        for sh in self.shards:
+            for k, v in sh.total_memory().items():
+                agg[k] = agg.get(k, 0) + v
+        return agg
+
+    def stored_payload_bytes(self) -> int:
+        return sum(sh.stored_payload_bytes() for sh in self.shards)
+
+
+def make_cluster(shards=None, engine=None, pipeline: bool = True,
+                 **cluster_kw):
+    """Cluster factory: plain ``MemECCluster`` for S=1 (the unsharded
+    special case — byte- and latency-identical to the pre-sharding
+    cluster), ``ShardedCluster`` for S>1.  ``shards=None`` reads
+    ``$MEMEC_SHARDS``."""
+    s = resolve_shards(shards)
+    if s == 1:
+        from .engine import engine_specs
+        return MemECCluster(engine=engine_specs(engine, 1)[0], **cluster_kw)
+    return ShardedCluster(shards=s, engine=engine, pipeline=pipeline,
+                          **cluster_kw)

@@ -15,7 +15,13 @@ Implementation deviations from the paper (each noted inline):
 * SET of an existing key routes through the UPDATE path (upsert) so a key
   never occupies two chunk slots — required for parity-side chunk rebuild;
 * degraded UPDATE of an *unsealed* object shadows the new value at the
-  redirected server (migrated back as a normal UPDATE on restore).
+  redirected server (migrated back as a normal UPDATE on restore);
+* overlapping-failure hardening beyond the paper's single-failure
+  narrative (driven by tests/test_transitions_prop.py): redirect targets
+  are sticky per (failed server, stripe list) and hand their degraded
+  state off when they themselves fail; SET of an existing key in
+  degraded mode routes through the mutate path (upsert); shadow replicas
+  migrate to *every* restored parity server of a list.
 """
 from __future__ import annotations
 
@@ -78,7 +84,9 @@ class MemECCluster:
                  chunk_size: int = CHUNK_SIZE, max_unsealed: int = 4,
                  cost: CostModel | None = None, degraded_enabled: bool = True,
                  verify_rebuild: bool = False, mapping_ckpt_every: int = 256,
-                 engine: str | CodingEngine | None = None):
+                 engine: str | CodingEngine | None = None,
+                 shard_id: int | None = None):
+        self.shard_id = shard_id   # None when not part of a ShardedCluster
         self.code: Code = make_code(scheme, n, k)
         # one batched coding engine shared by every server and every
         # cluster-level batch operation (numpy | jax | pallas; see
@@ -92,7 +100,9 @@ class MemECCluster:
                                mapping_ckpt_every, engine=self.engine)
                         for s in range(num_servers)]
         self.proxies = [Proxy(p, self.mapper) for p in range(num_proxies)]
-        self.coordinator = Coordinator(num_servers, self.stripe_lists)
+        self.num_proxies = num_proxies
+        self.coordinator = Coordinator(num_servers, self.stripe_lists,
+                                       shard_id=shard_id)
         self.net = NetSim(cost)
         self.degraded_enabled = degraded_enabled
         self.verify_rebuild = verify_rebuild
@@ -103,7 +113,11 @@ class MemECCluster:
         self.stats = {"reconstructions": 0, "recon_chunk_hits": 0,
                       "reverted_deltas": 0, "degraded_requests": 0,
                       "migrated_objects": 0, "migrated_chunks": 0,
-                      "batch_recovered_chunks": 0}
+                      "batch_recovered_chunks": 0, "redirect_handoffs": 0}
+
+    def server_endpoint_names(self) -> list[str]:
+        """Netsim endpoint labels of this cluster's storage servers."""
+        return [f"s{i}" for i in range(len(self.servers))]
 
     # ------------------------------------------------------------------
     # helpers
@@ -175,12 +189,10 @@ class MemECCluster:
         data = np.zeros((self.k, self.chunk_size), np.uint8)
         legs = []
         for i in range(self.k):
-            owner = sl.data_servers[i]
-            cid = self._stripe_chunk_id(sl, ev.chunk_id.stripe_id, i)
-            c = self._sv(owner).get_sealed_chunk(cid)
+            c, src = self._best_data_chunk(sl, ev.chunk_id.stripe_id, i)
             if c is not None:
                 data[i] = c
-            legs.append(Leg("recon_fetch", self.chunk_size, f"s{owner}", f"s{r}"))
+            legs.append(Leg("recon_fetch", self.chunk_size, f"s{src}", f"s{r}"))
         t += self.net.phase(legs)
         parity = self.engine.encode_batch(data[None])[0]
         ppos = sl.parity_servers.index(failed_p)
@@ -593,6 +605,16 @@ class MemECCluster:
 
     def _degraded_set(self, proxy: Proxy, sl: StripeList, ds: int,
                       key: bytes, value: bytes) -> bool:
+        if not self._is_failed(ds):
+            ref = self._sv(ds).lookup(key)
+            if ref is not None:
+                # upsert while a parity server is down: a key must never
+                # occupy two chunk slots (module doc), so route through the
+                # degraded mutate path exactly as _set_small does normally
+                if ref.value_size == len(value):
+                    return self._degraded_mutate("update", proxy, sl, ds,
+                                                 key, value)
+                self._degraded_mutate("delete", proxy, sl, ds, key, None)
         self.stats["degraded_requests"] += 1
         t = self._coord_hop(proxy, len(key))
         obj_bytes = object_size(len(key), len(value))
@@ -623,6 +645,22 @@ class MemECCluster:
             proxy.buffer_mapping(ds, key, cid)
         self.net.record("SET_DEG", t)
         return True
+
+    def _best_data_chunk(self, sl: StripeList, stripe_id: int, i: int
+                         ) -> tuple[np.ndarray | None, int]:
+        """Best-known bytes of data chunk ``i`` of a stripe (or None if it
+        never sealed), plus the server that actually serves them.  A
+        failed owner's reconstructed copy at its redirected server wins
+        over the owner's frozen memory — the recon chunk carries
+        degraded-mode updates the memory never saw."""
+        owner = sl.data_servers[i]
+        cid = self._stripe_chunk_id(sl, stripe_id, i)
+        if self._is_failed(owner) and self._degraded_active(owner):
+            r = self.coordinator.redirected_server(sl, owner)
+            rc = self._rs(r).recon.get(cid.key())
+            if rc is not None:
+                return rc.buf, r
+        return self._sv(owner).get_sealed_chunk(cid), owner
 
     def _gather_available(self, sl: StripeList, stripe_id: int, position: int,
                           r: int) -> tuple[dict[int, np.ndarray], list[Leg]]:
@@ -980,6 +1018,9 @@ class MemECCluster:
                 for s in range(len(self.servers)) if s not in self.failed]
         legs += [Leg("state_bcast", 16, "coord", f"p{p.pid}") for p in self.proxies]
         t += self.net.phase(legs)
+        # if sid itself hosted degraded state as a redirect target for an
+        # earlier failure, hand it off to freshly assigned targets
+        t += self._handoff_redirect_state(sid)
         timings = {"T_N_to_D": t}
         # fast batched recovery (§5.4): reconstruct every chunk the failed
         # server owned in one batched decode at the redirected servers,
@@ -1005,6 +1046,70 @@ class MemECCluster:
                                       req.stripe_list, req.data_server,
                                       req.key, None)
         return timings
+
+    def _handoff_redirect_state(self, failing: int) -> float:
+        """Graceful transition under overlapping failures (§5.2 spirit):
+        when a server that is itself a redirect target fails, the degraded
+        state it hosts (reconstructed chunks, degraded-SET objects, shadow
+        replicas) is handed off to freshly chosen redirect targets during
+        the INTERMEDIATE window, before the server goes fully dark.
+        Without this, a fail(A) -> fail(redirect-of-A) interleaving would
+        strand acknowledged degraded writes."""
+        rs = self.redirect.get(failing)
+        if rs is None:
+            return 0.0
+        legs = []
+        moved = 0
+        # 1. reconstructed chunks — owners are still-failed servers
+        #    (restore_server already drained entries of restored owners)
+        for key_t, rc in list(rs.recon.items()):
+            del rs.recon[key_t]
+            sl = self.stripe_lists[rc.chunk_id.stripe_list_id]
+            owner = self._chunk_owner(sl, rc.chunk_id.position)
+            if not self._is_failed(owner):
+                continue  # stale entry; owner's memory is authoritative
+            r2 = self.coordinator.redirected_server(sl, owner)
+            self._rs(r2).recon[key_t] = rc
+            legs.append(Leg("handoff_chunk", self.chunk_size,
+                            f"s{failing}", f"s{r2}"))
+            moved += 1
+        # 2. degraded-SET objects and shadowed deletes
+        for okey in list(rs.temp_objects):
+            val = rs.temp_objects.pop(okey)
+            sl2, ds2 = self.mapper.data_server_for(okey)
+            if self._is_failed(ds2):
+                r2 = self.coordinator.redirected_server(sl2, ds2)
+                self._rs(r2).temp_objects[okey] = val
+                self._rs(r2).temp_deletes.discard(okey)
+                legs.append(Leg("handoff_obj", len(okey) + len(val),
+                                f"s{failing}", f"s{r2}"))
+                moved += 1
+            else:  # owner back already: land it as a normal request
+                self.set(okey, val, 0)
+        for okey in list(rs.temp_deletes):
+            rs.temp_deletes.discard(okey)
+            sl2, ds2 = self.mapper.data_server_for(okey)
+            if self._is_failed(ds2):
+                r2 = self.coordinator.redirected_server(sl2, ds2)
+                self._rs(r2).temp_deletes.add(okey)
+                self._rs(r2).temp_objects.pop(okey, None)
+                moved += 1
+            else:
+                self.delete(okey, 0)
+        # 3. shadow replicas for failed parity servers (one copy per
+        # distinct redirect target still covering a failed parity)
+        for okey, rep in list(rs.temp_replicas.items()):
+            del rs.temp_replicas[okey]
+            sl2, _ = self.mapper.data_server_for(okey)
+            targets = {self.coordinator.redirected_server(sl2, p)
+                       for p in sl2.parity_servers if self._is_failed(p)}
+            for r2 in sorted(targets):
+                self._rs(r2).temp_replicas[okey] = rep
+                legs.append(Leg("handoff_replica", len(okey) + len(rep[0]),
+                                f"s{failing}", f"s{r2}"))
+                moved += 1
+        self.stats["redirect_handoffs"] += moved
+        return self.net.phase(legs) if legs else 0.0
 
     def restore_server(self, sid: int) -> dict:
         """Restore a transiently-failed server (§5.5): migrate, then NORMAL."""
@@ -1068,13 +1173,18 @@ class MemECCluster:
                 rs.temp_deletes.discard(okey)
                 if restored.lookup(okey) is not None:
                     self._delete_small(okey, 0)
-            # 3. shadow replicas destined to sid (it was a parity server)
+            # 3. shadow replicas destined to sid (it was a parity server).
+            # One shadow entry serves every failed parity of the list that
+            # redirected here, so migrate a COPY and only drop the entry
+            # once no parity of the list remains failed.
             for okey, (val, deleted) in list(rs.temp_replicas.items()):
                 sl2, _ = self.mapper.data_server_for(okey)
-                if sid in sl2.parity_servers:
-                    restored.temp_replicas[okey] = (val, deleted)
-                    legs.append(Leg("migrate_replica", len(okey) + len(val),
-                                    f"s{r}", f"s{sid}"))
+                if sid not in sl2.parity_servers:
+                    continue
+                restored.temp_replicas[okey] = (val, deleted)
+                legs.append(Leg("migrate_replica", len(okey) + len(val),
+                                f"s{r}", f"s{sid}"))
+                if not any(self._is_failed(p) for p in sl2.parity_servers):
                     del rs.temp_replicas[okey]
             if legs:
                 t += self.net.phase(legs)
@@ -1099,6 +1209,8 @@ class MemECCluster:
         # popped sid's replicas; a stale replica would shadow post-seal
         # updates on a future degraded read.
         self._gc_stale_replicas(sid)
+        # drop sticky degraded-routing assignments for the restored server
+        self.coordinator.clear_redirects(sid)
         # COORDINATED_NORMAL -> NORMAL
         self.coordinator.set_state(sid, ServerState.NORMAL)
         legs = [Leg("state_bcast", 16, "coord", f"s{s}")

@@ -105,13 +105,21 @@ def run_workload(cluster, workload: str, num_ops: int,
                  batch_size: int = 1):
     """Drive a cluster through a workload; returns the op count executed.
 
-    ``batch_size > 1`` groups runs of same-kind ops into multi-key
-    requests (``multi_get``/``multi_set``/``multi_update``), amortizing
-    coding and network legs — semantics match sequential execution.
+    ``batch_size > 1`` collects a *window* of up to ``batch_size`` ops —
+    mixed kinds allowed — and flushes it as per-kind multi-key requests
+    (``multi_get``/``multi_set``/``multi_update``), amortizing coding and
+    network legs (and, on a sharded cluster, pipelining across shards).
+    A window is flushed early whenever an incoming op touches a key the
+    window already holds under a conflicting kind, so the per-key
+    read/write order — and therefore the final store state — matches
+    sequential execution exactly.
     """
     w = YCSBWorkload(cfg or YCSBConfig())
     stream = (w.load_ops() if workload == "load"
               else w.run_ops(workload, num_ops))
+    avail_proxies = getattr(cluster, "num_proxies", None)
+    if avail_proxies:   # never address proxies the cluster doesn't have
+        num_proxies = min(num_proxies, avail_proxies)
     ops = 0
     batched = batch_size > 1 and hasattr(cluster, "multi_set")
     if not batched:
@@ -126,29 +134,38 @@ def run_workload(cluster, workload: str, num_ops: int,
             ops += 1
         return ops, w
 
-    buf: list[tuple] = []
-    buf_kind: str | None = None
+    window: list[tuple] = []          # (kind, key, val) in arrival order
+    in_window: dict[bytes, str] = {}  # key -> kind currently buffered
     flushes = 0
 
     def flush():
-        nonlocal buf, buf_kind, flushes
-        if not buf:
+        nonlocal window, in_window, flushes
+        if not window:
             return
         pid = flushes % num_proxies
         flushes += 1
-        if buf_kind == "get":
-            cluster.multi_get([k for k, _ in buf], proxy_id=pid)
-        elif buf_kind == "set":
-            cluster.multi_set(buf, proxy_id=pid)
-        elif buf_kind == "update":
-            cluster.multi_update(buf, proxy_id=pid)
-        buf = []
+        by_kind: dict[str, list] = {}
+        for kind, key, val in window:   # kinds keep first-arrival order
+            by_kind.setdefault(kind, []).append((key, val))
+        for kind, items in by_kind.items():
+            if kind == "get":
+                cluster.multi_get([k for k, _ in items], proxy_id=pid)
+            elif kind == "set":
+                cluster.multi_set(items, proxy_id=pid)
+            elif kind == "update":
+                cluster.multi_update(items, proxy_id=pid)
+        window = []
+        in_window = {}
 
     for kind, key, val in stream:
-        if kind != buf_kind or len(buf) >= batch_size:
+        # same-kind repeats of a key are safe inside one multi_* call
+        # (the batched paths defer duplicates in order); a kind *switch*
+        # on a buffered key would reorder a read against a write
+        prev = in_window.get(key)
+        if (prev is not None and prev != kind) or len(window) >= batch_size:
             flush()
-            buf_kind = kind
-        buf.append((key, val))
+        window.append((kind, key, val))
+        in_window[key] = kind
         ops += 1
     flush()
     return ops, w

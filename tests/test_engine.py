@@ -137,6 +137,68 @@ def test_decode_beyond_tolerance_raises(rng):
             make_engine(backend, code).decode_batch(avail, [[8]], 64)
 
 
+# ---------------------------------------------------------------------------
+# full cross-backend parity grid: numpy / jax / pallas must be pairwise
+# byte-identical for encode, decode, AND delta over every scheme at
+# several chunk sizes and batch shapes — one parametrized matrix, the
+# regression gate for any new backend or kernel change.
+# ---------------------------------------------------------------------------
+GRID_SCHEMES = {
+    ("rs", 10, 8): (37, 64, 129),
+    ("xor", 9, 8): (41, 96),
+    ("rdp", 10, 8): (64, 160),
+    ("none", 10, 10): (33, 64),
+}
+GRID_BATCHES = (1, 5)
+
+
+def _grid_cases():
+    for (scheme, n, k), widths in GRID_SCHEMES.items():
+        for C in widths:
+            for B in GRID_BATCHES:
+                yield scheme, n, k, C, B
+
+
+@pytest.mark.parametrize("scheme,n,k,C,B", _grid_cases())
+def test_backends_pairwise_identical_grid(scheme, n, k, C, B, engines, rng):
+    code = make_code(scheme, n, k)
+    engs = engines(scheme, n, k)
+    data = rng.integers(0, 256, (B, code.k, C), dtype=np.uint8)
+
+    encoded = {b: e.encode_batch(data) for b, e in engs.items()}
+    ref = encoded["numpy"]
+    for b, got in encoded.items():
+        assert got.dtype == np.uint8 and got.shape == (B, code.m, C), b
+        assert np.array_equal(got, ref), ("encode", b, scheme, C, B)
+
+    if code.m:
+        idx = rng.integers(0, code.k, B)
+        xors = rng.integers(0, 256, (B, C), dtype=np.uint8)
+        deltas = {b: e.delta_batch(idx, xors) for b, e in engs.items()}
+        applied = {b: e.apply_delta_batch(ref, idx, xors)
+                   for b, e in engs.items()}
+        for b in engs:
+            assert np.array_equal(deltas[b], deltas["numpy"]), \
+                ("delta", b, scheme, C, B)
+            assert np.array_equal(applied[b], applied["numpy"]), \
+                ("apply", b, scheme, C, B)
+
+        stripes = np.concatenate([data, ref], axis=1)
+        erased = sorted(rng.choice(code.n, size=code.m,
+                                   replace=False).tolist())
+        avail = [{i: stripes[b2, i] for i in range(code.n)
+                  if i not in erased} for b2 in range(B)]
+        wanted = [list(erased)] * B
+        decoded = {b: e.decode_batch(avail, wanted, C)
+                   for b, e in engs.items()}
+        for b in engs:
+            for b2 in range(B):
+                for w in erased:
+                    assert np.array_equal(decoded[b][b2][w],
+                                          decoded["numpy"][b2][w]), \
+                        ("decode", b, scheme, C, B, b2, w)
+
+
 def test_make_engine_selection(monkeypatch):
     code = make_code("rs", 10, 8)
     assert isinstance(make_engine("numpy", code), NumpyEngine)
@@ -146,6 +208,8 @@ def test_make_engine_selection(monkeypatch):
     assert isinstance(make_engine(None, code), JaxEngine)
     monkeypatch.delenv("MEMEC_ENGINE")
     assert isinstance(make_engine(None, code), NumpyEngine)
+    # per-shard comma lists collapse to their first entry here
+    assert isinstance(make_engine("jax,numpy", code), JaxEngine)
     with pytest.raises(ValueError):
         make_engine("isal", code)
     assert set(ENGINES) == {"numpy", "jax", "pallas"}

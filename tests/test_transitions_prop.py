@@ -1,0 +1,285 @@
+"""Property-based graceful-transition tests (paper §5).
+
+Random interleavings of ``fail_server``/``restore_server`` with
+set/get/update traffic — across shards, with up to m concurrent failures
+per shard — must never lose an acknowledged write, and once every server
+is restored all reads must converge back to decentralized normal-mode
+handling.  Plus targeted regressions for the transition hardening the
+interleavings exposed: redirect-target handoff on cascading failures,
+sticky degraded routing, degraded upserts, and shadow-replica migration
+under double parity failure.
+"""
+import zlib
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
+
+from repro.core import MemECCluster, ServerState, ShardedCluster
+
+# rs(4,2): m = 2 concurrent failures tolerated per shard
+KW = dict(num_servers=8, num_proxies=2, scheme="rs", n=4, k=2, c=6,
+          chunk_size=256, max_unsealed=2, mapping_ckpt_every=16)
+M = 2
+KEYSPACE = [b"pk%05d" % i for i in range(48)]
+
+
+def value_for(key: bytes, version: int) -> bytes:
+    """Deterministic value; size fixed per key (paper §4.2 fixed-size
+    updates), content varies with the version."""
+    size = 8 if key[-1] % 2 else 24
+    # crc32, not hash(): stable across interpreters so failing examples
+    # replay with identical bytes regardless of PYTHONHASHSEED
+    rng = np.random.default_rng(zlib.crc32(key + b"|%d" % version))
+    return bytes(rng.integers(0, 256, size, dtype=np.uint8))
+
+
+class Driver:
+    """Applies a drawn op sequence to a cluster while tracking the model
+    state (acked writes) and per-shard failure sets."""
+
+    def __init__(self, num_shards: int):
+        self.cl = ShardedCluster(shards=num_shards, **KW)
+        self.num_shards = num_shards
+        self.model: dict[bytes, bytes] = {}
+        self.failed: dict[int, set[int]] = {s: set()
+                                            for s in range(num_shards)}
+        self.version = 0
+
+    def step(self, data):
+        op = data.draw(st.sampled_from(
+            ("set", "set", "update", "update", "get", "get",
+             "fail", "restore")), label="op")
+        if op == "set":
+            key = data.draw(st.sampled_from(KEYSPACE), label="key")
+            self.version += 1
+            val = value_for(key, self.version)
+            assert self.cl.set(key, val) is True  # acked
+            self.model[key] = val
+        elif op == "update":
+            if not self.model:
+                return
+            key = data.draw(st.sampled_from(sorted(self.model)),
+                            label="ukey")
+            self.version += 1
+            val = value_for(key, self.version)
+            assert self.cl.update(key, val) is True  # acked
+            self.model[key] = val
+        elif op == "get":
+            key = data.draw(st.sampled_from(KEYSPACE), label="gkey")
+            assert self.cl.get(key) == self.model.get(key)
+        elif op == "fail":
+            shard = data.draw(st.integers(0, self.num_shards - 1),
+                              label="fshard")
+            live = [s for s in range(self.cl.servers_per_shard)
+                    if s not in self.failed[shard]]
+            if len(self.failed[shard]) >= M or not live:
+                return
+            sid = data.draw(st.sampled_from(live), label="fsid")
+            self.cl.fail_server(sid, shard=shard)
+            self.failed[shard].add(sid)
+        elif op == "restore":
+            down = [(sh, s) for sh, ss in self.failed.items() for s in ss]
+            if not down:
+                return
+            shard, sid = data.draw(st.sampled_from(down), label="rsid")
+            self.cl.restore_server(sid, shard=shard)
+            self.failed[shard].discard(sid)
+
+    def finish(self):
+        """Restore everything, then check convergence + no lost writes."""
+        for shard, ss in self.failed.items():
+            for sid in sorted(ss):
+                self.cl.restore_server(sid, shard=shard)
+            ss.clear()
+        for sh in self.cl.shards:
+            for s in range(self.cl.servers_per_shard):
+                assert sh.coordinator.state_of(s) == ServerState.NORMAL
+        degraded_before = self.cl.stats["degraded_requests"]
+        for key in KEYSPACE:
+            assert self.cl.get(key) == self.model.get(key), key
+        # normal-mode convergence: the verification sweep must not have
+        # needed a single coordinated (degraded) request
+        assert self.cl.stats["degraded_requests"] == degraded_before
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.data())
+def test_random_interleavings_never_lose_acked_writes_sharded(data):
+    d = Driver(num_shards=2)
+    for _ in range(50):
+        d.step(data)
+    d.finish()
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.data())
+def test_random_interleavings_never_lose_acked_writes_unsharded(data):
+    d = Driver(num_shards=1)
+    for _ in range(40):
+        d.step(data)
+    d.finish()
+
+
+@pytest.mark.slow
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_random_interleavings_long_sharded(data):
+    """Longer soak variant (scripts/verify.sh --slow)."""
+    d = Driver(num_shards=3)
+    for _ in range(90):
+        d.step(data)
+    d.finish()
+
+
+# ---------------------------------------------------------------------------
+# targeted hardening regressions (single unsharded cluster = one shard)
+# ---------------------------------------------------------------------------
+
+def make_store(**kw):
+    merged = dict(KW)
+    merged.update(kw)
+    return MemECCluster(**merged)
+
+
+def load_some(cl, n=300, seed=0, prefix=b"hk"):
+    rng = np.random.default_rng(seed)
+    kv = {}
+    for i in range(n):
+        k = prefix + b"%05d" % i
+        v = bytes(rng.integers(0, 256, 8 if i % 2 else 24, dtype=np.uint8))
+        assert cl.set(k, v)
+        kv[k] = v
+    return kv, rng
+
+
+class TestRedirectHandoff:
+    def _key_on(self, cl, sid):
+        for i in range(10 ** 4):
+            k = b"nk%05d" % i
+            if cl.mapper.data_server_for(k)[1] == sid and \
+                    cl.servers[sid].lookup(k) is None:
+                return k
+        raise AssertionError("no key found")
+
+    def test_degraded_set_survives_redirect_target_failure(self):
+        """fail(A) -> degraded SET lands at A's redirect target -> the
+        target itself fails: the acked write must be handed off, not
+        stranded (the cascading-failure interleaving)."""
+        cl = make_store()
+        load_some(cl)
+        ds = 0
+        cl.fail_server(ds)
+        key = self._key_on(cl, ds)
+        sl, _ = cl.mapper.data_server_for(key)
+        assert cl.set(key, b"degraded!") is True          # acked
+        r = cl.coordinator.redirected_server(sl, ds)
+        assert key in cl.redirect[r].temp_objects
+        cl.fail_server(r)                                  # cascade
+        assert cl.stats["redirect_handoffs"] > 0
+        assert cl.get(key) == b"degraded!"                 # still served
+        cl.restore_server(ds)
+        cl.restore_server(r)
+        assert cl.get(key) == b"degraded!"                 # migrated back
+
+    def test_recon_chunks_hand_off_with_updates(self):
+        """Dirty reconstructed chunks (degraded updates applied) follow
+        the redirect reassignment when their host fails."""
+        cl = make_store(max_unsealed=1)
+        kv, rng = load_some(cl, 400, seed=1)
+        ds = 1
+        sealed_key = next(
+            k for k in kv
+            if cl.mapper.data_server_for(k)[1] == ds
+            and cl.servers[ds].sealed[cl.servers[ds].lookup(k).chunk_local_idx])
+        sl, _ = cl.mapper.data_server_for(sealed_key)
+        cl.fail_server(ds)
+        newval = bytes(rng.integers(0, 256, len(kv[sealed_key]),
+                                    dtype=np.uint8))
+        assert cl.update(sealed_key, newval) is True
+        r = cl.coordinator.redirected_server(sl, ds)
+        cl.fail_server(r)
+        assert cl.get(sealed_key) == newval
+        cl.restore_server(ds)
+        cl.restore_server(r)
+        assert cl.get(sealed_key) == newval
+        for k, v in kv.items():
+            if k != sealed_key:
+                assert cl.get(k) == v
+
+
+class TestStickyRedirect:
+    def test_restore_of_bystander_does_not_move_redirect(self):
+        """Restoring an unrelated server must not re-rank the redirect
+        choice for a still-failed server (state would be stranded)."""
+        cl = make_store()
+        load_some(cl)
+        a, b = 0, 1
+        cl.fail_server(b)      # b down first
+        cl.fail_server(a)      # a's redirect choice now avoids b
+        key = None
+        for i in range(10 ** 4):
+            k = b"sr%05d" % i
+            if cl.mapper.data_server_for(k)[1] == a:
+                key = k
+                break
+        sl, _ = cl.mapper.data_server_for(key)
+        assert cl.set(key, b"sticky") is True
+        r_before = cl.coordinator.redirected_server(sl, a)
+        cl.restore_server(b)   # bystander comes back
+        assert cl.coordinator.redirected_server(sl, a) == r_before
+        assert cl.get(key) == b"sticky"
+        cl.restore_server(a)
+        assert cl.get(key) == b"sticky"
+        assert not cl.coordinator.redirect_assignments
+
+
+class TestDegradedUpsert:
+    def test_set_existing_key_with_failed_parity_is_upsert(self):
+        """SET of an existing key while a parity server is down must not
+        leave the key in two chunk slots (parity-rebuild corruption)."""
+        cl = make_store(verify_rebuild=True)
+        kv, _ = load_some(cl, 200, seed=2)
+        key = next(iter(kv))
+        sl, ds = cl.mapper.data_server_for(key)
+        p = sl.parity_servers[0]
+        cl.fail_server(p)
+        newval = bytes(len(kv[key]))
+        assert cl.set(key, newval) is True     # upsert, degraded
+        assert cl.get(key) == newval
+        cl.restore_server(p)
+        assert cl.get(key) == newval
+        # force remaining chunks sealed via fresh traffic; rebuild checks
+        # (verify_rebuild) assert parity equality throughout
+        load_some(cl, 150, seed=3, prefix=b"up")
+        assert cl.get(key) == newval
+
+
+class TestDoubleParityFailure:
+    def test_shadow_replicas_reach_both_restored_parities(self):
+        """With both parity servers of a list down, one shadow replica
+        entry must migrate to each on restore — else the later seal
+        rebuild finds a missing replica."""
+        cl = make_store()
+        kv, rng = load_some(cl, 120, seed=4)
+        # find an unsealed object => its replica lives on parity servers
+        key = next(k for k in kv
+                   if not cl.servers[cl.mapper.data_server_for(k)[1]].sealed[
+                       cl.servers[cl.mapper.data_server_for(k)[1]]
+                       .lookup(k).chunk_local_idx])
+        sl, ds = cl.mapper.data_server_for(key)
+        p1, p2 = sl.parity_servers
+        cl.fail_server(p1)
+        cl.fail_server(p2)
+        newval = bytes(rng.integers(0, 256, len(kv[key]), dtype=np.uint8))
+        assert cl.update(key, newval) is True   # shadow at redirect target
+        cl.restore_server(p1)
+        cl.restore_server(p2)
+        assert cl.servers[p1].get_replica(key) is not None
+        assert cl.servers[p2].get_replica(key) is not None
+        assert cl.servers[p1].get_replica(key)[0] == newval
+        assert cl.servers[p2].get_replica(key)[0] == newval
+        assert cl.get(key) == newval
+        # now seal the chunk: rebuild must find every replica
+        load_some(cl, 200, seed=5, prefix=b"xs")
+        assert cl.get(key) == newval
