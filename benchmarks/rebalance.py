@@ -1,0 +1,134 @@
+"""Elastic placement benchmarks: migration cost, liveness, skew escape.
+
+Three experiments over the new placement subsystem (core/ring.py +
+core/rebalance.py):
+
+1. **Scale-out movement** — ``add_shard`` on a ring placement must move
+   ~1/(S+1) of resident bytes; the FNV-mod placement (the naive
+   full-reshuffle baseline) moves ~S/(S+1).  Reported as the fraction of
+   resident payload bytes migrated, plus the chunk-fetch overhead of
+   moving sealed objects chunk-wise.
+2. **Throughput during live migration** — a YCSB window interleaves with
+   the migration at every batch boundary; every GET must succeed
+   (acceptance: zero failed gets mid-migration) and the modeled
+   sequential throughput during the window is compared to the
+   pre-migration baseline.
+3. **Hot-shard escape** — the skewed-workload axis
+   (``run_workload(hot_shard=...)``) parks the Zipf-hot ranks on one
+   shard; ``rebalance()`` shifts ring weights inversely to load and the
+   post-rebalance window's load skew (max/mean shard ops) is compared to
+   the pre-rebalance one.
+"""
+from __future__ import annotations
+
+from repro.data.ycsb import (YCSBConfig, YCSBWorkload, hot_shard_id_map,
+                             run_workload)
+
+from .common import cluster_metrics, emit, modeled_seq_kops
+
+import os
+
+FAST = bool(os.environ.get("MEMEC_BENCH_FAST"))
+N_OBJECTS = 1500 if FAST else 4000
+OPS = 800 if FAST else 2500
+SHARDS = 3
+KW = dict(num_servers=10, num_proxies=2, scheme="rs", n=4, k=2, c=8,
+          chunk_size=512, max_unsealed=2)
+BATCH = 16
+
+
+def _make(placement):
+    from repro.core import make_cluster
+    return make_cluster(shards=SHARDS, placement=placement, **KW)
+
+
+def _load(cl, cfg):
+    run_workload(cl, "load", 0, cfg, batch_size=BATCH)
+
+
+def scale_out_movement():
+    cfg = YCSBConfig(num_objects=N_OBJECTS, seed=11)
+    frac = {}
+    for placement in ("ring", "mod"):
+        cl = _make(placement)
+        _load(cl, cfg)
+        resident = cl.stored_payload_bytes()
+        rep = cl.add_shard()
+        frac[placement] = rep["moved_bytes"] / resident
+        emit(f"rebalance/add_shard_{placement}",
+             rep["t_modeled_s"] * 1e6,
+             f"moved_frac={frac[placement]:.3f} keys={rep['moved_keys']} "
+             f"chunk_fetch_B={rep['chunk_fetch_bytes']}")
+        # data plane stays intact after the migration
+        w = YCSBWorkload(cfg)
+        keys = [w.key(i) for i in range(0, cfg.num_objects, 7)]
+        assert all(v is not None for v in cl.multi_get(keys))
+    # acceptance: ring ≈ 1/(S+1) of resident bytes, far below the naive
+    # full reshuffle (mod ≈ S/(S+1))
+    bound = 1.0 / (SHARDS + 1) + 0.08
+    assert frac["ring"] <= bound, \
+        f"ring moved {frac['ring']:.3f} > {bound:.3f} of resident bytes"
+    assert frac["ring"] < 0.5 * frac["mod"], "ring should beat full reshuffle"
+    emit("rebalance/ring_vs_reshuffle", 0.0,
+         f"ring={frac['ring']:.3f} mod={frac['mod']:.3f} "
+         f"bound={bound:.3f} OK")
+
+
+def throughput_during_migration():
+    cfg = YCSBConfig(num_objects=N_OBJECTS, seed=12)
+    cl = _make("ring")
+    _load(cl, cfg)
+    w = YCSBWorkload(cfg)
+    probe = [w.key(i) for i in range(0, cfg.num_objects, 5)]
+
+    # pre-migration baseline window
+    cl.net.reset()
+    ops, _ = run_workload(cl, "B", OPS, cfg, batch_size=BATCH)
+    base_kops = modeled_seq_kops(cl, ops)
+
+    # migration with a live YCSB window interleaved at batch boundaries
+    cl.net.reset()
+    failed_gets = 0
+    windows = 0
+
+    def cb(progress):
+        nonlocal failed_gets, windows
+        got = cl.multi_get(probe)
+        failed_gets += sum(v is None for v in got)
+        windows += 1
+
+    rep = cl.add_shard(batch_size=32, step_cb=cb)
+    live_ops = windows * len(probe)
+    live_kops = modeled_seq_kops(cl, live_ops)  # includes MIGRATE time
+    emit("rebalance/live_migration", rep["t_modeled_s"] * 1e6,
+         f"failed_gets={failed_gets} windows={windows} "
+         f"kops_before={base_kops:.1f} kops_during={live_kops:.1f} "
+         f"moved={rep['moved_keys']}")
+    assert failed_gets == 0, "gets failed during live migration"
+
+
+def hot_shard_escape():
+    cfg = YCSBConfig(num_objects=N_OBJECTS, seed=13)
+    cl = _make("ring")
+    _load(cl, cfg)
+    # fixed hot key set: Zipf-hot ranks parked on shard 1's residents
+    # (the map stays constant across the rebalance — hot keys belong to
+    # the traffic, and the rebalance disperses those keys across shards)
+    id_map = hot_shard_id_map(cl, cfg, hot_shard=1)
+    cl.reset_load()
+    run_workload(cl, "B", OPS, cfg, batch_size=BATCH, id_map=id_map)
+    before = cl.load_skew()
+    rep = cl.rebalance(skew_threshold=1.1)
+    run_workload(cl, "B", OPS, cfg, batch_size=BATCH, id_map=id_map)
+    after = cl.load_skew()
+    m = cluster_metrics(cl, OPS, kinds=("GET",))
+    emit("rebalance/hot_shard_escape", rep.get("t_modeled_s", 0.0) * 1e6,
+         f"skew_before={before:.2f} skew_after={after:.2f} "
+         f"moved={rep['moved_keys']} kops={m['modeled_kops']:.1f}")
+    assert after < before, "rebalance failed to reduce load skew"
+
+
+def run():
+    scale_out_movement()
+    throughput_during_migration()
+    hot_shard_escape()

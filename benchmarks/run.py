@@ -12,7 +12,8 @@ import sys
 import time
 
 MODULES = ["redundancy", "throughput", "coding_schemes", "value_sizes",
-           "degraded", "transitions", "kernels_bench", "roofline"]
+           "degraded", "transitions", "rebalance", "kernels_bench",
+           "roofline"]
 
 
 def main() -> None:

@@ -54,6 +54,31 @@ def main():
           "other shards stayed decentralized")
     sc.restore_server(victim, shard=2)
 
+    # --- 3b. elastic placement: grow the cluster + escape a hot shard ---
+    ec = make_cluster(shards=3, placement="ring", num_servers=16,
+                      scheme="rs", n=10, k=8, c=4, chunk_size=512,
+                      max_unsealed=1)
+    items = [(b"el%07d" % i, rng.bytes(24)) for i in range(4000)]
+    for i in range(0, len(items), 64):
+        ec.multi_set(items[i:i + 64])
+    rep = ec.add_shard()                    # live migration, ~1/S of keys
+    print(f"add_shard: moved {rep['moved_keys']} keys "
+          f"({rep['moved_bytes']} B, {rep['move_fraction']:.0%} of "
+          "residents) — consistent hashing, not a reshuffle")
+    ec.reset_load()
+    hot = [k for k, _ in items if ec.shard_of(k) == 0][:400]
+    for _ in range(4):
+        ec.multi_get(hot)                   # hammer shard 0
+    print(f"load skew before rebalance: {ec.load_skew():.2f} "
+          f"(shard ops {ec.stats['shard_ops']})")
+    rep = ec.rebalance(skew_threshold=1.2)  # shed the hot shard's arcs
+    for _ in range(4):
+        ec.multi_get(hot)
+    print(f"rebalance moved {rep['moved_keys']} keys; "
+          f"skew after: {ec.load_skew():.2f}")
+    assert ec.multi_get([k for k, _ in items[:64]]) == \
+        [v for _, v in items[:64]]          # nothing lost along the way
+
     # --- 4. the TPU data plane: Pallas GF(2^8) kernels ---
     code = RSCode(n=10, k=8)
     data = jnp.asarray(rng.integers(0, 256, (8, 4096), dtype=np.uint8))

@@ -63,6 +63,46 @@ assert s4.multi_get(keys) == s1.multi_get(keys)
 print("shard-equivalence smoke: OK "
       f"(overlap saved {s4.stats['pipeline_overlap_saved_s']*1e3:.1f} modeled ms)")
 EOF
+
+    # elastic scale-out smoke: grow a ring-placed cluster S=2 -> 4 while
+    # a YCSB window keeps running between migration batches; the scaled
+    # cluster must stay byte-identical with an unscaled reference served
+    # the exact same op stream, and no get may fail mid-migration.
+    python - <<'EOF'
+from repro.core import make_cluster
+from repro.data.ycsb import YCSBConfig, YCSBWorkload, run_workload
+
+kw = dict(num_servers=16, scheme="rs", n=10, k=8, c=16,
+          chunk_size=512, max_unsealed=2, placement="ring")
+cfg = YCSBConfig(num_objects=1000, seed=9)
+ref = make_cluster(shards=2, **kw)
+cl = make_cluster(shards=2, **kw)
+for c in (ref, cl):
+    run_workload(c, "load", 0, cfg, batch_size=16)
+    run_workload(c, "A", 800, cfg, batch_size=16)
+w = YCSBWorkload(cfg)
+keys = [w.key(i) for i in range(cfg.num_objects)]
+state = {"windows": 0, "failed_gets": 0}
+
+def window(p):
+    # the live YCSB window: both clusters serve the same ops mid-move
+    wcfg = YCSBConfig(num_objects=cfg.num_objects, seed=100 + state["windows"])
+    for c in (ref, cl):
+        run_workload(c, "C", 120, wcfg, batch_size=16)
+    got = cl.multi_get(keys[:: 5])
+    state["failed_gets"] += sum(v is None for v in got)
+    state["windows"] += 1
+
+r1 = cl.add_shard(batch_size=48, step_cb=window)   # S=2 -> 3
+r2 = cl.add_shard(batch_size=48, step_cb=window)   # S=3 -> 4
+assert cl.num_shards == 4 and r1["pending_left"] == r2["pending_left"] == 0
+assert state["failed_gets"] == 0, "gets failed during live migration"
+assert cl.multi_get(keys) == ref.multi_get(keys), "scale-out equivalence broken"
+moved = cl.stats["migration_bytes"] / max(cl.stored_payload_bytes(), 1)
+print(f"elastic scale-out smoke: OK (S=2->4, {state['windows']} live "
+      f"windows, {cl.stats['migrated_keys']} keys moved, "
+      f"{moved:.0%} of resident bytes)")
+EOF
 fi
 
 if [ -z "${SKIP_BENCH:-}" ]; then

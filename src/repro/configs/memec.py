@@ -31,6 +31,11 @@ class MemECConfig:
     # shard; each shard is an independent paper-testbed cluster).  1 =
     # the paper's single unsharded cluster; None defers to $MEMEC_SHARDS.
     shards: int | None = 1
+    # key->shard placement policy (core/ring.py): "mod" (historical
+    # FNV-mod), "ring" / "ring:<vnodes>" (elastic consistent-hash ring —
+    # required for add_shard/remove_shard/rebalance).  None defers to
+    # $MEMEC_PLACEMENT, default "mod".
+    placement: str | None = None
 
 
 CONFIG = MemECConfig()
@@ -42,6 +47,6 @@ def make_configured_cluster(cfg: MemECConfig = CONFIG, **overrides):
     kw = dict(num_servers=cfg.num_servers, num_proxies=cfg.num_proxies,
               scheme=cfg.scheme, n=cfg.n, k=cfg.k, c=cfg.c,
               chunk_size=cfg.chunk_size, max_unsealed=cfg.max_unsealed,
-              engine=cfg.engine, shards=cfg.shards)
+              engine=cfg.engine, shards=cfg.shards, placement=cfg.placement)
     kw.update(overrides)
     return make_cluster(**kw)

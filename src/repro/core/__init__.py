@@ -21,6 +21,13 @@ Layers:
   across shards with pipelined scatter/gather, and scopes failure
   recovery per shard.  `make_cluster(shards=... )` / `$MEMEC_SHARDS`;
   S=1 returns the plain `MemECCluster`;
+* ring / rebalance — the elastic placement subsystem: pluggable
+  `Placement` routing (FNV-mod or a deterministic consistent-hash ring
+  with vnodes + weights, `placement=` / `$MEMEC_PLACEMENT`), live stripe
+  migration (`Rebalancer`: chunk-wise moves through the engine/netsim
+  paths, redirect-style forwarding keeps every key readable
+  mid-migration), and skew-aware rebalancing via
+  `ShardedCluster.add_shard/remove_shard/rebalance`;
 * baselines — all-replication + hybrid-encoding comparison stores (§3.1);
 * analysis — the redundancy formulas of §3.3 (Figure 2).
 """
@@ -36,6 +43,8 @@ from .engine import engine_specs
 from .index import CuckooIndex
 from .netsim import CostModel, Leg, NetSim
 from .proxy import Proxy
+from .rebalance import MigrationPlan, Rebalancer
+from .ring import (ModPlacement, Placement, RingPlacement, make_placement)
 from .server import Server
 from .shard import (ShardedCluster, ShardedNet, make_cluster, resolve_shards,
                     shard_for_key)
@@ -52,4 +61,6 @@ __all__ = [
     "Leg", "NetSim", "Proxy", "Server", "MemECCluster", "PartialFailure",
     "ShardedCluster", "ShardedNet", "make_cluster", "resolve_shards",
     "shard_for_key", "StripeList", "StripeMapper", "generate_stripe_lists",
+    "Placement", "ModPlacement", "RingPlacement", "make_placement",
+    "Rebalancer", "MigrationPlan",
 ]

@@ -35,10 +35,13 @@ class Coordinator:
         self.shard_id = shard_id  # None for the unsharded cluster
         self.states: dict[int, ServerState] = {
             s: ServerState.NORMAL for s in range(num_servers)}
-        # key -> chunk-ID mapping checkpoints, per server (§5.3)
-        self.mapping_ckpt: dict[int, dict[bytes, ChunkId]] = defaultdict(dict)
+        # key -> (chunk-ID, instance seq) mapping checkpoints, per server
+        # (§5.3); the instance seq orders re-SETs of the same key so the
+        # recovery merge below can never resurrect a superseded mapping
+        self.mapping_ckpt: dict[int, dict[bytes, tuple[ChunkId, int | None]]] = \
+            defaultdict(dict)
         # merged (checkpoint + proxy buffers) view built at failure time
-        self.recovery_mappings: dict[int, dict[bytes, ChunkId]] = {}
+        self.recovery_mappings: dict[int, dict[bytes, tuple[ChunkId, int | None]]] = {}
         # (state name, server, shard, logical step) — deterministic audit
         # trail for the transition tests; no wall clock on purpose
         self.transition_log: list[tuple[str, int, int | None, int]] = []
@@ -71,21 +74,41 @@ class Coordinator:
         return any(st != ServerState.NORMAL for st in self.states.values())
 
     # -- mapping checkpoints -------------------------------------------------
-    def store_checkpoint(self, sid: int, mappings: list[tuple[bytes, ChunkId]]):
+    @staticmethod
+    def _newer(cur: tuple[ChunkId, int | None] | None,
+               iseq: int | None) -> bool:
+        """Does a mapping with instance seq ``iseq`` supersede ``cur``?
+        Unversioned entries (None) never beat a versioned one."""
+        if cur is None:
+            return True
+        cur_iseq = cur[1]
+        if cur_iseq is None:
+            return True
+        return iseq is not None and iseq >= cur_iseq
+
+    def store_checkpoint(self, sid: int,
+                         mappings: list[tuple[bytes, ChunkId, int | None]]):
         d = self.mapping_ckpt[sid]
-        for key, cid in mappings:
-            d[key] = cid
+        for key, cid, iseq in mappings:
+            if self._newer(d.get(key), iseq):
+                d[key] = (cid, iseq)
 
     def merge_proxy_mappings(self, sid: int,
-                             proxy_maps: list[list[tuple[bytes, ChunkId]]]):
+                             proxy_maps: list[list[tuple[bytes, ChunkId, int | None]]]):
+        """Merge checkpointed + proxy-buffered mappings at failure time.
+        Different proxies may buffer mappings for *different instances*
+        of the same re-SET key; the instance seq, not merge order,
+        decides which chunk the degraded path should resolve to."""
         merged = dict(self.mapping_ckpt.get(sid, {}))
         for pm in proxy_maps:
-            for key, cid in pm:
-                merged[key] = cid
+            for key, cid, iseq in pm:
+                if self._newer(merged.get(key), iseq):
+                    merged[key] = (cid, iseq)
         self.recovery_mappings[sid] = merged
 
     def chunk_id_for(self, sid: int, key: bytes) -> ChunkId | None:
-        return self.recovery_mappings.get(sid, {}).get(key)
+        ent = self.recovery_mappings.get(sid, {}).get(key)
+        return ent[0] if ent is not None else None
 
     # -- degraded routing (§5.4) ---------------------------------------------
     def redirected_server(self, sl: StripeList, failed_sid: int) -> int:

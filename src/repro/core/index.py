@@ -154,6 +154,12 @@ class CuckooIndex:
         for k, v in old:
             self.insert(k, v)
 
+    def keys(self) -> list[bytes]:
+        """Every stored key (arbitrary order; callers sort for
+        determinism).  Used by migration planning to enumerate a server's
+        resident objects."""
+        return [k for k, _ in self.slot_data.values()]
+
     @property
     def occupancy(self) -> float:
         return self.size / (self.num_buckets * SLOTS_PER_BUCKET)

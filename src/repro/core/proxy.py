@@ -39,8 +39,10 @@ class Proxy:
         self.pending: dict[int, PendingRequest] = {}
         self.acked: set[int] = set()
         self.ack_watermark = 0  # all seqs <= watermark are acked
-        # key -> chunk-ID mapping backups, per data server (§5.3)
-        self.mapping_buffer: dict[int, list[tuple[bytes, ChunkId]]] = {}
+        # key -> chunk-ID mapping backups, per data server (§5.3); the
+        # SET ack piggybacks the instance seq so recovery merges across
+        # proxies keep the newest instance of a re-SET key
+        self.mapping_buffer: dict[int, list[tuple[bytes, ChunkId, int | None]]] = {}
 
     # -- sequencing ------------------------------------------------------
     def next_seq(self) -> int:
@@ -65,11 +67,12 @@ class Proxy:
         return set(self.pending.keys())
 
     # -- mapping backups ---------------------------------------------------
-    def buffer_mapping(self, server_id: int, key: bytes, cid: ChunkId):
-        self.mapping_buffer.setdefault(server_id, []).append((key, cid))
+    def buffer_mapping(self, server_id: int, key: bytes, cid: ChunkId,
+                       iseq: int | None = None):
+        self.mapping_buffer.setdefault(server_id, []).append((key, cid, iseq))
 
     def clear_mappings(self, server_id: int):
         self.mapping_buffer.pop(server_id, None)
 
-    def mappings_for(self, server_id: int) -> list[tuple[bytes, ChunkId]]:
+    def mappings_for(self, server_id: int) -> list[tuple[bytes, ChunkId, int | None]]:
         return list(self.mapping_buffer.get(server_id, []))

@@ -42,11 +42,19 @@ class UnsealedChunk:
 
 @dataclasses.dataclass
 class SealEvent:
-    """Emitted when a data chunk seals; the network carries keys only."""
+    """Emitted when a data chunk seals; the network carries keys only.
+
+    ``iseqs`` (aligned with ``ordered_keys``) are the per-instance
+    sequence numbers the data server assigned at SET time: a key that was
+    deleted and re-SET has several instances in flight (the tombstoned
+    slot in the old unsealed chunk plus the live one), and the parity
+    rebuild must consume each chunk's *own* instance replica regardless
+    of the order the chunks seal in."""
     stripe_list: StripeList
     chunk_id: ChunkId
     ordered_keys: list[bytes]
     payload_bytes: int  # what actually crosses the network
+    iseqs: list[int] | None = None
 
 
 @dataclasses.dataclass
@@ -85,13 +93,30 @@ class Server:
         self.unsealed: dict[int, list[UnsealedChunk]] = defaultdict(list)
         self.stripe_counters: dict[int, int] = defaultdict(int)
 
-        # parity role
+        # parity role: `temp_replicas` holds the LIVE instance per key
+        # (what degraded reads and replica deltas see); a superseded
+        # instance whose unsealed chunk has not sealed yet parks in
+        # `zombie_replicas` under (key, instance seq) until its seal
+        # consumes it — chunks seal in arbitrary (min-free-victim) order,
+        # so instance identity, not recency, picks the rebuild bytes.
         self.temp_replicas: dict[bytes, tuple[bytes, bool]] = {}  # key -> (value, deleted)
+        self.replica_iseq: dict[bytes, int] = {}     # key -> live instance seq
+        self.zombie_replicas: dict[tuple[bytes, int | None],
+                                   tuple[bytes, bool]] = {}
         self.delta_buffer: dict[int, list[DeltaRecord]] = defaultdict(list)
 
-        # key -> chunk-ID mapping log (checkpointed to coordinator §5.3)
-        self.mapping_log: list[tuple[bytes, ChunkId]] = []
+        # key -> chunk-ID mapping log (checkpointed to coordinator §5.3);
+        # entries carry the instance seq so the coordinator's recovery
+        # merge keeps the *newest* instance when a key was re-SET into a
+        # different chunk (delete/re-add churn, shard migration)
+        self.mapping_log: list[tuple[bytes, ChunkId, int]] = []
         self.mappings_since_ckpt = 0
+
+        # data role: per-SET instance sequence numbers, (chunk slot,
+        # offset) -> iseq, piggybacked on seal events so parity replica
+        # consumption matches instances (see SealEvent.iseqs)
+        self.obj_seq = 0
+        self._iseq: dict[tuple[int, int], int] = {}
 
         # stats
         self.seals = 0
@@ -140,8 +165,10 @@ class Server:
         self.sealed[uc.local_idx] = True
         self.seals += 1
         keys = [k for k, _ in uc.builder.objects]
+        iseqs = [self._iseq.pop((uc.local_idx, off), None)
+                 for _, off in uc.builder.objects]
         payload = sum(len(k) + 1 for k in keys)  # keys (+1B length) only
-        return SealEvent(sl, uc.chunk_id, keys, payload)
+        return SealEvent(sl, uc.chunk_id, keys, payload, iseqs=iseqs)
 
     def set_object(self, sl: StripeList, key: bytes, value: bytes
                    ) -> tuple[ChunkId, int, list[SealEvent]]:
@@ -164,10 +191,20 @@ class Server:
         off = target.builder.append(key, value)
         ref = ObjectRef(target.local_idx, off, len(key), len(value))
         self.object_index.insert(key, ref)
-        self.mapping_log.append((key, target.chunk_id))
+        self._iseq[(target.local_idx, off)] = self.obj_seq
+        self.obj_seq += 1
+        self.mapping_log.append((key, target.chunk_id, self._iseq[(target.local_idx, off)]))
         self.mappings_since_ckpt += 1
         self.bytes_stored += need
         return target.chunk_id, off, events
+
+    def live_iseq(self, key: bytes) -> int | None:
+        """Instance sequence of the key's live (unsealed) slot, if any —
+        what callers pass to the parity servers' ``store_replica``."""
+        ref = self.lookup(key)
+        if ref is None:
+            return None
+        return self._iseq.get((ref.chunk_local_idx, ref.offset))
 
     def lookup(self, key: bytes) -> ObjectRef | None:
         return self.object_index.lookup(key)
@@ -231,11 +268,49 @@ class Server:
     # ------------------------------------------------------------------
     # parity role
     # ------------------------------------------------------------------
-    def store_replica(self, key: bytes, value: bytes):
+    def store_replica(self, key: bytes, value: bytes,
+                      iseq: int | None = None):
+        """Store the live replica of an unsealed object.  When a prior
+        instance of the key is still awaiting its chunk's seal (delete →
+        re-SET while the old chunk never sealed), it parks as a zombie
+        under its own instance seq so the old chunk's rebuild consumes
+        the frozen tombstone, not the new value."""
+        old = self.temp_replicas.get(key)
+        old_iseq = self.replica_iseq.get(key)
+        if old is not None and old_iseq != iseq:
+            # a superseded instance is always a tombstone (set_object
+            # only re-adds a key after delete), so park its final state
+            # even if this copy missed the delete delta (failed parity)
+            self.zombie_replicas[(key, old_iseq)] = \
+                (b"\x00" * len(old[0]), True)
         self.temp_replicas[key] = (value, False)
+        if iseq is None:
+            self.replica_iseq.pop(key, None)
+        else:
+            self.replica_iseq[key] = iseq
 
     def get_replica(self, key: bytes):
         return self.temp_replicas.get(key)
+
+    def _consume_replica(self, key: bytes, iseq: int | None
+                         ) -> tuple[tuple[bytes, bool], bool]:
+        """Replica bytes for instance ``iseq`` of ``key`` at seal time:
+        a parked zombie instance wins; otherwise the live entry must
+        match (or carry no instance id — legacy/shadow-migrated state).
+        Returns (replica, consumed_live)."""
+        if iseq is not None:
+            z = self.zombie_replicas.pop((key, iseq), None)
+            if z is not None:
+                return z, False
+        rep = self.temp_replicas.get(key)
+        live = self.replica_iseq.get(key)
+        if rep is not None and (iseq is None or live is None or live == iseq):
+            return rep, True
+        z = self.zombie_replicas.pop((key, None), None)
+        if z is not None:
+            return z, False
+        raise KeyError(f"parity {self.sid}: missing replica for {key!r} "
+                       f"(instance {iseq}, live {live})")
 
     def _parity_slot_for(self, sl: StripeList, stripe_id: int) -> int:
         ppos = sl.parity_servers.index(self.sid)
@@ -248,23 +323,30 @@ class Server:
 
     def rebuild_seal_chunk(self, ev: SealEvent) -> tuple[int, int, np.ndarray]:
         """Parity role, step 1 of a seal: rebuild the sealed data chunk from
-        replicas, allocate the parity slot, and drop the replicas.  Returns
-        (parity slot, data position, rebuilt chunk); the parity fold itself
-        is batched across seal events by the caller (paper §4.2)."""
+        replicas, allocate the parity slot, and drop the consumed replicas.
+        Returns (parity slot, data position, rebuilt chunk); the parity fold
+        itself is batched across seal events by the caller (paper §4.2).
+
+        Replicas are matched by instance (see ``SealEvent.iseqs``): the
+        seal of an old chunk holding a superseded tombstone consumes that
+        instance's parked zombie replica and leaves the live replica of
+        the key's re-SET instance — still unsealed elsewhere — intact."""
+        iseqs = ev.iseqs or [None] * len(ev.ordered_keys)
         rebuilt = np.zeros(self.chunk_size, np.uint8)
         off = 0
-        for key in ev.ordered_keys:
-            rep = self.temp_replicas.get(key)
-            if rep is None:
-                raise KeyError(f"parity {self.sid}: missing replica for {key!r}")
-            value, deleted = rep
+        consumed_live: list[bytes] = []
+        for key, iseq in zip(ev.ordered_keys, iseqs):
+            (value, deleted), was_live = self._consume_replica(key, iseq)
             blob = pack_object(key, value if not deleted else b"\x00" * len(value),
                                deleted=deleted)
             rebuilt[off: off + len(blob)] = np.frombuffer(blob, np.uint8)
             off += len(blob)
+            if was_live:
+                consumed_live.append(key)
         idx = self._parity_slot_for(ev.stripe_list, ev.chunk_id.stripe_id)
-        for key in ev.ordered_keys:
+        for key in consumed_live:
             self.temp_replicas.pop(key, None)
+            self.replica_iseq.pop(key, None)
         return idx, ev.chunk_id.position, rebuilt
 
     def apply_seal(self, ev: SealEvent) -> np.ndarray:
@@ -350,7 +432,7 @@ class Server:
     def should_checkpoint(self) -> bool:
         return self.mappings_since_ckpt >= self.mapping_ckpt_every
 
-    def take_checkpoint(self) -> list[tuple[bytes, ChunkId]]:
+    def take_checkpoint(self) -> list[tuple[bytes, ChunkId, int]]:
         """Return (and clear) the mappings accumulated since the last
         checkpoint; the coordinator merges them into its persistent view."""
         out = self.mapping_log
@@ -383,6 +465,8 @@ class Server:
         obj_slots = self.object_index.num_buckets * 4
         chk_slots = self.chunk_index.num_buckets * 4
         replica_bytes = sum(len(k) + len(v) + 4 for k, (v, _) in self.temp_replicas.items())
+        replica_bytes += sum(len(k) + len(v) + 4
+                             for (k, _), (v, _) in self.zombie_replicas.items())
         return {
             "chunks": chunk_bytes,
             "chunk_ids": id_bytes,

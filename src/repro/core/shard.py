@@ -24,6 +24,17 @@ global server id (``shard * servers_per_shard + local``) or an explicit
 others — non-failed shards keep serving decentralized normal-mode
 requests throughout.
 
+Key routing goes through a pluggable ``Placement`` policy (core/ring.py):
+the historical FNV-1a-mod map (default, ``placement="mod"``) or a
+consistent-hash ring with virtual nodes and weights (``"ring"`` /
+``$MEMEC_PLACEMENT``).  With a ring the cluster is *elastic*:
+``add_shard``/``remove_shard`` grow or drain membership and
+``rebalance()`` escapes load skew, all executing live stripe migrations
+through ``core/rebalance.py`` — a forwarding table (``_pending``) keeps
+every key readable and writable mid-migration, and per-shard load
+counters (``shard_ops``/``load_skew``) feed both the skew decisions and
+``stats()``/``net.snapshot()``.
+
 The unsharded cluster is the S=1 special case: ``make_cluster`` returns a
 plain ``MemECCluster`` for one shard, so every existing call site keeps
 working; ``shards=`` / ``$MEMEC_SHARDS`` opt in to S>1.
@@ -36,6 +47,7 @@ from concurrent.futures import ThreadPoolExecutor
 
 from .index import fnv1a
 from .netsim import NetSim
+from .ring import make_placement
 from .store import MemECCluster
 
 # dedicated hash seed: shard routing must stay independent of the
@@ -48,7 +60,11 @@ BATCH_KINDS = ("MGET", "MSET", "MUPDATE")
 
 
 def shard_for_key(key: bytes, num_shards: int) -> int:
-    """Hash-partition the key space across shards."""
+    """The historical FNV-1a-mod partition (``ModPlacement``'s formula).
+
+    Kept as the mod-policy primitive; cluster code must route through
+    ``ShardedCluster.shard_of`` / a ``Placement`` (core/ring.py) instead
+    of calling this directly, so elastic placements stay pluggable."""
     if num_shards <= 1:
         return 0
     return fnv1a(key, seed=SHARD_SEED) % num_shards
@@ -121,6 +137,8 @@ class ShardedNet:
         for net in self._shard_nets():
             for kind, n in net.bytes_by_kind.items():
                 out[kind] += n
+        for kind, n in self.local.bytes_by_kind.items():
+            out[kind] += n      # facade-level traffic (stripe migration)
         return dict(out)
 
     @property
@@ -129,6 +147,8 @@ class ShardedNet:
         for net in self._shard_nets():
             for kind, n in net.msgs_by_kind.items():
                 out[kind] += n
+        for kind, n in self.local.msgs_by_kind.items():
+            out[kind] += n
         return dict(out)
 
     @property
@@ -137,6 +157,9 @@ class ShardedNet:
         for i, net in enumerate(self._shard_nets()):
             for ep, n in net.bytes_by_endpoint.items():
                 out[self._prefix(i, ep)] = n
+        for ep, n in self.local.bytes_by_endpoint.items():
+            # facade legs carry pre-namespaced endpoints (sh{i}:..., mig)
+            out[ep] = out.get(ep, 0) + n
         return out
 
     # -- reporting (same formulas as NetSim) ----------------------------
@@ -184,10 +207,14 @@ class ShardedNet:
         self.local.reset()
 
     def snapshot(self) -> dict:
+        # per-shard load + skew ride along so rebalancing decisions and
+        # benchmarks read one source of truth
         return {
             "bytes_by_kind": self.bytes_by_kind,
             "msgs_by_kind": self.msgs_by_kind,
             "bytes_by_endpoint": self.bytes_by_endpoint,
+            "shard_ops": list(self._cl.shard_ops),
+            "load_skew": self._cl.load_skew(),
         }
 
 
@@ -201,9 +228,11 @@ class ShardedCluster:
     """
 
     def __init__(self, shards=None, engine=None, pipeline: bool = True,
-                 **cluster_kw):
+                 placement=None, **cluster_kw):
         from .engine import engine_specs
         self.num_shards = resolve_shards(shards)
+        self._engine_spec = engine
+        self._cluster_kw = dict(cluster_kw)
         specs = engine_specs(engine, self.num_shards)
         self.shards = [MemECCluster(engine=specs[i], shard_id=i, **cluster_kw)
                        for i in range(self.num_shards)]
@@ -217,17 +246,36 @@ class ShardedCluster:
         self.engine = self.engines[0]
         self.pipeline = bool(pipeline) and self.num_shards > 1
         self._stats = {"cross_shard_batches": 0, "pipelined_batches": 0,
-                       "pipeline_overlap_saved_s": 0.0}
+                       "pipeline_overlap_saved_s": 0.0,
+                       "migrations": 0, "migrated_keys": 0,
+                       "migration_bytes": 0, "migration_chunk_bytes": 0}
+        # elastic placement: all key routing flows through the Placement
+        # policy (core/ring.py); retired shard ids leave the policy but
+        # keep their (drained) stores so global server ids stay stable
+        self.placement = make_placement(placement, self.num_shards)
+        self.retired: set[int] = set()
+        # forwarding table for live migration: key -> shard that still
+        # holds its bytes (supersedes the placement until the move lands)
+        self._pending: dict[bytes, int] = {}
+        # per-shard request counters (facade-routed ops) feeding the
+        # load-skew metric and skew-aware rebalancing
+        self.shard_ops: list[int] = [0] * self.num_shards
         self.net = ShardedNet(self)
 
     # ------------------------------------------------------------------
     # routing
     # ------------------------------------------------------------------
     def shard_of(self, key: bytes) -> int:
-        return shard_for_key(key, self.num_shards)
+        if self._pending:
+            si = self._pending.get(key)
+            if si is not None:
+                return si
+        return self.placement.shard_for(key)
 
     def _shard_for(self, key: bytes) -> MemECCluster:
-        return self.shards[self.shard_of(key)]
+        si = self.shard_of(key)
+        self.shard_ops[si] += 1
+        return self.shards[si]
 
     def locate(self, key: bytes):
         """(shard id, stripe list, data server) for a key."""
@@ -257,7 +305,23 @@ class ShardedCluster:
         for sh in self.shards:
             for k, v in sh.stats.items():
                 out[k] = out.get(k, 0) + v
+        out["shard_ops"] = list(self.shard_ops)
+        out["load_skew"] = self.load_skew()
         return out
+
+    def load_skew(self) -> float:
+        """Max/mean facade-routed ops across *active* shards (1.0 =
+        perfectly balanced; the metric skew-aware rebalancing watches)."""
+        loads = [self.shard_ops[s] for s in self.placement.shard_ids
+                 if s < len(self.shard_ops)]
+        total = sum(loads)
+        if not loads or total == 0:
+            return 1.0
+        return max(loads) / (total / len(loads))
+
+    def reset_load(self):
+        """Zero the per-shard op counters (start a fresh skew window)."""
+        self.shard_ops = [0] * len(self.shards)
 
     def server_endpoint_names(self) -> list[str]:
         return [self.net._prefix(i, ep)
@@ -297,6 +361,8 @@ class ShardedCluster:
         deterministic); results return in shard order either way.
         """
         items = sorted(groups.items())
+        for si, idxs in items:
+            self.shard_ops[si] += len(idxs)
         if self.pipeline and len(items) > 1:
             # per-call pool: workers release with the call (no idle
             # threads outliving the batch), spawn cost is negligible
@@ -377,6 +443,91 @@ class ShardedCluster:
         return ok
 
     # ------------------------------------------------------------------
+    # elasticity — membership changes + skew-aware rebalancing, executed
+    # as live stripe migrations (core/rebalance.py)
+    # ------------------------------------------------------------------
+    def add_shard(self, weight: float = 1.0, engine=None, migrate: bool = True,
+                  max_moves: int | None = None, batch_size: int = 64,
+                  step_cb=None) -> dict:
+        """Grow the cluster by one shard store and (by default) migrate
+        the key ranges the new placement assigns to it — live: client
+        requests interleave at every ``step_cb`` batch boundary.  Returns
+        the migration report (``moved_keys``/``moved_bytes``/...)."""
+        from .engine import engine_specs
+        from .rebalance import Rebalancer
+        new_id = len(self.shards)
+        if engine is None:
+            # extend the construction-time spec's cycle to the new slot
+            engine = engine_specs(self._engine_spec, new_id + 1)[new_id]
+        sh = MemECCluster(engine=engine, shard_id=new_id, **self._cluster_kw)
+        self.shards.append(sh)
+        self.engines.append(sh.engine)
+        self.shard_ops.append(0)
+        self.num_shards = len(self.shards)
+        self.placement.add_shard(new_id, weight=weight)
+        report = {"shard": new_id, "moved_keys": 0, "moved_bytes": 0}
+        rb = Rebalancer(self, batch_size=batch_size)
+        if migrate:
+            report.update(rb.run(max_moves=max_moves, step_cb=step_cb))
+            report["shard"] = new_id
+        else:
+            # no data moves yet, but the forwarding table must still be
+            # installed — the new placement already routes ~1/S of keys
+            # to the (empty) new shard, and they'd read as missing
+            plan = rb.plan()
+            report["mismatched"] = plan.mismatched
+            report["pending_left"] = len(self._pending)
+        return report
+
+    def remove_shard(self, shard: int, batch_size: int = 64,
+                     step_cb=None) -> dict:
+        """Retire a shard: drop it from the placement, then drain every
+        resident key to its new home (always a full drain — a retired
+        store must end empty).  The store object stays in ``shards`` so
+        global server ids and netsim endpoint names remain stable."""
+        from .rebalance import Rebalancer
+        if shard in self.retired or shard not in self.placement.shard_ids:
+            raise ValueError(f"no active shard {shard}")
+        self.placement.remove_shard(shard)
+        self.retired.add(shard)
+        rb = Rebalancer(self, batch_size=batch_size)
+        report = rb.run(step_cb=step_cb)
+        report["shard"] = shard
+        return report
+
+    def rebalance(self, max_moves: int | None = None,
+                  skew_threshold: float = 1.25, batch_size: int = 64,
+                  step_cb=None, reset_load: bool = True) -> dict:
+        """Skew-aware rebalancing: when the per-shard load skew
+        (max/mean ``shard_ops``) crosses ``skew_threshold``, shift ring
+        weights inversely to observed load and migrate — capped at
+        ``max_moves`` keys (the rest stays forwarded until a later pass).
+        Requires a weighted placement (ring); the mod placement reports
+        itself unsupported rather than reshuffling everything."""
+        from .rebalance import Rebalancer, skewed_weights
+        skew = self.load_skew()
+        report = {"skew_before": skew, "moved_keys": 0, "moved_bytes": 0}
+        if skew <= skew_threshold:
+            report["skipped"] = "skew below threshold"
+            return report
+        if not self.placement.supports_weights:
+            report["skipped"] = (f"{self.placement.kind} placement does not "
+                                 "support weighted rebalancing")
+            return report
+        loads = {s: float(self.shard_ops[s])
+                 for s in self.placement.shard_ids}
+        weights = skewed_weights(self.placement, loads)
+        for s, w in weights.items():
+            self.placement.set_weight(s, w)
+        rb = Rebalancer(self, batch_size=batch_size)
+        report.update(rb.run(max_moves=max_moves, step_cb=step_cb))
+        report["skew_before"] = skew
+        report["weights"] = weights
+        if reset_load:
+            self.reset_load()
+        return report
+
+    # ------------------------------------------------------------------
     # shard-scoped failure transitions — one shard's recovery never
     # blocks the others' traffic
     # ------------------------------------------------------------------
@@ -407,14 +558,16 @@ class ShardedCluster:
 
 
 def make_cluster(shards=None, engine=None, pipeline: bool = True,
-                 **cluster_kw):
+                 placement=None, **cluster_kw):
     """Cluster factory: plain ``MemECCluster`` for S=1 (the unsharded
     special case — byte- and latency-identical to the pre-sharding
-    cluster), ``ShardedCluster`` for S>1.  ``shards=None`` reads
-    ``$MEMEC_SHARDS``."""
+    cluster, no placement machinery attached), ``ShardedCluster`` for
+    S>1.  ``shards=None`` reads ``$MEMEC_SHARDS``; ``placement=None``
+    reads ``$MEMEC_PLACEMENT`` (``mod`` | ``ring`` | ``ring:<vnodes>``,
+    default ``mod``)."""
     s = resolve_shards(shards)
     if s == 1:
         from .engine import engine_specs
         return MemECCluster(engine=engine_specs(engine, 1)[0], **cluster_kw)
     return ShardedCluster(shards=s, engine=engine, pipeline=pipeline,
-                          **cluster_kw)
+                          placement=placement, **cluster_kw)

@@ -30,8 +30,8 @@ import struct
 
 import numpy as np
 
-from .chunk import (CHUNK_SIZE, ChunkId, fragment_count, object_size,
-                    parse_objects, split_fragments)
+from .chunk import (CHUNK_SIZE, METADATA_SIZE, ChunkId, fragment_count,
+                    object_size, parse_objects, split_fragments)
 from .codes import Code, make_code
 from .coordinator import Coordinator, ServerState
 from .engine import CodingEngine, make_engine
@@ -41,6 +41,14 @@ from .server import Server
 from .stripe import StripeList, StripeMapper, generate_stripe_lists
 
 LARGE_MAGIC = b"\x00MEMEC_LRG"
+
+
+def large_total(head: bytes | None) -> int | None:
+    """Total payload size if ``head`` is a large-object manifest, else
+    None — the one place that knows the manifest wire format."""
+    if head is None or not head.startswith(LARGE_MAGIC):
+        return None
+    return struct.unpack("<I", head[len(LARGE_MAGIC):len(LARGE_MAGIC) + 4])[0]
 
 
 class PartialFailure(Exception):
@@ -61,6 +69,15 @@ class ReconChunk:
         for off, key, value, deleted in parse_objects(self.buf):
             self.objects[key] = (off, len(key), len(value), deleted)
 
+    def value_of(self, key: bytes) -> bytes | None:
+        """A live object's bytes out of the reconstructed chunk."""
+        entry = (self.objects or {}).get(key)
+        if entry is None or entry[3]:
+            return None
+        off, ksz, vsz, _ = entry
+        vo = off + METADATA_SIZE + ksz
+        return self.buf[vo: vo + vsz].tobytes()
+
 
 class RedirectStore:
     """Degraded-mode state held by a redirected server (§5.4)."""
@@ -68,7 +85,10 @@ class RedirectStore:
     def __init__(self):
         self.temp_objects: dict[bytes, bytes] = {}   # degraded SET / shadows
         self.temp_deletes: set[bytes] = set()
-        self.temp_replicas: dict[bytes, tuple[bytes, bool]] = {}  # for failed parity
+        # shadow replicas for a failed parity: key -> (value, deleted,
+        # instance seq) — the iseq disambiguates a same-instance mutation
+        # from a delete/re-SET new instance when the state migrates back
+        self.temp_replicas: dict[bytes, tuple[bytes, bool, int | None]] = {}
         self.recon: dict[tuple, ReconChunk] = {}     # chunk-id key -> chunk
 
     def clear(self):
@@ -207,7 +227,7 @@ class MemECCluster:
         if not srv.should_checkpoint():
             return 0.0
         mappings = srv.take_checkpoint()
-        payload = sum(len(k) + 8 for k, _ in mappings)
+        payload = sum(len(k) + 12 for k, _, _ in mappings)
         t = self.net.phase([Leg("mapping_ckpt", payload, f"s{ds}", "coord")])
         self.coordinator.store_checkpoint(ds, mappings)
         legs = [Leg("ckpt_ack", 8, f"s{ds}", f"p{p.pid}") for p in self.proxies]
@@ -219,15 +239,63 @@ class MemECCluster:
     # ------------------------------------------------------------------
     # public request API (routed through a proxy)
     # ------------------------------------------------------------------
+    def peek_value(self, key: bytes) -> bytes | None:
+        """Degraded-aware local read of a key's stored bytes with NO
+        netsim accounting — for control-plane probes (upsert head checks,
+        migration planning/transfer), not client requests.  Resolves a
+        failed data server through the redirect state: shadowed objects,
+        the batched-decode reconstruction cache, then a parity replica."""
+        sl, ds = self.mapper.data_server_for(key)
+        if not (self._is_failed(ds) and self._degraded_active(ds)):
+            return self._sv(ds).get_value(key)
+        r = self.coordinator.redirected_server(sl, ds)
+        rs = self._rs(r)
+        if key in rs.temp_deletes:
+            return None
+        if key in rs.temp_objects:
+            return rs.temp_objects[key]
+        cid = self.coordinator.chunk_id_for(ds, key)
+        if cid is None:
+            return None
+        rc = rs.recon.get(cid.key())
+        if rc is not None:
+            return rc.value_of(key)
+        for p in sl.parity_servers:
+            if not self._is_failed(p):
+                rep = self._sv(p).get_replica(key)
+                if rep is None:
+                    break
+                value, deleted = rep
+                return None if deleted else value
+        return None
+
     def set(self, key: bytes, value: bytes, proxy_id: int = 0):
+        # upsert over a large object tears the old fragments down first —
+        # overwriting only the manifest head would orphan them.  The probe
+        # is data-server-local (no modeled legs, like _set_small's upsert
+        # lookup) and copies only manifest-sized head bytes on the normal
+        # path; a failed data server resolves through the degraded view.
+        sl, ds = self.mapper.data_server_for(key)
+        head = None
+        if self._is_failed(ds) and self._degraded_active(ds):
+            head = self.peek_value(key)
+        else:
+            srv = self._sv(ds)
+            ref = srv.lookup(key)
+            if ref is not None:
+                vo = ref.value_offset
+                n = min(ref.value_size, len(LARGE_MAGIC) + 4)
+                head = srv.region[ref.chunk_local_idx][vo: vo + n].tobytes()
+        if large_total(head) is not None:
+            self.delete(key, proxy_id)
         if object_size(len(key), len(value)) > self.chunk_size:
             return self._set_large(key, value, proxy_id)
         return self._set_small(key, value, proxy_id)
 
     def get(self, key: bytes, proxy_id: int = 0):
         v = self._get_small(key, proxy_id)
-        if v is not None and v.startswith(LARGE_MAGIC):
-            total = struct.unpack("<I", v[len(LARGE_MAGIC):len(LARGE_MAGIC) + 4])[0]
+        total = large_total(v)
+        if total is not None:
             return self._get_large(key, total, proxy_id)
         return v
 
@@ -274,10 +342,8 @@ class MemECCluster:
             t += self.net.phase(resp_legs)
             self.net.record("MGET", t)
             for i, key, ds in plan:    # large objects: fetch fragments
-                v = out[i]
-                if v is not None and v.startswith(LARGE_MAGIC):
-                    total = struct.unpack(
-                        "<I", v[len(LARGE_MAGIC):len(LARGE_MAGIC) + 4])[0]
+                total = large_total(out[i])
+                if total is not None:
                     out[i] = self._get_large(key, total, proxy_id)
         return out
 
@@ -312,15 +378,16 @@ class MemECCluster:
             seal_items, ack_legs, touched = [], [], []
             for (i, key, value, sl, ds), req in zip(batch, reqs):
                 cid, off, events = self._sv(ds).set_object(sl, key, value)
+                iseq = self._sv(ds).live_iseq(key)
                 for p in sl.parity_servers:
-                    self._sv(p).store_replica(key, value)
+                    self._sv(p).store_replica(key, value, iseq=iseq)
                 seal_items += [(sl, ds, ev) for ev in events]
                 ack_legs.append(Leg("set_ack", len(key) + 8, f"s{ds}",
                                     f"p{proxy.pid}", self._is_failed(ds)))
                 ack_legs += [Leg("set_ack", 8, f"s{p}", f"p{proxy.pid}",
                                  self._is_failed(p))
                              for p in sl.parity_servers]
-                proxy.buffer_mapping(ds, key, cid)
+                proxy.buffer_mapping(ds, key, cid, iseq)
                 touched.append(ds)
                 ok[i] = True
             t += self._handle_seals_batched(seal_items)
@@ -468,8 +535,9 @@ class MemECCluster:
                             self._is_failed(p)))
         t += self.net.phase(legs)
         cid, off, seal_events = self._sv(ds).set_object(sl, key, value)
+        iseq = self._sv(ds).live_iseq(key)
         for p in sl.parity_servers:
-            self._sv(p).store_replica(key, value)
+            self._sv(p).store_replica(key, value, iseq=iseq)
         t += self._handle_seals(sl, ds, seal_events)
         # acks (data server piggybacks the key->chunk-ID mapping, §5.3)
         ack_legs = [Leg("set_ack", len(key) + 8, f"s{ds}", f"p{proxy.pid}",
@@ -477,7 +545,7 @@ class MemECCluster:
         ack_legs += [Leg("set_ack", 8, f"s{p}", f"p{proxy.pid}", self._is_failed(p))
                      for p in sl.parity_servers]
         t += self.net.phase(ack_legs)
-        proxy.buffer_mapping(ds, key, cid)
+        proxy.buffer_mapping(ds, key, cid, iseq)
         t += self._maybe_checkpoint(ds)
         proxy.ack(req.seq)
         self.net.record("SET", t)
@@ -591,7 +659,7 @@ class MemECCluster:
         return ok
 
     def _delete_large(self, key: bytes, head: bytes, proxy_id: int) -> bool:
-        total = struct.unpack("<I", head[len(LARGE_MAGIC):len(LARGE_MAGIC) + 4])[0]
+        total = large_total(head)
         nfrag = fragment_count(total, len(key), self.chunk_size)
         for i in range(nfrag):
             self._delete_small(key + struct.pack("<I", i), proxy_id)
@@ -630,19 +698,20 @@ class MemECCluster:
             # working set, shadow-replicate to the redirected server
             legs = [Leg("set", obj_bytes, f"p{proxy.pid}", f"s{ds}")]
             cid, off, seal_events = self._sv(ds).set_object(sl, key, value)
+            iseq = self._sv(ds).live_iseq(key)
             for p in sl.parity_servers:
                 if self._is_failed(p):
                     r = self.coordinator.redirected_server(sl, p)
-                    self._rs(r).temp_replicas[key] = (value, False)
+                    self._rs(r).temp_replicas[key] = (value, False, iseq)
                     legs.append(Leg("set_replica", obj_bytes,
                                     f"p{proxy.pid}", f"s{r}"))
                 else:
-                    self._sv(p).store_replica(key, value)
+                    self._sv(p).store_replica(key, value, iseq=iseq)
                     legs.append(Leg("set_replica", obj_bytes,
                                     f"p{proxy.pid}", f"s{p}"))
             t += self.net.phase(legs)
             t += self._handle_seals(sl, ds, seal_events)
-            proxy.buffer_mapping(ds, key, cid)
+            proxy.buffer_mapping(ds, key, cid, iseq)
         self.net.record("SET_DEG", t)
         return True
 
@@ -834,6 +903,7 @@ class MemECCluster:
             self.net.record(f"{kind.upper()}_DEG", t)
             return False
         pre_cid = srv.chunk_id_of(ref)
+        pre_iseq = srv.live_iseq(key)   # instance the shadow belongs to
         if srv.sealed[ref.chunk_local_idx]:
             for j, p in enumerate(sl.parity_servers):
                 if self._is_failed(p):
@@ -875,8 +945,13 @@ class MemECCluster:
                 rc.buf ^= deltas[j]
                 rc.dirty = True
             else:
-                nv = value if kind == "update" else b""
-                self._rs(r).temp_replicas[key] = (nv, kind == "delete")
+                # shadow must keep the value size (zero-filled) exactly
+                # like apply_replica_delta does — the eventual seal
+                # rebuild packs tombstones at their original extent
+                nv = (value if kind == "update"
+                      else b"\x00" * ref.value_size)
+                self._rs(r).temp_replicas[key] = (nv, kind == "delete",
+                                                  pre_iseq)
             legs.append(Leg("delta_redirect", len(seg), f"s{ds}", f"s{r}"))
         t += self.net.phase(legs)
         self.net.record(f"{kind.upper()}_DEG", t)
@@ -1006,7 +1081,7 @@ class MemECCluster:
         for proxy in self.proxies:
             pm = proxy.mappings_for(sid)
             proxy_maps.append(pm)
-            legs.append(Leg("mapping_push", sum(len(k) + 8 for k, _ in pm),
+            legs.append(Leg("mapping_push", sum(len(k) + 12 for k, _, _ in pm),
                             f"p{proxy.pid}", "coord"))
         t += self.net.phase(legs)
         self.coordinator.merge_proxy_mappings(sid, proxy_maps)
@@ -1145,9 +1220,19 @@ class MemECCluster:
                                     f"s{r}", f"s{sid}"))
                     self.stats["migrated_chunks"] += 1
                     if rc.chunk_id.position < self.k:
-                        # fix the object index for mutated/deleted objects
+                        # fix the object index for objects deleted in
+                        # degraded mode — only when the index still points
+                        # at THIS slot: a tombstone that predates the
+                        # failure may coexist with a live re-SET instance
+                        # of the same key in another chunk (delete-then-
+                        # re-add churn, e.g. migrate-out/migrate-back)
                         for okey, (off, ksz, vsz, deleted) in (rc.objects or {}).items():
-                            if deleted:
+                            if not deleted:
+                                continue
+                            ref = restored.lookup(okey)
+                            if (ref is not None
+                                    and ref.chunk_local_idx == slot
+                                    and ref.offset == off):
                                 restored.object_index.delete(okey)
                 del rs.recon[key_t]
             # 2. degraded-SET objects + shadowed mutations routed to sid
@@ -1177,11 +1262,25 @@ class MemECCluster:
             # One shadow entry serves every failed parity of the list that
             # redirected here, so migrate a COPY and only drop the entry
             # once no parity of the list remains failed.
-            for okey, (val, deleted) in list(rs.temp_replicas.items()):
+            for okey, (val, deleted, siseq) in list(rs.temp_replicas.items()):
                 sl2, _ = self.mapper.data_server_for(okey)
                 if sid not in sl2.parity_servers:
                     continue
+                old = restored.temp_replicas.get(okey)
+                old_iseq = restored.replica_iseq.get(okey)
+                if (old is not None and old_iseq is not None
+                        and old_iseq != siseq):
+                    # the shadow belongs to a NEWER instance: the one this
+                    # parity still holds was deleted during the outage (a
+                    # key is only re-added after delete), so park its
+                    # final tombstone state for that chunk's future seal
+                    restored.zombie_replicas[(okey, old_iseq)] = \
+                        (b"\x00" * len(old[0]), True)
                 restored.temp_replicas[okey] = (val, deleted)
+                if siseq is None:
+                    restored.replica_iseq.pop(okey, None)
+                else:
+                    restored.replica_iseq[okey] = siseq
                 legs.append(Leg("migrate_replica", len(okey) + len(val),
                                 f"s{r}", f"s{sid}"))
                 if not any(self._is_failed(p) for p in sl2.parity_servers):
@@ -1199,8 +1298,9 @@ class MemECCluster:
                             or ref.offset != off:
                         continue  # superseded copy
                     val = restored.get_value(okey)
+                    iseq = restored.live_iseq(okey)
                     for p in sl.parity_servers:
-                        self._sv(p).store_replica(okey, val)
+                        self._sv(p).store_replica(okey, val, iseq=iseq)
                         legs.append(Leg("rereplicate", len(okey) + len(val),
                                         f"s{sid}", f"s{p}"))
         if legs:
@@ -1225,11 +1325,13 @@ class MemECCluster:
             sl, ds = self.mapper.data_server_for(key)
             if sid not in sl.parity_servers:
                 del srv.temp_replicas[key]
+                srv.replica_iseq.pop(key, None)
                 continue
             dsrv = self._sv(ds)
             ref = dsrv.lookup(key)
             if ref is not None and dsrv.sealed[ref.chunk_local_idx]:
                 del srv.temp_replicas[key]
+                srv.replica_iseq.pop(key, None)
             # ref is None (deleted object): keep the tombstoned replica —
             # it reads as None either way and may still be needed for a
             # pending seal rebuild.
@@ -1237,6 +1339,20 @@ class MemECCluster:
     # ------------------------------------------------------------------
     # introspection
     # ------------------------------------------------------------------
+    def resident_keys(self) -> list[bytes]:
+        """Every key this shard currently answers for, sorted (stable
+        across runs).  Covers the data servers' object indexes plus
+        degraded-mode state parked at redirected servers (degraded-SET
+        objects that no server index has seen yet).  Used by the
+        migration planner; includes large-object fragment/manifest keys —
+        the planner filters fragments itself."""
+        out: set[bytes] = set()
+        for srv in self.servers:
+            out.update(srv.object_index.keys())
+        for rs in self.redirect.values():
+            out.update(rs.temp_objects.keys())
+        return sorted(out)
+
     def total_memory(self) -> dict:
         agg: dict[str, int] = {}
         for s in self.servers:

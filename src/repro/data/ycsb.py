@@ -57,14 +57,25 @@ class ZipfGenerator:
 
 
 class YCSBWorkload:
-    def __init__(self, cfg: YCSBConfig):
+    def __init__(self, cfg: YCSBConfig, id_map: np.ndarray | None = None):
+        """``id_map`` (optional): permutation of object ids applied to the
+        Zipf samples — the skewed-workload axis.  Rank r of the Zipf
+        distribution hits object ``id_map[r]``, so a map that front-loads
+        one shard's objects (see ``hot_shard_id_map``) concentrates the
+        hot tail on that shard."""
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
         self.zipf = ZipfGenerator(cfg.num_objects, cfg.zipf_theta, self.rng)
         self.inserted = cfg.num_objects  # next insert id (workload D)
+        self.id_map = id_map
 
     def key(self, i: int) -> bytes:
         return b"user%019d" % i  # 24 bytes, YCSB-style
+
+    def _map_id(self, i: int) -> int:
+        if self.id_map is not None and i < len(self.id_map):
+            return int(self.id_map[i])
+        return i
 
     def value_size(self, i: int) -> int:
         return self.cfg.value_sizes[i % len(self.cfg.value_sizes)]
@@ -86,7 +97,7 @@ class YCSBWorkload:
         ids = self.zipf.sample(num_ops)
         for t in range(num_ops):
             kind = kinds[choices[t]]
-            i = int(ids[t])
+            i = self._map_id(int(ids[t]))
             if kind == "get":
                 yield ("get", self.key(i), None)
             elif kind == "update":
@@ -100,9 +111,23 @@ class YCSBWorkload:
                 yield ("update", self.key(i), self.value(i, version=t))
 
 
+def hot_shard_id_map(cluster, cfg: YCSBConfig, hot_shard: int) -> np.ndarray:
+    """Skewed-workload axis: a permutation of object ids that parks the
+    Zipf-hottest ranks on ``hot_shard``'s keys, turning key-popularity
+    skew into *shard* skew (the scenario ``ShardedCluster.rebalance``
+    escapes).  Objects resident on ``hot_shard`` take the low (hot) Zipf
+    ranks in id order; everything else follows."""
+    w = YCSBWorkload(cfg)
+    hot, cold = [], []
+    for i in range(cfg.num_objects):
+        (hot if cluster.shard_of(w.key(i)) == hot_shard else cold).append(i)
+    return np.array(hot + cold, dtype=np.int64)
+
+
 def run_workload(cluster, workload: str, num_ops: int,
                  cfg: YCSBConfig | None = None, num_proxies: int = 4,
-                 batch_size: int = 1):
+                 batch_size: int = 1, hot_shard: int | None = None,
+                 id_map: np.ndarray | None = None):
     """Drive a cluster through a workload; returns the op count executed.
 
     ``batch_size > 1`` collects a *window* of up to ``batch_size`` ops —
@@ -113,8 +138,18 @@ def run_workload(cluster, workload: str, num_ops: int,
     window already holds under a conflicting kind, so the per-key
     read/write order — and therefore the final store state — matches
     sequential execution exactly.
+
+    ``hot_shard`` (sharded clusters only) engages the skewed-workload
+    axis: Zipf-hot ranks are remapped onto that shard's resident objects
+    (``hot_shard_id_map``), producing the hot-shard scenario the
+    rebalance benchmark and tests measure.  Pass a precomputed ``id_map``
+    instead to keep the *same* hot key set across placement changes
+    (hot keys are a property of the traffic, not of the placement).
     """
-    w = YCSBWorkload(cfg or YCSBConfig())
+    cfg = cfg or YCSBConfig()
+    if id_map is None and hot_shard is not None:
+        id_map = hot_shard_id_map(cluster, cfg, hot_shard)
+    w = YCSBWorkload(cfg, id_map=id_map)
     stream = (w.load_ops() if workload == "load"
               else w.run_ops(workload, num_ops))
     avail_proxies = getattr(cluster, "num_proxies", None)

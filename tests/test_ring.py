@@ -1,0 +1,164 @@
+"""Placement subsystem (core/ring.py): cross-process determinism, ~1/S
+minimal key movement on membership changes (property-based), weights,
+and factory/env-var selection."""
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
+from conftest import subprocess_env
+from repro.core import (ModPlacement, Placement, RingPlacement,
+                        make_placement, shard_for_key)
+
+
+def keys(n, prefix=b"rk"):
+    return [prefix + b"%07d" % i for i in range(n)]
+
+
+class TestModPlacement:
+    def test_matches_historical_shard_for_key(self):
+        """The default placement must stay bit-identical with the
+        pre-elasticity FNV-mod routing."""
+        p = ModPlacement(4)
+        for k in keys(500):
+            assert p.shard_for(k) == shard_for_key(k, 4)
+        assert ModPlacement(1).shard_for(b"x") == 0
+
+    def test_membership_changes(self):
+        p = ModPlacement(3)
+        assert p.shard_ids == (0, 1, 2)
+        p.add_shard(3)
+        assert p.shard_ids == (0, 1, 2, 3)
+        for k in keys(200):
+            assert p.shard_for(k) == shard_for_key(k, 4)
+        p.remove_shard(1)
+        assert p.shard_ids == (0, 2, 3)
+        assert all(p.shard_for(k) in (0, 2, 3) for k in keys(200))
+        with pytest.raises(ValueError):
+            p.add_shard(0)
+        with pytest.raises(ValueError):
+            p.remove_shard(9)
+        with pytest.raises(NotImplementedError):
+            p.set_weight(0, 2.0)
+
+    def test_mod_is_a_full_reshuffle(self):
+        """The baseline placement the ring must beat: adding a shard
+        remaps the vast majority of keys."""
+        p = ModPlacement(3)
+        ks = keys(2000)
+        before = [p.shard_for(k) for k in ks]
+        p.add_shard(3)
+        moved = sum(a != p.shard_for(k) for a, k in zip(before, ks))
+        assert moved > len(ks) * 0.5
+
+
+class TestRingDeterminism:
+    def test_rebuild_identical(self):
+        ks = keys(1000)
+        a = RingPlacement(4, vnodes=64)
+        b = RingPlacement(4, vnodes=64)
+        assert [a.shard_for(k) for k in ks] == [b.shard_for(k) for k in ks]
+        # membership history does not matter, only the final membership
+        c = RingPlacement(3, vnodes=64)
+        c.add_shard(3)
+        assert [a.shard_for(k) for k in ks] == [c.shard_for(k) for k in ks]
+
+    def test_deterministic_across_processes(self):
+        """Routing is pure hashing: a fresh interpreter must compute the
+        exact same assignment (proxies/tools agree without coordination)."""
+        ks = keys(300)
+        local = [RingPlacement(4, vnodes=32).shard_for(k) for k in ks]
+        prog = textwrap.dedent("""
+            from repro.core import RingPlacement
+            ks = [b"rk%07d" % i for i in range(300)]
+            p = RingPlacement(4, vnodes=32)
+            print(",".join(str(p.shard_for(k)) for k in ks))
+        """)
+        out = subprocess.check_output([sys.executable, "-c", prog],
+                                      env=subprocess_env(), text=True)
+        assert [int(x) for x in out.strip().split(",")] == local
+
+    def test_spread_roughly_uniform(self):
+        p = RingPlacement(4, vnodes=64)
+        counts = np.bincount([p.shard_for(k) for k in keys(4000)],
+                             minlength=4)
+        assert (counts > 0).all()
+        assert counts.max() < 3 * counts.min()
+
+
+class TestRingMinimalMovement:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(min_value=2, max_value=6),
+           st.integers(min_value=0, max_value=5))
+    def test_add_moves_only_to_new_shard(self, s, salt):
+        """Property: adding a shard only moves keys *onto* the new shard,
+        and moves ~1/(S+1) of them (the consistent-hashing guarantee)."""
+        ks = keys(1200, prefix=b"mv%d-" % salt)
+        p = RingPlacement(s, vnodes=64)
+        before = {k: p.shard_for(k) for k in ks}
+        new = p.add_shard(s)
+        moved = [k for k in ks if p.shard_for(k) != before[k]]
+        assert all(p.shard_for(k) == new for k in moved)
+        frac = len(moved) / len(ks)
+        ideal = 1.0 / (s + 1)
+        assert frac <= ideal + 0.10, f"moved {frac:.3f}, ideal {ideal:.3f}"
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(min_value=3, max_value=6),
+           st.integers(min_value=0, max_value=5))
+    def test_remove_moves_only_from_removed_shard(self, s, salt):
+        ks = keys(1200, prefix=b"rm%d-" % salt)
+        p = RingPlacement(s, vnodes=64)
+        before = {k: p.shard_for(k) for k in ks}
+        victim = salt % s
+        p.remove_shard(victim)
+        for k in ks:
+            now = p.shard_for(k)
+            if before[k] != victim:
+                assert now == before[k], "untouched shard's key moved"
+            else:
+                assert now != victim
+
+    def test_weight_shrink_sheds_arcs(self):
+        p = RingPlacement(3, vnodes=64)
+        ks = keys(3000)
+        before = {k: p.shard_for(k) for k in ks}
+        n0 = sum(1 for v in before.values() if v == 0)
+        p.set_weight(0, 0.25)
+        after = [p.shard_for(k) for k in ks]
+        n0_after = sum(1 for v in after if v == 0)
+        assert n0_after < n0 * 0.6
+        # only shard-0 keys moved (its arcs shrank; nobody else's changed)
+        moved = [k for k in ks if p.shard_for(k) != before[k]]
+        assert moved and all(before[k] == 0 for k in moved)
+        fr = p.arc_fractions()
+        assert fr[0] < fr[1] and fr[0] < fr[2]
+        assert abs(sum(fr.values()) - 1.0) < 1e-9
+
+
+class TestFactory:
+    def test_make_placement_specs(self):
+        assert isinstance(make_placement("mod", 3), ModPlacement)
+        r = make_placement("ring:16", 3)
+        assert isinstance(r, RingPlacement) and r.vnodes == 16
+        assert make_placement(None, 2).kind == "mod"  # historical default
+        inst = RingPlacement(3)
+        assert make_placement(inst, 3) is inst
+        with pytest.raises(ValueError):
+            make_placement(inst, 4)   # membership mismatch
+        with pytest.raises(ValueError):
+            make_placement("spiral", 2)
+
+    def test_memec_placement_env(self, monkeypatch):
+        monkeypatch.setenv("MEMEC_PLACEMENT", "ring:8")
+        p = make_placement(None, 3)
+        assert isinstance(p, RingPlacement) and p.vnodes == 8
+        monkeypatch.delenv("MEMEC_PLACEMENT")
+        assert make_placement(None, 3).kind == "mod"
+
+    def test_describe(self):
+        assert "ring" in RingPlacement(2).describe()
+        assert isinstance(ModPlacement(2), Placement)

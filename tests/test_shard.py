@@ -55,6 +55,25 @@ class TestConstructionAndRouting:
         assert counts.max() < 2 * counts.min()  # roughly uniform
         assert all(shard_for_key(k, 1) == 0 for k in keys[:10])
 
+    def test_routing_flows_through_placement(self):
+        """No caller may hard-code FNV-mod: shard_of/locate/_plan all go
+        through the pluggable Placement (default: the historical mod)."""
+        from repro.core import RingPlacement
+        cl = sharded(shards=3)
+        assert cl.placement.kind == "mod"
+        keys = [b"pk%05d" % i for i in range(300)]
+        assert [cl.shard_of(k) for k in keys] == \
+            [shard_for_key(k, 3) for k in keys]        # default unchanged
+        ring = sharded(shards=3, placement="ring")
+        assert isinstance(ring.placement, RingPlacement)
+        for k in keys[:50]:
+            si, sl, ds = ring.locate(k)
+            assert si == ring.placement.shard_for(k)
+        groups = ring._plan(keys)
+        for si, idxs in groups.items():
+            assert all(ring.placement.shard_for(keys[i]) == si
+                       for i in idxs)
+
     def test_mixed_engines_per_shard(self):
         assert engine_specs("pallas,numpy", 4) == \
             ["pallas", "numpy", "pallas", "numpy"]

@@ -287,3 +287,174 @@ class TestStateTransitions:
         t_busy = cl.fail_server(ds)["T_N_to_D"]
         assert t_idle < 1.0 and t_busy < 1.0
         assert t_busy >= t_idle * 0.5  # busy path includes revert work
+
+
+class TestReSetInstanceHardening:
+    """Delete-then-re-SET churn (heavy under shard migration, but
+    reachable with plain requests): the superseded instance's tombstone
+    may still sit in an unsealed chunk when the key is re-added, so
+    parity replicas and recovery mappings must be matched by *instance*,
+    not by key alone."""
+
+    def _churn_reset(self, cl, kv, rng, frac=3):
+        """Delete then immediately re-SET every frac-th key."""
+        for i, key in enumerate(list(kv)):
+            if i % frac:
+                continue
+            assert cl.delete(key)
+            nv = bytes(rng.integers(0, 256, len(kv[key]), dtype=np.uint8))
+            assert cl.set(key, nv)
+            kv[key] = nv
+
+    def test_zombie_seal_uses_tombstoned_replica(self):
+        """Sealing a chunk that holds a superseded tombstone must consume
+        that instance's frozen replica (verify_rebuild cross-checks the
+        rebuilt bytes), leaving the live instance's replica intact."""
+        cl = make_cluster(chunk_size=256)
+        kv, rng = load(cl, 60)
+        self._churn_reset(cl, kv, rng)
+        # force every chunk to seal by appending filler traffic
+        filler, _ = load(cl, 400, seed=7)
+        kv.update(filler)
+        assert check_all(cl, kv) == 0
+        _, bad = parity_invariant(cl)
+        assert bad == 0
+        # updating/deleting re-set keys still finds their live replicas
+        for i, key in enumerate(list(kv)[:30]):
+            nv = bytes(rng.integers(0, 256, len(kv[key]), dtype=np.uint8))
+            assert cl.update(key, nv)
+            kv[key] = nv
+        assert check_all(cl, kv) == 0
+
+    def test_degraded_reads_resolve_newest_instance(self):
+        """Multiple proxies buffer mappings for different instances of a
+        re-SET key; the failure-time merge must resolve the newest one,
+        whatever order the proxies push in."""
+        cl = make_cluster(chunk_size=256)
+        kv, rng = load(cl, 300)
+        # rotate proxies so old/new instances land in different buffers
+        for i, key in enumerate(list(kv)[:80]):
+            assert cl.delete(key, proxy_id=i % 4)
+            nv = bytes(rng.integers(0, 256, len(kv[key]), dtype=np.uint8))
+            assert cl.set(key, nv, proxy_id=(i + 1) % 4)
+            kv[key] = nv
+        for sid in (2, 9):
+            cl.fail_server(sid)
+            assert check_all(cl, kv) == 0, \
+                f"stale instance served after fail({sid})"
+            cl.restore_server(sid)
+        assert check_all(cl, kv) == 0
+
+    def test_restore_keeps_reset_keys(self):
+        """A pre-failure tombstone in a dirty reconstructed chunk must not
+        evict the re-SET instance's index entry at restore time."""
+        cl = make_cluster(chunk_size=256)
+        kv, rng = load(cl, 300)
+        self._churn_reset(cl, kv, rng, frac=4)
+        sl, ds = cl.mapper.data_server_for(next(iter(kv)))
+        cl.fail_server(ds)
+        # degraded churn dirties reconstructed chunks
+        for key in list(kv)[:40]:
+            nv = bytes(rng.integers(0, 256, len(kv[key]), dtype=np.uint8))
+            assert cl.update(key, nv)
+            kv[key] = nv
+        assert check_all(cl, kv) == 0
+        cl.restore_server(ds)
+        assert check_all(cl, kv) == 0
+        _, bad = parity_invariant(cl)
+        assert bad == 0
+
+    def test_shadowed_delete_survives_parity_outage_seal(self):
+        """Delete (and delete/re-SET) of unsealed objects while a parity
+        server is down: the shadow must preserve the tombstone's value
+        extent and its instance, so chunks sealing after the restore
+        rebuild byte-identically (verify_rebuild asserts it)."""
+        cl = make_cluster(chunk_size=256)
+        kv, rng = load(cl, 120)
+        # pick a parity server of some unsealed object and fail it
+        key0 = next(iter(kv))
+        sl, ds = cl.mapper.data_server_for(key0)
+        parity = sl.parity_servers[0]
+        cl.fail_server(parity)
+        dropped, reset = [], []
+        for i, key in enumerate(list(kv)):
+            sl2, _ = cl.mapper.data_server_for(key)
+            if parity not in sl2.parity_servers:
+                continue
+            if i % 2:
+                assert cl.delete(key)      # shadowed tombstone
+                kv[key] = None
+                dropped.append(key)
+            else:                           # delete + re-SET: new instance
+                assert cl.delete(key)
+                nv = bytes(rng.integers(0, 256, 8, dtype=np.uint8))
+                assert cl.set(key, nv)
+                kv[key] = nv
+                reset.append(key)
+        assert dropped and reset
+        cl.restore_server(parity)
+        # filler traffic forces every touched chunk to seal + rebuild
+        filler, _ = load(cl, 500, seed=11)
+        kv.update(filler)
+        assert sum(1 for k, v in kv.items() if cl.get(k) != v) == 0
+        _, bad = parity_invariant(cl)
+        assert bad == 0
+
+
+class TestLargeObjectUpsert:
+    def test_small_over_large_removes_fragments(self):
+        """SET of a small value over an existing large object must tear
+        the old fragments down, not just overwrite the manifest head."""
+        cl = make_cluster(chunk_size=256)
+        key = b"biggie"
+        rng = np.random.default_rng(1)
+        big = bytes(rng.integers(0, 256, 900, dtype=np.uint8))
+        assert cl.set(key, big)
+        assert cl.get(key) == big
+        frag_keys = [k for s in cl.servers for k in s.object_index.keys()
+                     if k.startswith(key) and k != key]
+        assert frag_keys   # fragments exist
+        small = b"tiny"
+        assert cl.set(key, small)
+        assert cl.get(key) == small
+        for fk in frag_keys:   # no orphaned fragment survives
+            assert all(s.lookup(fk) is None for s in cl.servers)
+
+    def test_large_over_large_shrink(self):
+        """Re-SET of a large object with fewer fragments must not leave
+        stale tail fragments that a later read or migration could see."""
+        cl = make_cluster(chunk_size=256)
+        key = b"shrinker"
+        rng = np.random.default_rng(2)
+        big = bytes(rng.integers(0, 256, 1200, dtype=np.uint8))
+        smaller = bytes(rng.integers(0, 256, 400, dtype=np.uint8))
+        assert cl.set(key, big)
+        assert cl.set(key, smaller)
+        assert cl.get(key) == smaller
+        live_frags = [k for s in cl.servers for k in s.object_index.keys()
+                      if k.startswith(key) and k != key]
+        from repro.core.chunk import fragment_count
+        assert len(live_frags) == fragment_count(len(smaller), len(key),
+                                                 cl.chunk_size)
+
+    def test_small_over_large_during_data_server_outage(self):
+        """Upsert teardown must resolve the manifest through the degraded
+        view: a large object SET while its data server is down lives in
+        the redirect store, not the frozen server memory."""
+        cl = make_cluster(chunk_size=256)
+        kv, rng = load(cl, 60)
+        key = b"deg-big"
+        sl, ds = cl.mapper.data_server_for(key)
+        cl.fail_server(ds)
+        big = bytes(rng.integers(0, 256, 700, dtype=np.uint8))
+        assert cl.set(key, big)            # degraded large SET
+        assert cl.get(key) == big
+        assert cl.set(key, b"tiny")        # upsert over it, still degraded
+        assert cl.get(key) == b"tiny"
+        cl.restore_server(ds)
+        assert cl.get(key) == b"tiny"
+        # no orphaned fragment keys survive anywhere
+        for s in cl.servers:
+            assert not [k for k in s.object_index.keys()
+                        if k.startswith(key) and k != key]
+        assert sum(1 for k, v in kv.items() if cl.get(k) != v) == 0
