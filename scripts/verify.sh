@@ -5,6 +5,9 @@
 #
 #   scripts/verify.sh            # tier-1 minus `slow`-marked tests + bench smoke
 #   scripts/verify.sh --slow     # full suite incl. `slow` + shard-equivalence smoke
+#   scripts/verify.sh --ci       # CI mode: also emit BENCH_ci.json (kernel
+#                                # smoke numbers for the perf trajectory) and
+#                                # fail loudly if the bench smoke hangs
 #   FULL=1 scripts/verify.sh     # include known jax-version-broken modules
 #   SKIP_BENCH=1 scripts/verify.sh
 set -euo pipefail
@@ -12,9 +15,11 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 SLOW=""
+CI_MODE=""
 for arg in "$@"; do
     case "$arg" in
         --slow) SLOW=1 ;;
+        --ci) CI_MODE=1 ;;
         *) echo "unknown argument: $arg" >&2; exit 2 ;;
     esac
 done
@@ -106,7 +111,61 @@ EOF
 fi
 
 if [ -z "${SKIP_BENCH:-}" ]; then
-    # MEMEC_BENCH_FAST trims the sweep to the ~10-second smoke variant
-    MEMEC_BENCH_FAST=1 timeout 120 python -m benchmarks.run --only kernels_bench
+    # MEMEC_BENCH_FAST trims the sweep to the ~10-second smoke variant.
+    # Run under `timeout` but do NOT rely on its bare exit status: catch
+    # 124 explicitly and fail with a loud, attributable message (a silent
+    # `set -e` exit used to be indistinguishable from a bench assert).
+    BENCH_LOG="$(mktemp)"
+    trap 'rm -f "$BENCH_LOG"' EXIT
+    BENCH_TIMEOUT="${BENCH_TIMEOUT:-300}"
+    set +e
+    MEMEC_BENCH_FAST=1 timeout "$BENCH_TIMEOUT" \
+        python -m benchmarks.run --only kernels_bench 2>&1 | tee "$BENCH_LOG"
+    rc=${PIPESTATUS[0]}
+    set -e
+    if [ "$rc" -eq 124 ]; then
+        echo "verify: FAIL — kernel bench smoke timed out after ${BENCH_TIMEOUT}s" >&2
+        exit 1
+    elif [ "$rc" -ne 0 ]; then
+        echo "verify: FAIL — kernel bench smoke exited with status $rc" >&2
+        exit "$rc"
+    fi
+    if [ -n "$CI_MODE" ]; then
+        # CI artifact: parse the smoke's CSV rows into BENCH_ci.json so
+        # the workflow can upload a perf-trajectory data point per run
+        python - "$BENCH_LOG" <<'EOF'
+import json
+import os
+import sys
+
+rows = []
+for line in open(sys.argv[1]):
+    parts = line.strip().split(",")
+    if len(parts) == 3 and not line.startswith(("#", "===")):
+        name, us, derived = parts
+        try:
+            rows.append({"name": name, "us_per_call": float(us),
+                         "derived": derived})
+        except ValueError:
+            continue
+out = {
+    "suite": "kernels_bench",
+    "fast": True,
+    "engine_env": os.environ.get("MEMEC_ENGINE", "numpy"),
+    "async_env": os.environ.get("MEMEC_ASYNC", "0"),
+    "rows": rows,
+}
+with open("BENCH_ci.json", "w") as f:
+    json.dump(out, f, indent=2)
+print(f"BENCH_ci.json: {len(rows)} rows captured")
+EOF
+    fi
+fi
+
+if [ -n "$CI_MODE" ]; then
+    # marker hygiene: `-m "not slow"` must still collect tests in every
+    # async-pipeline-touched module — a marker typo that deselects a
+    # whole suite would otherwise pass CI silently
+    python -m pytest -q tests/test_marker_guard.py
 fi
 echo "verify: OK"

@@ -36,6 +36,13 @@ class MemECConfig:
     # required for add_shard/remove_shard/rebalance).  None defers to
     # $MEMEC_PLACEMENT, default "mod".
     placement: str | None = None
+    # intra-shard async coding pipeline (core/store.py): submit engine
+    # work through futures while the shard's own netsim legs are in
+    # flight — request latency charges max(coding, network) per phase
+    # instead of the serial sum, and multi-key batches may spread across
+    # proxies as concurrent lanes.  Byte-identical to the sync pipeline.
+    # None defers to $MEMEC_ASYNC, default off.
+    async_engine: bool | None = None
 
 
 CONFIG = MemECConfig()
@@ -47,6 +54,7 @@ def make_configured_cluster(cfg: MemECConfig = CONFIG, **overrides):
     kw = dict(num_servers=cfg.num_servers, num_proxies=cfg.num_proxies,
               scheme=cfg.scheme, n=cfg.n, k=cfg.k, c=cfg.c,
               chunk_size=cfg.chunk_size, max_unsealed=cfg.max_unsealed,
-              engine=cfg.engine, shards=cfg.shards, placement=cfg.placement)
+              engine=cfg.engine, shards=cfg.shards, placement=cfg.placement,
+              async_engine=cfg.async_engine)
     kw.update(overrides)
     return make_cluster(**kw)

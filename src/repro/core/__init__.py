@@ -37,8 +37,8 @@ from .baselines import AllReplicationCluster, HybridEncodingCluster
 from .chunk import CHUNK_SIZE, ChunkBuilder, ChunkId, ObjectRef
 from .codes import Code, NoCode, RDPCode, RSCode, XORCode, make_code
 from .coordinator import Coordinator, ServerState
-from .engine import (CodingEngine, JaxEngine, NumpyEngine, PallasEngine,
-                     make_engine)
+from .engine import (CodingEngine, EngineFuture, JaxEngine, NumpyEngine,
+                     PallasEngine, make_engine, resolve_async)
 from .engine import engine_specs
 from .index import CuckooIndex
 from .netsim import CostModel, Leg, NetSim
@@ -56,8 +56,9 @@ __all__ = [
     "redundancy_hybrid_encoding", "AllReplicationCluster",
     "HybridEncodingCluster", "CHUNK_SIZE", "ChunkBuilder", "ChunkId",
     "ObjectRef", "Code", "NoCode", "RDPCode", "RSCode", "XORCode",
-    "make_code", "CodingEngine", "JaxEngine", "NumpyEngine", "PallasEngine",
-    "make_engine", "engine_specs", "Coordinator", "ServerState", "CostModel",
+    "make_code", "CodingEngine", "EngineFuture", "JaxEngine", "NumpyEngine",
+    "PallasEngine", "make_engine", "resolve_async", "engine_specs",
+    "Coordinator", "ServerState", "CostModel",
     "Leg", "NetSim", "Proxy", "Server", "MemECCluster", "PartialFailure",
     "ShardedCluster", "ShardedNet", "make_cluster", "resolve_shards",
     "shard_for_key", "StripeList", "StripeMapper", "generate_stripe_lists",

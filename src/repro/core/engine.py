@@ -30,6 +30,22 @@ pattern); deltas are column slices of the encode matrix.
 Selection: ``make_engine(name, code)``; ``name=None`` reads the
 ``MEMEC_ENGINE`` env var (``numpy`` | ``jax`` | ``pallas``), defaulting to
 ``numpy``.  ``configs/memec.py`` carries the same knob for the cluster.
+
+Async submission (PR 4): ``submit_encode`` / ``submit_decode`` /
+``submit_delta`` return lightweight ``EngineFuture`` handles so the
+cluster can issue coding work while the same shard's netsim legs are
+modeled in flight (``async_engine=True`` / ``$MEMEC_ASYNC``).  The numpy
+backend resolves lazily (the work runs at ``result()``); the jax and
+pallas backends *dispatch* encode/delta on-device at submit time — XLA's
+async dispatch does the real overlapping — and call
+``jax.block_until_ready`` only at resolution.  ``submit_decode`` stays
+lazy on every backend: its host-side erasure-pattern grouping and matrix
+inversion gate the device matmuls, so only the *modeled* overlap applies
+(device-side decode submission is a ROADMAP open item).  Every future
+carries a
+deterministic ``work_bytes`` figure (GF(2^8) multiply-accumulate bytes)
+that ``CostModel.coding_s`` turns into modeled time; results are
+byte-identical to the blocking calls by construction.
 """
 from __future__ import annotations
 
@@ -84,6 +100,50 @@ def block_rep(code: Code) -> BlockRep:
 
 
 # ---------------------------------------------------------------------------
+# Async submission handles
+# ---------------------------------------------------------------------------
+
+class EngineFuture:
+    """Handle to a submitted coding op.
+
+    ``result()`` returns host numpy arrays, computing (numpy backend) or
+    blocking on the already-dispatched device work (jax/pallas) on first
+    call; resolution is idempotent.  ``work_bytes`` is the deterministic
+    modeled-cost input for ``CostModel.coding_s`` — identical whether the
+    op ran sync or async, so latency accounting can't drift between the
+    two modes.
+    """
+
+    __slots__ = ("_thunk", "_value", "_done", "work_bytes", "kind")
+
+    def __init__(self, thunk, work_bytes: int = 0, kind: str = ""):
+        self._thunk = thunk
+        self._value = None
+        self._done = False
+        self.work_bytes = work_bytes
+        self.kind = kind
+
+    @classmethod
+    def wrap(cls, value, work_bytes: int = 0, kind: str = "") -> "EngineFuture":
+        """An already-resolved future (empty batches, degenerate codes)."""
+        fut = cls(None, work_bytes, kind)
+        fut._value = value
+        fut._done = True
+        return fut
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    def result(self):
+        if not self._done:
+            self._value = self._thunk()
+            self._done = True
+            self._thunk = None
+        return self._value
+
+
+# ---------------------------------------------------------------------------
 # Engine interface
 # ---------------------------------------------------------------------------
 
@@ -135,6 +195,41 @@ class CodingEngine:
         if parity.shape[1] == 0 or parity.shape[0] == 0:
             return parity.copy()
         return parity ^ self.delta_batch(data_indices, xors)
+
+    # -- modeled work (GF(2^8) multiply-accumulate bytes per batch) -----
+    def encode_work_bytes(self, batch: int, chunk_size: int) -> int:
+        """(m*r, k*r) matrix times (k*r, C/r) blocks, B times."""
+        return batch * self.code.m * self.code.k * self.rep.r * chunk_size
+
+    def decode_work_bytes(self, batch: int, chunk_size: int) -> int:
+        """(k*r, k*r) inverse times the available blocks, B times (the
+        per-pattern inversion amortizes across the batch)."""
+        return batch * self.code.k * self.code.k * self.rep.r * chunk_size
+
+    def delta_work_bytes(self, batch: int, chunk_size: int) -> int:
+        """m*r parity rows from one chunk's xor, B times."""
+        return batch * self.code.m * self.rep.r * chunk_size
+
+    # -- async submission (overridden by device backends to dispatch
+    # eagerly; the base implementation defers the work to result()) -----
+    def submit_encode(self, data: np.ndarray) -> EngineFuture:
+        data = np.asarray(data, dtype=np.uint8)
+        B, _, C = data.shape
+        return EngineFuture(lambda: self.encode_batch(data),
+                            self.encode_work_bytes(B, C), "encode")
+
+    def submit_decode(self, available, wanted, chunk_size: int) -> EngineFuture:
+        available = [dict(a) for a in available]
+        wanted = [list(w) for w in wanted]
+        return EngineFuture(
+            lambda: self.decode_batch(available, wanted, chunk_size),
+            self.decode_work_bytes(len(available), chunk_size), "decode")
+
+    def submit_delta(self, data_indices, xors: np.ndarray) -> EngineFuture:
+        xors = np.asarray(xors, dtype=np.uint8)
+        B, C = xors.shape
+        return EngineFuture(lambda: self.delta_batch(data_indices, xors),
+                            self.delta_work_bytes(B, C), "delta")
 
     # -- shared decode plumbing -----------------------------------------
     def _decode_inverse(self, avail_sig: tuple[int, ...]
@@ -221,18 +316,58 @@ class JaxEngine(CodingEngine):
 
     name = "jax"
 
-    # -- device matmul hooks (PallasEngine overrides the dense case) ----
-    def _matmul(self, M: np.ndarray, blocks: np.ndarray) -> np.ndarray:
-        """(O, J) ∘ (B, J, Cb) -> (B, O, Cb) over GF(2^8)."""
+    # -- device matmul hooks (PallasEngine overrides the dense case).
+    # The `_dev` variants return device arrays without blocking — XLA
+    # dispatches asynchronously, so submit_* can issue work and only
+    # synchronize at EngineFuture.result().
+    def _matmul_dev(self, M: np.ndarray, blocks: np.ndarray):
+        """(O, J) ∘ (B, J, Cb) -> (B, O, Cb) over GF(2^8), device-side."""
         _, jnp = _jax()
         shared, _ = _jnp_block_matmuls()
-        return np.asarray(shared(jnp.asarray(M), jnp.asarray(blocks)))
+        return shared(jnp.asarray(M), jnp.asarray(blocks))
 
-    def _matmul_per_item(self, Ms: np.ndarray, blocks: np.ndarray) -> np.ndarray:
+    def _matmul_per_item_dev(self, Ms: np.ndarray, blocks: np.ndarray):
         """(B, O, J) ∘ (B, J, Cb) -> (B, O, Cb), one matrix per item."""
         _, jnp = _jax()
         _, per_item = _jnp_block_matmuls()
-        return np.asarray(per_item(jnp.asarray(Ms), jnp.asarray(blocks)))
+        return per_item(jnp.asarray(Ms), jnp.asarray(blocks))
+
+    def _matmul(self, M: np.ndarray, blocks: np.ndarray) -> np.ndarray:
+        return np.asarray(self._matmul_dev(M, blocks))
+
+    @staticmethod
+    def _resolve_dev(dev, shape):
+        """Blocking resolution of a dispatched device array (the only
+        place the async path waits on the device)."""
+        jax, _ = _jax()
+        return np.asarray(jax.block_until_ready(dev)).reshape(shape)
+
+    def submit_encode(self, data):
+        data = np.asarray(data, dtype=np.uint8)
+        B, k, C = data.shape
+        m = self.code.m
+        wb = self.encode_work_bytes(B, C)
+        if B == 0 or m == 0:
+            return EngineFuture.wrap(np.zeros((B, m, C), np.uint8), wb,
+                                     "encode")
+        dev = self._matmul_dev(self.rep.encode, self._blocks(data))
+        return EngineFuture(lambda: self._resolve_dev(dev, (B, m, C)),
+                            wb, "encode")
+
+    def submit_delta(self, data_indices, xors):
+        xors = np.asarray(xors, dtype=np.uint8)
+        B, C = xors.shape
+        m, k, r = self.code.m, self.code.k, self.rep.r
+        wb = self.delta_work_bytes(B, C)
+        if B == 0 or m == 0:
+            return EngineFuture.wrap(np.zeros((B, m, C), np.uint8), wb,
+                                     "delta")
+        idx = np.asarray(data_indices, dtype=np.int64)
+        cols = self.rep.encode.reshape(m * r, k, r)[:, idx, :]
+        Ms = np.ascontiguousarray(np.transpose(cols, (1, 0, 2)))
+        dev = self._matmul_per_item_dev(Ms, xors.reshape(B, r, C // r))
+        return EngineFuture(lambda: self._resolve_dev(dev, (B, m, C)),
+                            wb, "delta")
 
     def _blocks(self, chunks: np.ndarray) -> np.ndarray:
         """(B, x, C) -> (B, x*r, C//r) sub-block rows."""
@@ -243,13 +378,10 @@ class JaxEngine(CodingEngine):
         return chunks.reshape(B, x * r, C // r)
 
     def encode_batch(self, data):
-        data = np.asarray(data, dtype=np.uint8)
-        B, k, C = data.shape
-        m = self.code.m
-        if B == 0 or m == 0:
-            return np.zeros((B, m, C), np.uint8)
-        out = self._matmul(self.rep.encode, self._blocks(data))
-        return out.reshape(B, m, C)
+        # the blocking call IS the submitted future resolved on the spot
+        # — one dispatch body for both paths keeps sync/async
+        # byte-identity true by construction
+        return self.submit_encode(data).result()
 
     def decode_batch(self, available, wanted, chunk_size):
         available = list(available)
@@ -284,18 +416,7 @@ class JaxEngine(CodingEngine):
         return results
 
     def delta_batch(self, data_indices, xors):
-        xors = np.asarray(xors, dtype=np.uint8)
-        B, C = xors.shape
-        m, k, r = self.code.m, self.code.k, self.rep.r
-        if B == 0 or m == 0:
-            return np.zeros((B, m, C), np.uint8)
-        idx = np.asarray(data_indices, dtype=np.int64)
-        # per-item column block of the encode matrix: (B, m*r, r)
-        cols = self.rep.encode.reshape(m * r, k, r)[:, idx, :]
-        Ms = np.ascontiguousarray(np.transpose(cols, (1, 0, 2)))
-        blocks = xors.reshape(B, r, C // r)
-        out = self._matmul_per_item(Ms, blocks)
-        return out.reshape(B, m, C)
+        return self.submit_delta(data_indices, xors).result()
 
 
 class PallasEngine(JaxEngine):
@@ -309,11 +430,11 @@ class PallasEngine(JaxEngine):
 
     name = "pallas"
 
-    def _matmul(self, M, blocks):
+    def _matmul_dev(self, M, blocks):
         if self.rep.r != 1:
-            return super()._matmul(M, blocks)
+            return super()._matmul_dev(M, blocks)
         from repro.kernels.gf256_matmul import gf256_matmul_batched
-        return np.asarray(gf256_matmul_batched(M, blocks))
+        return gf256_matmul_batched(M, blocks)
 
     def _gammas(self, data_indices) -> np.ndarray:
         idx = np.asarray(data_indices, dtype=np.int64)
@@ -331,6 +452,20 @@ class PallasEngine(JaxEngine):
         # parity=None: delta-only kernel — no dead parity streams
         return np.asarray(delta_apply_batched(
             None, self._gammas(data_indices), xors))
+
+    def submit_delta(self, data_indices, xors):
+        if self.rep.r != 1 or self.code.m == 0:
+            return super().submit_delta(data_indices, xors)
+        xors = np.asarray(xors, dtype=np.uint8)
+        B, C = xors.shape
+        wb = self.delta_work_bytes(B, C)
+        if B == 0:
+            return EngineFuture.wrap(np.zeros((B, self.code.m, C), np.uint8),
+                                     wb, "delta")
+        from repro.kernels.delta_update import delta_apply_batched
+        dev = delta_apply_batched(None, self._gammas(data_indices), xors)
+        return EngineFuture(
+            lambda: self._resolve_dev(dev, (B, self.code.m, C)), wb, "delta")
 
     def apply_delta_batch(self, parity, data_indices, xors):
         if self.rep.r != 1:
@@ -372,6 +507,15 @@ def make_engine(name: str | None, code: Code) -> CodingEngine:
         raise ValueError(
             f"unknown coding engine {name!r}; pick from {sorted(ENGINES)}")
     return cls(code)
+
+
+def resolve_async(async_engine=None) -> bool:
+    """Async-pipeline knob: the argument, else ``$MEMEC_ASYNC`` (truthy
+    spellings: 1/true/yes/on), defaulting to the synchronous pipeline."""
+    if async_engine is None:
+        return os.environ.get("MEMEC_ASYNC", "").strip().lower() in (
+            "1", "true", "yes", "on")
+    return bool(async_engine)
 
 
 def engine_specs(spec, num_shards: int) -> list:

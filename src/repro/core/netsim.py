@@ -13,6 +13,21 @@ Two outputs feed the benchmarks:
 * throughput — bottleneck-based: the busiest endpoint's byte traffic
   divided by link bandwidth bounds aggregate ops/s (this is what actually
   limits the paper's Gigabit testbed, e.g. the (n-k+1)-way SET fan-out).
+
+Coding cost (PR 4): ``CostModel.coding_s`` converts a ``CodingEngine``
+work-bytes figure into modeled seconds (GF(2^8) table-lookup throughput
+plus a fixed per-call dispatch).  The synchronous store adds it serially
+to the request phases; the async pipeline (``async_engine=True``) merges
+it as ``max(coding, network)`` per phase — the overlap the paper hides
+coding behind.
+
+Concurrent lanes: ``merge_lanes`` models independent request pipelines
+(e.g. per-proxy sub-batches of one multi-key request) running at the
+same time.  Lanes overlap freely, but a server appearing in several
+lanes serializes its own legs — the merged duration is
+``max(slowest lane, busiest shared endpoint)``, clamped by the fully
+serial sum.  Per-endpoint busy time is tracked in ``time_by_endpoint``
+(snapshot/diff via ``busy_snapshot``).
 """
 from __future__ import annotations
 
@@ -36,12 +51,24 @@ class CostModel:
     proc_s: float = 2e-6           # per-message processing
     failed_delay_s: float = 0.002  # injected delay to a congested server
     header_bytes: int = 24         # protocol header per message
+    # GF(2^8) coding throughput of one server core (table-lookup mults;
+    # the paper's servers run coding on CPU) + fixed per-engine-call
+    # dispatch.  Consumed via `coding_s` with a CodingEngine work-bytes
+    # figure; shrink `coding_Bps` to model a coding-bound deployment.
+    coding_Bps: float = 2.5e9
+    coding_fixed_s: float = 2e-6
 
     def leg(self, payload_bytes: int, to_failed: bool = False) -> float:
         t = self.rtt_s + (payload_bytes + self.header_bytes) / self.bw_Bps + self.proc_s
         if to_failed:
             t += self.failed_delay_s
         return t
+
+    def coding_s(self, work_bytes: float, calls: int = 1) -> float:
+        """Modeled duration of a batched coding-engine call."""
+        if work_bytes <= 0 and calls <= 0:
+            return 0.0
+        return calls * self.coding_fixed_s + work_bytes / self.coding_Bps
 
 
 class NetSim:
@@ -52,6 +79,11 @@ class NetSim:
         self.bytes_by_kind: dict[str, int] = defaultdict(int)
         self.msgs_by_kind: dict[str, int] = defaultdict(int)
         self.bytes_by_endpoint: dict[str, int] = defaultdict(int)
+        # modeled link-occupancy seconds (wire bytes over bandwidth) per
+        # endpoint — the per-server serialization floor for concurrent
+        # lanes.  Occupancy only: RTT/processing pipeline across legs, so
+        # they don't serialize; draining bytes through one NIC does.
+        self.time_by_endpoint: dict[str, float] = defaultdict(float)
         self.latencies: dict[str, list[float]] = defaultdict(list)
         self.ops_by_kind: dict[str, int] = defaultdict(int)
         # monotonic sum of every recorded request latency; lets callers
@@ -60,17 +92,25 @@ class NetSim:
         self.total_recorded_s = 0.0
 
     # -- request construction ------------------------------------------
+    def _account_leg(self, leg: Leg) -> float:
+        """Byte/message/occupancy accounting shared by every phase
+        flavor; returns the leg's modeled cost."""
+        wire = leg.nbytes + self.cost.header_bytes
+        self.bytes_by_kind[leg.kind] += wire
+        self.msgs_by_kind[leg.kind] += 1
+        occupancy = wire / self.cost.bw_Bps
+        if leg.src:
+            self.bytes_by_endpoint[leg.src] += wire
+            self.time_by_endpoint[leg.src] += occupancy
+        if leg.dst:
+            self.bytes_by_endpoint[leg.dst] += wire
+            self.time_by_endpoint[leg.dst] += occupancy
+        return self.cost.leg(leg.nbytes, leg.to_failed)
+
     def phase(self, legs: list[Leg]) -> float:
         worst = 0.0
         for leg in legs:
-            wire = leg.nbytes + self.cost.header_bytes
-            self.bytes_by_kind[leg.kind] += wire
-            self.msgs_by_kind[leg.kind] += 1
-            if leg.src:
-                self.bytes_by_endpoint[leg.src] += wire
-            if leg.dst:
-                self.bytes_by_endpoint[leg.dst] += wire
-            worst = max(worst, self.cost.leg(leg.nbytes, leg.to_failed))
+            worst = max(worst, self._account_leg(leg))
         return worst
 
     def serialized_phase(self, legs: list[Leg]) -> float:
@@ -81,15 +121,40 @@ class NetSim:
         max single leg regardless of how much data moves."""
         per_dst: dict[str, float] = defaultdict(float)
         for leg in legs:
-            wire = leg.nbytes + self.cost.header_bytes
-            self.bytes_by_kind[leg.kind] += wire
-            self.msgs_by_kind[leg.kind] += 1
-            if leg.src:
-                self.bytes_by_endpoint[leg.src] += wire
-            if leg.dst:
-                self.bytes_by_endpoint[leg.dst] += wire
-            per_dst[leg.dst] += self.cost.leg(leg.nbytes, leg.to_failed)
+            per_dst[leg.dst] += self._account_leg(leg)
         return max(per_dst.values()) if per_dst else 0.0
+
+    # -- concurrent lanes (cross-proxy pipelining) ----------------------
+    def busy_snapshot(self) -> dict[str, float]:
+        """Copy of per-endpoint busy seconds; diff two snapshots around a
+        lane's execution to get that lane's endpoint occupancy."""
+        return dict(self.time_by_endpoint)
+
+    @staticmethod
+    def busy_delta(before: dict[str, float],
+                   after: dict[str, float]) -> dict[str, float]:
+        return {ep: t - before.get(ep, 0.0) for ep, t in after.items()
+                if t - before.get(ep, 0.0) > 0.0}
+
+    @staticmethod
+    def merge_lanes(lane_durations: list[float],
+                    lane_busys: list[dict[str, float]]) -> float:
+        """Merged duration of concurrently executing lanes.
+
+        Lanes overlap freely (independent proxies driving disjoint
+        sub-batches), but any endpoint shared by several lanes serializes
+        its own legs: the merged time is the slowest lane or the busiest
+        endpoint's total occupancy, whichever is larger — and never worse
+        than running the lanes back to back."""
+        if not lane_durations:
+            return 0.0
+        serial = sum(lane_durations)
+        busy: dict[str, float] = defaultdict(float)
+        for b in lane_busys:
+            for ep, t in b.items():
+                busy[ep] += t
+        floor = max(busy.values(), default=0.0)
+        return min(serial, max(max(lane_durations), floor))
 
     def record(self, req_kind: str, latency_s: float):
         self.latencies[req_kind].append(latency_s)
@@ -140,6 +205,7 @@ class NetSim:
         self.bytes_by_kind.clear()
         self.msgs_by_kind.clear()
         self.bytes_by_endpoint.clear()
+        self.time_by_endpoint.clear()
         self.latencies.clear()
         self.ops_by_kind.clear()
 

@@ -357,16 +357,33 @@ class Server:
     def fold_seal_batch(self, events: list[SealEvent]) -> list[np.ndarray]:
         """Parity role: rebuild all sealed chunks, then fold their parity
         contributions in one batched engine call."""
+        fut, finish = self.submit_fold_seals(events)
+        if fut is not None:
+            fut.result()
+        return finish()
+
+    def submit_fold_seals(self, events: list[SealEvent]):
+        """Async seal fold: rebuild the sealed chunks from replicas (host
+        work), *submit* the batched parity-delta computation, and return
+        ``(future, finish)`` — the caller models its netsim legs while the
+        engine call is in flight, then calls ``finish()`` to fold the
+        deltas into the parity region and get the rebuilt chunks back.
+        Byte-identical to ``fold_seal_batch`` (same engine call, same fold
+        order), only the synchronization point moves."""
         if not events:
-            return []
+            return None, lambda: []
         rebuilds = [self.rebuild_seal_chunk(ev) for ev in events]
         positions = np.array([pos for _, pos, _ in rebuilds])
         xors = np.stack([reb for _, _, reb in rebuilds])
-        deltas = self.engine.delta_batch(positions, xors)  # (B, m, C)
-        for ev, (idx, _, _), delta in zip(events, rebuilds, deltas):
-            ppos = ev.stripe_list.parity_servers.index(self.sid)
-            self.region[idx] ^= delta[ppos]
-        return [reb for _, _, reb in rebuilds]
+        fut = self.engine.submit_delta(positions, xors)  # (B, m, C)
+
+        def finish() -> list[np.ndarray]:
+            for ev, (idx, _, _), delta in zip(events, rebuilds, fut.result()):
+                ppos = ev.stripe_list.parity_servers.index(self.sid)
+                self.region[idx] ^= delta[ppos]
+            return [reb for _, _, reb in rebuilds]
+
+        return fut, finish
 
     def apply_data_delta(self, sl: StripeList, chunk_id: ChunkId, offset: int,
                          xor_seg: np.ndarray, proxy_id: int, seq: int):

@@ -242,6 +242,10 @@ class ShardedCluster:
         self.code, self.n, self.k = s0.code, s0.n, s0.k
         self.chunk_size = s0.chunk_size
         self.degraded_enabled = s0.degraded_enabled
+        # intra-shard async pipeline (PR 4) — the per-shard stores resolve
+        # the knob ($MEMEC_ASYNC / async_engine= in cluster_kw); exposed
+        # here so drivers can pick proxy-spread batches (`proxy_id=None`)
+        self.async_engine = s0.async_engine
         self.engines = [sh.engine for sh in self.shards]
         self.engine = self.engines[0]
         self.pipeline = bool(pipeline) and self.num_shards > 1
@@ -385,7 +389,7 @@ class ShardedCluster:
             self._stats["pipelined_batches"] += 1
             self._stats["pipeline_overlap_saved_s"] += sum(dts) - max(dts)
 
-    def multi_get(self, keys, proxy_id: int = 0) -> list:
+    def multi_get(self, keys, proxy_id: int | None = 0) -> list:
         keys = list(keys)
         groups = self._plan(keys)
         out: list = [None] * len(keys)
@@ -404,7 +408,7 @@ class ShardedCluster:
         self._record_batch("MGET", dts)
         return out
 
-    def multi_set(self, items, proxy_id: int = 0) -> list[bool]:
+    def multi_set(self, items, proxy_id: int | None = 0) -> list[bool]:
         items = list(items)
         groups = self._plan([k for k, _ in items])
         ok = [False] * len(items)
@@ -423,7 +427,7 @@ class ShardedCluster:
         self._record_batch("MSET", dts)
         return ok
 
-    def multi_update(self, items, proxy_id: int = 0) -> list[bool]:
+    def multi_update(self, items, proxy_id: int | None = 0) -> list[bool]:
         items = list(items)
         groups = self._plan([k for k, _ in items])
         ok = [False] * len(items)

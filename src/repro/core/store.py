@@ -22,6 +22,23 @@ Implementation deviations from the paper (each noted inline):
   state off when they themselves fail; SET of an existing key in
   degraded mode routes through the mutate path (upsert); shadow replicas
   migrate to *every* restored parity server of a list.
+
+Intra-shard async pipeline (PR 4): coding now carries a modeled cost
+(``CostModel.coding_s`` over ``CodingEngine`` work bytes).  With
+``async_engine=False`` (default, ``$MEMEC_ASYNC``) coding time adds
+serially to a request's network phases; with ``async_engine=True`` the
+store *submits* engine work (``engine.submit_*`` futures) while the same
+shard's netsim legs are modeled in flight and charges
+``max(coding, network)`` per phase — plus two further overlaps: the seal
+fan-out runs concurrently with the SET acks, and ``multi_*`` requests
+with ``proxy_id=None`` spread across the shard's proxies as concurrent
+lanes (``NetSim.merge_lanes``; per-server serialization preserved).
+Stored bytes are identical in both modes — only the synchronization
+points and the latency accounting move.  ``stats["intra_overlap_saved_s"]``
+tracks the genuine sync-vs-async win (phases the sync pipeline pays as a
+sum); ``stats["proxy_lane_saved_s"]`` tracks lane overlap relative to
+serially executed per-proxy calls (a different baseline — sync callers
+issuing one batch per proxy call never pay that serialization).
 """
 from __future__ import annotations
 
@@ -34,13 +51,19 @@ from .chunk import (CHUNK_SIZE, METADATA_SIZE, ChunkId, fragment_count,
                     object_size, parse_objects, split_fragments)
 from .codes import Code, make_code
 from .coordinator import Coordinator, ServerState
-from .engine import CodingEngine, make_engine
+from .engine import CodingEngine, make_engine, resolve_async
+from .index import fnv1a
 from .netsim import CostModel, Leg, NetSim
 from .proxy import Proxy
 from .server import Server
 from .stripe import StripeList, StripeMapper, generate_stripe_lists
 
 LARGE_MAGIC = b"\x00MEMEC_LRG"
+
+# dedicated hash seed for proxy-lane assignment: every occurrence of a
+# key must land in the same lane (duplicate upserts keep request order),
+# and the spread must stay independent of shard and stripe hashing
+PROXY_LANE_SEED = 0x9e3779b9
 
 
 def large_total(head: bytes | None) -> int | None:
@@ -105,8 +128,13 @@ class MemECCluster:
                  cost: CostModel | None = None, degraded_enabled: bool = True,
                  verify_rebuild: bool = False, mapping_ckpt_every: int = 256,
                  engine: str | CodingEngine | None = None,
-                 shard_id: int | None = None):
+                 shard_id: int | None = None,
+                 async_engine: bool | None = None):
         self.shard_id = shard_id   # None when not part of a ShardedCluster
+        # intra-shard async pipeline (None defers to $MEMEC_ASYNC): issue
+        # coding through engine futures while netsim legs are in flight
+        # and merge latencies as max(coding, network) instead of the sum
+        self.async_engine = resolve_async(async_engine)
         self.code: Code = make_code(scheme, n, k)
         # one batched coding engine shared by every server and every
         # cluster-level batch operation (numpy | jax | pallas; see
@@ -133,7 +161,9 @@ class MemECCluster:
         self.stats = {"reconstructions": 0, "recon_chunk_hits": 0,
                       "reverted_deltas": 0, "degraded_requests": 0,
                       "migrated_objects": 0, "migrated_chunks": 0,
-                      "batch_recovered_chunks": 0, "redirect_handoffs": 0}
+                      "batch_recovered_chunks": 0, "redirect_handoffs": 0,
+                      "modeled_coding_s": 0.0, "intra_overlap_saved_s": 0.0,
+                      "proxy_lane_batches": 0, "proxy_lane_saved_s": 0.0}
 
     def server_endpoint_names(self) -> list[str]:
         """Netsim endpoint labels of this cluster's storage servers."""
@@ -167,6 +197,31 @@ class MemECCluster:
         return ChunkId(sl.list_id, stripe_id, position)
 
     # ------------------------------------------------------------------
+    # async-pipeline latency merging
+    # ------------------------------------------------------------------
+    def _overlap(self, *phase_times: float) -> float:
+        """Merged duration of phases that the async pipeline overlaps
+        (coding vs network legs, seal fan-out vs SET acks).  Sync mode
+        runs them back to back — the historical sum."""
+        if not self.async_engine:
+            return sum(phase_times)
+        t = max(phase_times, default=0.0)
+        self.stats["intra_overlap_saved_s"] += sum(phase_times) - t
+        return t
+
+    def _merge_coding(self, coding_s: float, net_s: float) -> float:
+        """Coding vs in-flight netsim legs: serial in sync mode,
+        max(coding, network) in async mode."""
+        self.stats["modeled_coding_s"] += coding_s
+        return self._overlap(coding_s, net_s)
+
+    def _coding_s(self, fut) -> float:
+        """Modeled duration of a submitted engine call."""
+        if fut is None:
+            return 0.0
+        return self.net.cost.coding_s(fut.work_bytes)
+
+    # ------------------------------------------------------------------
     # normal-mode seal fan-out (data server -> parity servers)
     # ------------------------------------------------------------------
     def _handle_seals(self, sl: StripeList, ds: int, events) -> float:
@@ -176,7 +231,13 @@ class MemECCluster:
         """Fan seal events out to parity servers, folding each parity
         server's whole batch of rebuilt chunks through one engine call.
         ``items``: (stripe_list, data_server, SealEvent) triples — possibly
-        from different stripe lists (multi-key SETs)."""
+        from different stripe lists (multi-key SETs).
+
+        Coding is *submitted* before the seal legs are modeled: distinct
+        parity servers fold concurrently (their coding phase is the max,
+        not the sum), and the async pipeline overlaps that fold with the
+        in-flight seal legs (``max(coding, network)``; serial in sync
+        mode)."""
         t = 0.0
         legs = []
         per_parity: dict[int, list[tuple]] = {}
@@ -188,15 +249,21 @@ class MemECCluster:
                 legs.append(Leg("seal", ev.payload_bytes, f"s{ds}", f"s{p}",
                                 self._is_failed(p)))
                 per_parity.setdefault(p, []).append((sl, ds, ev))
-        for p, pitems in per_parity.items():
-            rebuilts = self._sv(p).fold_seal_batch([ev for _, _, ev in pitems])
+        folds = [(p, pitems, *self._sv(p).submit_fold_seals(
+                    [ev for _, _, ev in pitems]))
+                 for p, pitems in per_parity.items()]
+        net_t = self.net.phase(legs) if legs else 0.0
+        coding_t = 0.0
+        for p, pitems, fut, finish in folds:
+            coding_t = max(coding_t, self._coding_s(fut))
+            rebuilts = finish()
             if self.verify_rebuild:
                 for (sl, ds, ev), rebuilt in zip(pitems, rebuilts):
                     src = self._sv(ds).get_sealed_chunk(ev.chunk_id)
                     assert src is not None and np.array_equal(rebuilt, src), \
                         "parity rebuild mismatch"
-        if legs:
-            t += self.net.phase(legs)
+        if folds or legs:
+            t += self._merge_coding(coding_t, net_t)
         return t
 
     def _seal_to_failed_parity(self, sl: StripeList, ds: int, ev, failed_p: int) -> float:
@@ -213,8 +280,9 @@ class MemECCluster:
             if c is not None:
                 data[i] = c
             legs.append(Leg("recon_fetch", self.chunk_size, f"s{src}", f"s{r}"))
-        t += self.net.phase(legs)
-        parity = self.engine.encode_batch(data[None])[0]
+        fut = self.engine.submit_encode(data[None])
+        t += self._merge_coding(self._coding_s(fut), self.net.phase(legs))
+        parity = fut.result()[0]
         ppos = sl.parity_servers.index(failed_p)
         cid = self._stripe_chunk_id(sl, ev.chunk_id.stripe_id, self.k + ppos)
         rc = ReconChunk(cid, parity[ppos].copy(), dirty=True)
@@ -317,8 +385,64 @@ class MemECCluster:
     # need special handling (degraded stripes, large objects, upserts,
     # in-batch duplicates) fall back to the single-key workflows, so the
     # batched paths stay byte-identical with sequential execution.
+    #
+    # ``proxy_id=None`` spreads the batch across this cluster's proxies
+    # as per-key-hash lanes (every occurrence of a key stays in one lane,
+    # preserving per-key request order); with the async pipeline the
+    # lanes' modeled latencies overlap (``NetSim.merge_lanes``, busiest
+    # shared server as the serialization floor), in sync mode they run
+    # back to back.
     # ------------------------------------------------------------------
-    def multi_get(self, keys, proxy_id: int = 0) -> list:
+    def _proxy_lanes(self, keys) -> list[tuple[int, list[int]]]:
+        lanes: dict[int, list[int]] = {}
+        for i, key in enumerate(keys):
+            pid = fnv1a(key, seed=PROXY_LANE_SEED) % self.num_proxies
+            lanes.setdefault(pid, []).append(i)
+        return sorted(lanes.items())
+
+    def _run_proxy_lanes(self, kind: str, keys, impl) -> list:
+        """``impl(idxs, pid) -> (results, t|None)``; results merge back in
+        request order, lane latencies merge into one facade record."""
+        results: list = [None] * len(keys)
+        dts: list[float] = []
+        busys: list[dict] = []
+        for pid, idxs in self._proxy_lanes(keys):
+            b0 = self.net.busy_snapshot()
+            res, t = impl(idxs, pid)
+            for i, v in zip(idxs, res):
+                results[i] = v
+            if t is not None:
+                dts.append(t)
+                busys.append(NetSim.busy_delta(b0, self.net.busy_snapshot()))
+        if dts:
+            if self.async_engine and len(dts) > 1:
+                merged = NetSim.merge_lanes(dts, busys)
+                # savings vs *serially executed lanes* (what sequential
+                # per-proxy multi_* calls would have cost) — tracked
+                # apart from intra_overlap_saved_s, which only counts
+                # overlaps the sync pipeline genuinely pays as a sum
+                # (coding vs legs, seal fan-out vs acks)
+                self.stats["proxy_lane_saved_s"] += sum(dts) - merged
+            else:
+                merged = sum(dts)
+            if len(dts) > 1:
+                self.stats["proxy_lane_batches"] += 1
+            self.net.record(kind, merged)
+        return results
+
+    def multi_get(self, keys, proxy_id: int | None = 0) -> list:
+        keys = list(keys)
+        if proxy_id is None and self.num_proxies > 1 and len(keys) > 1:
+            return self._run_proxy_lanes(
+                "MGET", keys,
+                lambda idxs, pid: self._multi_get_impl(
+                    [keys[i] for i in idxs], pid))
+        out, t = self._multi_get_impl(keys, proxy_id or 0)
+        if t is not None:
+            self.net.record("MGET", t)
+        return out
+
+    def _multi_get_impl(self, keys, proxy_id: int):
         proxy = self.proxies[proxy_id]
         out: list = [None] * len(keys)
         plan = []
@@ -328,6 +452,7 @@ class MemECCluster:
                 out[i] = self.get(key, proxy_id)       # degraded fallback
             else:
                 plan.append((i, key, ds))
+        t = None
         if plan:
             t = self.net.phase([Leg("get", len(key), f"p{proxy.pid}",
                                     f"s{ds}", self._is_failed(ds))
@@ -340,14 +465,25 @@ class MemECCluster:
                                      self._is_failed(ds)))
                 out[i] = v
             t += self.net.phase(resp_legs)
-            self.net.record("MGET", t)
             for i, key, ds in plan:    # large objects: fetch fragments
                 total = large_total(out[i])
                 if total is not None:
                     out[i] = self._get_large(key, total, proxy_id)
-        return out
+        return out, t
 
-    def multi_set(self, items, proxy_id: int = 0) -> list[bool]:
+    def multi_set(self, items, proxy_id: int | None = 0) -> list[bool]:
+        items = list(items)
+        if proxy_id is None and self.num_proxies > 1 and len(items) > 1:
+            return self._run_proxy_lanes(
+                "MSET", [k for k, _ in items],
+                lambda idxs, pid: self._multi_set_impl(
+                    [items[i] for i in idxs], pid))
+        ok, t = self._multi_set_impl(items, proxy_id or 0)
+        if t is not None:
+            self.net.record("MSET", t)
+        return ok
+
+    def _multi_set_impl(self, items, proxy_id: int):
         proxy = self.proxies[proxy_id]
         ok = [False] * len(items)
         batch, deferred, seen = [], [], set()
@@ -364,6 +500,7 @@ class MemECCluster:
             else:
                 seen.add(key)
                 batch.append((i, key, value, sl, ds))
+        t = None
         if batch:
             t = 0.0
             reqs, legs = [], []
@@ -390,18 +527,19 @@ class MemECCluster:
                 proxy.buffer_mapping(ds, key, cid, iseq)
                 touched.append(ds)
                 ok[i] = True
-            t += self._handle_seals_batched(seal_items)
-            t += self.net.phase(ack_legs)
+            # async: the seal fan-out (parity rebuild + fold) overlaps
+            # the SET acknowledgements already in flight
+            t += self._overlap(self._handle_seals_batched(seal_items),
+                               self.net.phase(ack_legs))
             for req in reqs:
                 proxy.ack(req.seq)
             for ds in dict.fromkeys(touched):
                 t += self._maybe_checkpoint(ds)
-            self.net.record("MSET", t)
         for i, key, value in deferred:   # duplicate keys: now upserts
             ok[i] = self.set(key, value, proxy_id)
-        return ok
+        return ok, t
 
-    def multi_update(self, items, proxy_id: int = 0) -> list[bool]:
+    def multi_update(self, items, proxy_id: int | None = 0) -> list[bool]:
         items = list(items)
         if self.crash_hook is not None and self.crash_hook[0] == "update":
             # fault injection must fire exactly as in sequential mode:
@@ -410,12 +548,24 @@ class MemECCluster:
             hook_i = next((i for i, (k, _) in enumerate(items)
                            if k == self.crash_hook[1]), None)
             if hook_i is not None:
+                hook_pid = proxy_id if proxy_id is not None else 0
                 ok = [False] * len(items)
                 ok[:hook_i] = self.multi_update(items[:hook_i], proxy_id)
-                ok[hook_i] = self.update(*items[hook_i], proxy_id)
+                ok[hook_i] = self.update(*items[hook_i], hook_pid)
                 ok[hook_i + 1:] = self.multi_update(items[hook_i + 1:],
                                                     proxy_id)
                 return ok
+        if proxy_id is None and self.num_proxies > 1 and len(items) > 1:
+            return self._run_proxy_lanes(
+                "MUPDATE", [k for k, _ in items],
+                lambda idxs, pid: self._multi_update_impl(
+                    [items[i] for i in idxs], pid))
+        ok, t = self._multi_update_impl(items, proxy_id or 0)
+        if t is not None:
+            self.net.record("MUPDATE", t)
+        return ok
+
+    def _multi_update_impl(self, items, proxy_id: int):
         proxy = self.proxies[proxy_id]
         ok = [False] * len(items)
         batch, deferred, seen = [], [], set()
@@ -435,6 +585,7 @@ class MemECCluster:
                 continue
             seen.add(key)
             batch.append((i, key, value, sl, ds, head))
+        t = None
         if batch:
             # head-probe round trip (sequential update() pays a modeled
             # GET per key before choosing the update path — charge the
@@ -471,31 +622,37 @@ class MemECCluster:
                 done_reqs.append(req)
                 ok[i] = True
             legs = []
+            fut = None
             if sealed_jobs:
-                # one batched engine call computes every parity row of
-                # every updated chunk (vs. one xor_delta per key x parity)
+                # one *submitted* engine call computes every parity row of
+                # every updated chunk (vs. one xor_delta per key x parity);
+                # the delta legs are modeled while it is in flight
                 fulls = np.zeros((len(sealed_jobs), self.chunk_size),
                                  np.uint8)
                 for b, (sl, ds, cid, seg_off, seg, req) in enumerate(sealed_jobs):
                     fulls[b, seg_off: seg_off + len(seg)] = seg
                 positions = np.array(
                     [cid.position for _, _, cid, _, _, _ in sealed_jobs])
-                deltas = self.engine.delta_batch(positions, fulls)
-                for (sl, ds, cid, seg_off, seg, req), delta in zip(
-                        sealed_jobs, deltas):
-                    for j, p in enumerate(sl.parity_servers):
-                        self._sv(p).apply_data_delta_row(
-                            sl, cid, delta[j], proxy.pid, req.seq)
-                        legs.append(Leg("delta", len(seg), f"s{ds}",
-                                        f"s{p}", self._is_failed(p)))
+                fut = self.engine.submit_delta(positions, fulls)
+                for sl, ds, cid, seg_off, seg, req in sealed_jobs:
+                    legs += [Leg("delta", len(seg), f"s{ds}", f"s{p}",
+                                 self._is_failed(p))
+                             for p in sl.parity_servers]
             for sl, ds, key, value, req in replica_jobs:
                 for p in sl.parity_servers:
                     self._sv(p).apply_replica_delta(key, value, False,
                                                     proxy.pid, req.seq)
                     legs.append(Leg("replica_delta", len(key) + len(value),
                                     f"s{ds}", f"s{p}", self._is_failed(p)))
-            if legs:
-                t += self.net.phase(legs)
+            net_t = self.net.phase(legs) if legs else 0.0
+            if fut is not None:
+                for (sl, ds, cid, seg_off, seg, req), delta in zip(
+                        sealed_jobs, fut.result()):
+                    for j, p in enumerate(sl.parity_servers):
+                        self._sv(p).apply_data_delta_row(
+                            sl, cid, delta[j], proxy.pid, req.seq)
+            if legs or fut is not None:
+                t += self._merge_coding(self._coding_s(fut), net_t)
             t += self.net.phase([Leg("update_ack", 8, f"s{ds}",
                                      f"p{proxy.pid}", self._is_failed(ds))
                                  for _, _, _, _, ds, _ in batch])
@@ -505,10 +662,9 @@ class MemECCluster:
                 proxy.ack(req.seq)
             for p in parity_set:
                 self._sv(p).prune_deltas(proxy.pid, proxy.ack_watermark)
-            self.net.record("MUPDATE", t)
         for i, key, value in deferred:
             ok[i] = self.update(key, value, proxy_id)
-        return ok
+        return ok, t
 
     # ------------------------------------------------------------------
     # SET
@@ -538,13 +694,14 @@ class MemECCluster:
         iseq = self._sv(ds).live_iseq(key)
         for p in sl.parity_servers:
             self._sv(p).store_replica(key, value, iseq=iseq)
-        t += self._handle_seals(sl, ds, seal_events)
-        # acks (data server piggybacks the key->chunk-ID mapping, §5.3)
+        # acks (data server piggybacks the key->chunk-ID mapping, §5.3);
+        # async overlaps the seal fan-out with the acks in flight
         ack_legs = [Leg("set_ack", len(key) + 8, f"s{ds}", f"p{proxy.pid}",
                         self._is_failed(ds))]
         ack_legs += [Leg("set_ack", 8, f"s{p}", f"p{proxy.pid}", self._is_failed(p))
                      for p in sl.parity_servers]
-        t += self.net.phase(ack_legs)
+        t += self._overlap(self._handle_seals(sl, ds, seal_events),
+                           self.net.phase(ack_legs))
         proxy.buffer_mapping(ds, key, cid, iseq)
         t += self._maybe_checkpoint(ds)
         proxy.ack(req.seq)
@@ -616,6 +773,17 @@ class MemECCluster:
             seg_off, seg = off, xor[:0]
         crash = (self.crash_hook is not None and self.crash_hook[0] == kind
                  and self.crash_hook[1] == key)
+        # one submitted engine call serves every parity server (the rows
+        # are column slices of the same delta); resolution is safe before
+        # the crash check — engine calls carry no cluster state
+        fut = None
+        rows = None
+        if sealed and self.code.m > 0:
+            full = np.zeros(self.chunk_size, np.uint8)
+            full[seg_off: seg_off + len(seg)] = seg
+            fut = self.engine.submit_delta(np.array([cid.position]),
+                                           full[None])
+            rows = fut.result()[0]
         applied = 0
         legs = []
         for j, p in enumerate(sl.parity_servers):
@@ -627,7 +795,8 @@ class MemECCluster:
             if sealed:
                 legs.append(Leg("delta", len(seg), f"s{ds}", f"s{p}",
                                 self._is_failed(p)))
-                psrv.apply_data_delta(sl, cid, seg_off, seg, proxy.pid, req.seq)
+                psrv.apply_data_delta_row(sl, cid, rows[j], proxy.pid,
+                                          req.seq)
             else:
                 nv = value if kind == "update" else b""
                 legs.append(Leg("replica_delta", len(key) + len(nv),
@@ -635,7 +804,7 @@ class MemECCluster:
                 psrv.apply_replica_delta(key, nv, kind == "delete",
                                          proxy.pid, req.seq)
             applied += 1
-        t += self.net.phase(legs)
+        t += self._merge_coding(self._coding_s(fut), self.net.phase(legs))
         t += self.net.phase([Leg(f"{kind}_ack", 8, f"s{ds}", f"p{proxy.pid}",
                                  self._is_failed(ds))])
         proxy.ack(req.seq)
@@ -776,9 +945,11 @@ class MemECCluster:
             self.stats["recon_chunk_hits"] += 1
             return rc, 0.0
         available, legs = self._gather_available(sl, stripe_id, position, r)
-        t = self.net.phase(legs[: self.k]) if legs else 0.0
-        rec = self.engine.decode_batch([available], [[position]],
-                                       self.chunk_size)[0]
+        fut = self.engine.submit_decode([available], [[position]],
+                                        self.chunk_size)
+        net_t = self.net.phase(legs[: self.k]) if legs else 0.0
+        t = self._merge_coding(self._coding_s(fut), net_t)
+        rec = fut.result()[0]
         rc = ReconChunk(cid, np.array(rec[position], np.uint8))
         if position < self.k:
             rc.parse()
@@ -814,9 +985,14 @@ class MemECCluster:
             wanted.append([cid.position])
             all_legs.extend(legs[: self.k])
         # recovery time scales with volume: each redirected server drains
-        # its chunk fetches link-serialized, redirected servers in parallel
-        t = self.net.serialized_phase(all_legs)
-        recs = self.engine.decode_batch(avail_list, wanted, self.chunk_size)
+        # its chunk fetches link-serialized, redirected servers in parallel;
+        # the one-shot batched decode is submitted first and its modeled
+        # time overlaps the bulk fetches (decode resolves lazily on every
+        # backend — see the engine module docstring)
+        fut = self.engine.submit_decode(avail_list, wanted, self.chunk_size)
+        t = self._merge_coding(self._coding_s(fut),
+                               self.net.serialized_phase(all_legs))
+        recs = fut.result()
         for (sl, cid, r), rec in zip(tasks, recs):
             rc = ReconChunk(cid, np.array(rec[cid.position], np.uint8))
             if cid.position < self.k:

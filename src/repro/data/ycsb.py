@@ -172,12 +172,16 @@ def run_workload(cluster, workload: str, num_ops: int,
     window: list[tuple] = []          # (kind, key, val) in arrival order
     in_window: dict[bytes, str] = {}  # key -> kind currently buffered
     flushes = 0
+    # async pipeline: hand the whole window to the store and let it
+    # spread per-key-hash lanes across its proxies (proxy_id=None) —
+    # concurrent lanes instead of one proxy per flush
+    spread = bool(getattr(cluster, "async_engine", False)) and num_proxies > 1
 
     def flush():
         nonlocal window, in_window, flushes
         if not window:
             return
-        pid = flushes % num_proxies
+        pid = None if spread else flushes % num_proxies
         flushes += 1
         by_kind: dict[str, list] = {}
         for kind, key, val in window:   # kinds keep first-arrival order

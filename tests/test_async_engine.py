@@ -1,0 +1,365 @@
+"""Intra-shard async coding pipeline (PR 4).
+
+The async pipeline (``async_engine=True`` / ``$MEMEC_ASYNC``) must be a
+pure *scheduling* change: engine work is submitted as futures and overlaps
+the shard's modeled netsim legs (``max(coding, network)`` per phase, seal
+fan-out concurrent with SET acks, per-proxy lanes for multi-key batches),
+but every stored byte and every served value stays identical to the
+synchronous pipeline — in normal mode, degraded mode, and during
+``fail_server`` batched recovery, for S=1 and S=4.  The modeled-latency
+win is tracked in ``stats["intra_overlap_saved_s"]``.
+"""
+import os
+import subprocess
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
+from conftest import subprocess_env
+
+from repro.core import CostModel, EngineFuture, make_cluster, make_engine
+from repro.core.codes import make_code
+from repro.data.ycsb import YCSBConfig, YCSBWorkload, run_workload
+
+KW = dict(num_servers=16, num_proxies=4, scheme="rs", n=10, k=8, c=4,
+          chunk_size=512, max_unsealed=2)
+# rs(4,2) small-cluster shape for the interleaving property (fast)
+KW_SMALL = dict(num_servers=8, num_proxies=2, scheme="rs", n=4, k=2, c=6,
+                chunk_size=256, max_unsealed=2, mapping_ckpt_every=16)
+
+
+def sync_async_pair(shards=1, **kw):
+    merged = dict(KW)
+    merged.update(kw)
+    return (make_cluster(shards=shards, async_engine=False, **merged),
+            make_cluster(shards=shards, async_engine=True, **merged))
+
+
+def all_keys(cfg):
+    w = YCSBWorkload(cfg)
+    return [w.key(i) for i in range(cfg.num_objects)]
+
+
+# ---------------------------------------------------------------------------
+# engine-level futures
+# ---------------------------------------------------------------------------
+
+class TestEngineFutures:
+    BACKENDS = ("numpy", "jax")
+
+    def _engine(self, backend, scheme="rs", n=6, k=4):
+        return make_engine(backend, make_code(scheme, n, k))
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_submit_matches_blocking_calls(self, backend, rng):
+        eng = self._engine(backend)
+        C = 64
+        data = rng.integers(0, 256, (5, 4, C), dtype=np.uint8)
+        assert np.array_equal(eng.submit_encode(data).result(),
+                              eng.encode_batch(data))
+        idx = np.array([0, 3, 1])
+        xors = rng.integers(0, 256, (3, C), dtype=np.uint8)
+        assert np.array_equal(eng.submit_delta(idx, xors).result(),
+                              eng.delta_batch(idx, xors))
+        parity = eng.encode_batch(data)
+        avail = [{0: data[b, 0], 1: data[b, 1], 4: parity[b, 0],
+                  5: parity[b, 1]} for b in range(5)]
+        wanted = [[2, 3]] * 5
+        got = eng.submit_decode(avail, wanted, C).result()
+        want = eng.decode_batch(avail, wanted, C)
+        for g, w in zip(got, want):
+            assert sorted(g) == sorted(w)
+            for pos in w:
+                assert np.array_equal(g[pos], w[pos])
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_future_resolution_is_idempotent(self, backend, rng):
+        eng = self._engine(backend)
+        data = rng.integers(0, 256, (2, 4, 32), dtype=np.uint8)
+        fut = eng.submit_encode(data)
+        first = fut.result()
+        assert fut.done
+        assert first is fut.result()
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_work_bytes_deterministic_and_positive(self, backend):
+        eng = self._engine(backend)
+        f1 = eng.submit_encode(np.zeros((3, 4, 64), np.uint8))
+        f2 = eng.submit_encode(np.zeros((3, 4, 64), np.uint8))
+        assert f1.work_bytes == f2.work_bytes > 0
+        assert eng.submit_delta(np.array([1]), np.zeros((1, 64), np.uint8)
+                                ).work_bytes > 0
+
+    def test_empty_batches(self):
+        # numpy is lazy (work runs at result()); jax short-circuits to a
+        # pre-resolved future — both return the empty shape
+        fut = self._engine("numpy").submit_encode(
+            np.zeros((0, 4, 64), np.uint8))
+        assert fut.result().shape == (0, 2, 64)
+        fut = self._engine("jax").submit_encode(
+            np.zeros((0, 4, 64), np.uint8))
+        assert fut.done and fut.result().shape == (0, 2, 64)
+
+    def test_wrap_is_preresolved(self):
+        fut = EngineFuture.wrap("x", work_bytes=7)
+        assert fut.done and fut.result() == "x" and fut.work_bytes == 7
+
+    def test_rdp_block_codes_supported(self, rng):
+        eng = self._engine("jax", scheme="rdp", n=7, k=5)
+        C = 64  # divisible by r = p-1 = 16
+        data = rng.integers(0, 256, (3, 5, C), dtype=np.uint8)
+        assert np.array_equal(eng.submit_encode(data).result(),
+                              eng.encode_batch(data))
+
+
+# ---------------------------------------------------------------------------
+# sync/async byte equivalence on seeded YCSB runs
+# ---------------------------------------------------------------------------
+
+class TestSyncAsyncEquivalence:
+    @pytest.mark.parametrize("shards", (1, 4))
+    def test_normal_degraded_and_recovery(self, shards):
+        n_obj = 1200 if shards == 1 else 1600
+        cfg = YCSBConfig(num_objects=n_obj, seed=11)
+        sync, asy = sync_async_pair(shards=shards)
+        for cl in (sync, asy):
+            run_workload(cl, "load", 0, cfg, batch_size=16)
+            run_workload(cl, "A", 1200, cfg, batch_size=16)
+        keys = all_keys(cfg)
+        assert sync.multi_get(keys) == asy.multi_get(keys)
+        # fail a server: batched recovery runs, then traffic lands on the
+        # degraded shard *during* the outage
+        sid = sync.global_sid(2, 3) if shards > 1 else 3
+        ts, ta = sync.fail_server(sid), asy.fail_server(sid)
+        assert ts["recovered_chunks"] == ta["recovered_chunks"]
+        assert sync.multi_get(keys) == asy.multi_get(keys)
+        wcfg = YCSBConfig(num_objects=n_obj, seed=12)
+        for cl in (sync, asy):
+            run_workload(cl, "A", 600, wcfg, batch_size=16)
+        assert sync.multi_get(keys) == asy.multi_get(keys)
+        for cl in (sync, asy):
+            cl.restore_server(sid)
+        assert sync.multi_get(keys) == asy.multi_get(keys)
+        if shards == 1:
+            assert asy.stats["degraded_requests"] == \
+                sync.stats["degraded_requests"]
+
+    def test_single_key_paths_identical(self, rng):
+        sync, asy = sync_async_pair()
+        kv = {}
+        for i in range(600):
+            k = b"sk%06d" % i
+            v = bytes(rng.integers(0, 256, 8 if i % 2 else 24,
+                                   dtype=np.uint8))
+            assert sync.set(k, v) == asy.set(k, v) is True
+            kv[k] = v
+        for i, k in enumerate(sorted(kv)):
+            if i % 3 == 0:
+                nv = bytes(len(kv[k]))
+                assert sync.update(k, nv) == asy.update(k, nv)
+                kv[k] = nv
+            elif i % 7 == 0:
+                assert sync.delete(k) == asy.delete(k)
+                kv[k] = None
+        for k, v in kv.items():
+            assert sync.get(k) == asy.get(k) == v
+
+    def test_env_var_knob(self):
+        env = subprocess_env()
+        env["MEMEC_ASYNC"] = "1"
+        out = subprocess.check_output(
+            ["python", "-c",
+             "from repro.core import make_cluster;"
+             "print(make_cluster(shards=1, num_servers=8, scheme='rs',"
+             " n=4, k=2, c=4).async_engine)"], env=env)
+        assert out.strip() == b"True"
+        env["MEMEC_ASYNC"] = "0"
+        out = subprocess.check_output(
+            ["python", "-c",
+             "from repro.core import make_cluster;"
+             "print(make_cluster(shards=1, num_servers=8, scheme='rs',"
+             " n=4, k=2, c=4).async_engine)"], env=env)
+        assert out.strip() == b"False"
+
+
+# ---------------------------------------------------------------------------
+# modeled-latency win
+# ---------------------------------------------------------------------------
+
+class TestOverlapAccounting:
+    def test_overlap_saves_modeled_time_coding_bound(self):
+        """With GF throughput slowed to be coding-bound, the async
+        pipeline must both record savings and reduce total modeled time."""
+        cost = CostModel(coding_Bps=5e7, coding_fixed_s=2e-5)
+        cfg = YCSBConfig(num_objects=900, seed=21)
+        sync, asy = sync_async_pair(cost=cost)
+        for cl in (sync, asy):
+            run_workload(cl, "load", 0, cfg, batch_size=16)
+            run_workload(cl, "A", 800, cfg, batch_size=16)
+        assert sync.stats["intra_overlap_saved_s"] == 0.0
+        assert asy.stats["intra_overlap_saved_s"] > 0
+        assert asy.stats["modeled_coding_s"] > 0
+        assert asy.net.total_recorded_s < sync.net.total_recorded_s
+        assert sync.multi_get(all_keys(cfg)) == asy.multi_get(all_keys(cfg))
+
+    def test_single_key_seal_ack_overlap(self, rng):
+        """Even without batching, async SETs overlap the seal fan-out
+        with the acks — savings appear once chunks start sealing."""
+        sync, asy = sync_async_pair()
+        for i in range(900):
+            v = rng.bytes(24)
+            sync.set(b"ov%06d" % i, v)
+            asy.set(b"ov%06d" % i, v)
+        assert sum(s.seals for s in asy.servers) > 0
+        assert asy.stats["intra_overlap_saved_s"] > 0
+        assert asy.net.total_recorded_s < sync.net.total_recorded_s
+
+    def test_recovery_merges_coding_with_fetches(self):
+        cost = CostModel(coding_Bps=5e7, coding_fixed_s=2e-5)
+        cfg = YCSBConfig(num_objects=1500, seed=23)
+        sync, asy = sync_async_pair(cost=cost)
+        for cl in (sync, asy):
+            run_workload(cl, "load", 0, cfg, batch_size=32)
+        ts, ta = sync.fail_server(3), asy.fail_server(3)
+        assert ts["recovered_chunks"] == ta["recovered_chunks"] > 0
+        # sync recovery pays coding + fetches serially; async the max
+        assert ta["T_recovery"] < ts["T_recovery"]
+        keys = all_keys(cfg)
+        assert sync.multi_get(keys) == asy.multi_get(keys)
+        sync.restore_server(3)
+        asy.restore_server(3)
+        assert sync.multi_get(keys) == asy.multi_get(keys)
+
+
+# ---------------------------------------------------------------------------
+# cross-proxy lanes
+# ---------------------------------------------------------------------------
+
+class TestProxyLanes:
+    def test_spread_batches_merge_into_one_record(self, rng):
+        _, asy = sync_async_pair()
+        items = [(b"ln%06d" % i, rng.bytes(24)) for i in range(96)]
+        assert all(asy.multi_set(items, proxy_id=None))
+        assert asy.stats["proxy_lane_batches"] > 0
+        # lane overlap is reported against the serial-lane baseline,
+        # never folded into the sync-vs-async intra_overlap stat
+        assert asy.stats["proxy_lane_saved_s"] > 0
+        assert asy.net.ops_by_kind["MSET"] == 1   # one merged record
+        assert sum(p.requests_begun for p in asy.proxies) >= len(items)
+        got = asy.multi_get([k for k, _ in items], proxy_id=None)
+        assert got == [v for _, v in items]
+
+    def test_lane_assignment_keeps_per_key_order(self, rng):
+        """Duplicate keys in one spread batch must upsert in request
+        order (all occurrences of a key hash to the same lane)."""
+        sync, asy = sync_async_pair()
+        items = []
+        for i in range(40):
+            k = b"dup%04d" % (i % 10)
+            items.append((k, rng.bytes(24)))
+        assert all(sync.multi_set(items, proxy_id=0))
+        assert all(asy.multi_set(items, proxy_id=None))
+        for k in {k for k, _ in items}:
+            assert sync.get(k) == asy.get(k)
+
+    def test_sync_spread_runs_serially(self, rng):
+        """proxy_id=None without async: lanes execute back to back (the
+        conservative model) and must not record overlap savings."""
+        sync, _ = sync_async_pair()
+        items = [(b"ss%06d" % i, rng.bytes(24)) for i in range(64)]
+        assert all(sync.multi_set(items, proxy_id=None))
+        assert sync.stats["intra_overlap_saved_s"] == 0.0
+        assert sync.stats["proxy_lane_saved_s"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# property-based interleavings (style of tests/test_transitions_prop.py):
+# a sync and an async twin replay the same drawn op/failure sequence and
+# must never diverge on a single served value
+# ---------------------------------------------------------------------------
+
+KEYSPACE = [b"ak%05d" % i for i in range(40)]
+
+
+class TwinDriver:
+    def __init__(self):
+        self.sync = make_cluster(shards=1, async_engine=False, **KW_SMALL)
+        self.asy = make_cluster(shards=1, async_engine=True, **KW_SMALL)
+        self.failed: set[int] = set()
+        self.version = 0
+
+    def step(self, data):
+        op = data.draw(st.sampled_from(
+            ("mset", "set", "update", "mget", "get", "fail", "restore")),
+            label="op")
+        if op in ("set", "update"):
+            key = data.draw(st.sampled_from(KEYSPACE), label="key")
+            self.version += 1
+            val = bytes((self.version + i) % 256
+                        for i in range(8 if key[-1] % 2 else 24))
+            if op == "set":
+                assert self.sync.set(key, val) == self.asy.set(key, val)
+            else:
+                assert self.sync.update(key, val) == \
+                    self.asy.update(key, val)
+        elif op == "mset":
+            ks = data.draw(st.lists(st.sampled_from(KEYSPACE),
+                                    min_size=1, max_size=12), label="mkeys")
+            self.version += 1
+            items = [(k, bytes((self.version + j) % 256 for j in
+                               range(8 if k[-1] % 2 else 24))) for k in ks]
+            assert self.sync.multi_set(items, proxy_id=0) == \
+                self.asy.multi_set(items, proxy_id=None)
+        elif op == "mget":
+            ks = data.draw(st.lists(st.sampled_from(KEYSPACE),
+                                    min_size=1, max_size=12), label="gkeys")
+            assert self.sync.multi_get(ks, proxy_id=0) == \
+                self.asy.multi_get(ks, proxy_id=None)
+        elif op == "get":
+            key = data.draw(st.sampled_from(KEYSPACE), label="gkey")
+            assert self.sync.get(key) == self.asy.get(key)
+        elif op == "fail":
+            live = [s for s in range(len(self.sync.servers))
+                    if s not in self.failed]
+            if len(self.failed) >= 2 or not live:  # rs(4,2): m = 2
+                return
+            sid = data.draw(st.sampled_from(live), label="fsid")
+            self.sync.fail_server(sid)
+            self.asy.fail_server(sid)
+            self.failed.add(sid)
+        elif op == "restore":
+            if not self.failed:
+                return
+            sid = data.draw(st.sampled_from(sorted(self.failed)),
+                            label="rsid")
+            self.sync.restore_server(sid)
+            self.asy.restore_server(sid)
+            self.failed.discard(sid)
+
+    def finish(self):
+        for sid in sorted(self.failed):
+            self.sync.restore_server(sid)
+            self.asy.restore_server(sid)
+        self.failed.clear()
+        for key in KEYSPACE:
+            assert self.sync.get(key) == self.asy.get(key), key
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.data())
+def test_async_interleavings_track_sync(data):
+    d = TwinDriver()
+    for _ in range(40):
+        d.step(data)
+    d.finish()
+
+
+@pytest.mark.slow
+@settings(max_examples=16, deadline=None)
+@given(st.data())
+def test_async_interleavings_track_sync_long(data):
+    """Longer soak variant (scripts/verify.sh --slow)."""
+    d = TwinDriver()
+    for _ in range(80):
+        d.step(data)
+    d.finish()

@@ -1,0 +1,59 @@
+"""Marker hygiene guard (PR 4 CI satellite).
+
+CI's fast job deselects ``slow``-marked tests.  A marker typo (e.g. a
+module-level ``pytestmark = pytest.mark.slowtests``) or an accidental
+blanket mark would silently deselect an entire suite and CI would pass
+with zero coverage.  Guard: ``pytest -m "not slow"`` must still collect
+a non-zero number of tests in every module the async-pipeline PR touches,
+and the ``slow`` marker must be registered (no unknown-marker warnings).
+"""
+import os
+import subprocess
+from collections import Counter
+
+import pytest
+
+from conftest import subprocess_env
+
+# every test module touched by (or load-bearing for) the async pipeline
+GUARDED_MODULES = [
+    "tests/test_async_engine.py",
+    "tests/test_engine.py",
+    "tests/test_multikey.py",
+    "tests/test_shard.py",
+    "tests/test_store.py",
+    "tests/test_system.py",
+    "tests/test_transitions_prop.py",
+]
+
+
+def _collect(args):
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = subprocess.run(
+        ["python", "-m", "pytest", "--collect-only", "-q", *args],
+        cwd=root, env=subprocess_env(), capture_output=True, text=True)
+    assert out.returncode in (0, 5), out.stdout + out.stderr
+    per_module: Counter = Counter()
+    for line in out.stdout.splitlines():
+        if "::" in line and not line.startswith(("=", " ")):
+            per_module[line.split("::", 1)[0]] += 1
+    return per_module, out
+
+
+@pytest.mark.guard
+def test_not_slow_collects_tests_in_every_touched_module():
+    per_module, out = _collect(["-m", "not slow", *GUARDED_MODULES])
+    for mod in GUARDED_MODULES:
+        assert per_module.get(mod, 0) > 0, (
+            f"pytest -m 'not slow' collected 0 tests from {mod} — "
+            f"a marker typo is deselecting the suite\n{out.stdout}")
+
+
+@pytest.mark.guard
+def test_slow_marker_is_registered_and_used():
+    # the slow suite itself must be non-empty (the nightly job runs it)
+    per_module, out = _collect(["-m", "slow", "tests"])
+    assert sum(per_module.values()) > 0, \
+        f"no slow-marked tests collected\n{out.stdout}"
+    # registration: pytest must not warn about an unknown `slow` marker
+    assert "Unknown pytest.mark.slow" not in out.stdout + out.stderr
