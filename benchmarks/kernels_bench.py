@@ -66,9 +66,15 @@ def run():
     emit("cuckoo.ref.q2000", us_cr, f"{len(probe)} probes/call")
 
     # CodingEngine backends: per-stripe cost amortization with batching
+    from repro.core.codes import make_code
     from repro.core.engine import make_engine
     C = 4096
     engines = ("numpy", "jax") if fast else ("numpy", "jax", "pallas")
+    # fast smoke under CI: always include the matrix-selected engine so
+    # e.g. the MEMEC_ENGINE=pallas job tracks pallas decode rows too
+    sel = os.environ.get("MEMEC_ENGINE", "").split(",")[0].strip()
+    if fast and sel and sel not in engines:
+        engines += (sel,)
     for name in engines:
         eng = make_engine(name, code)
         for B in (1, 16):
@@ -76,6 +82,39 @@ def run():
             us = timeit(eng.encode_batch, data, reps=3)
             emit(f"engine.{name}.encode.B{B}", us,
                  f"{B * (8 + 2) * C}B/call {us / B:.1f}us/stripe")
+
+    # decode path (PR 5 plan/execute split): double-erasure recovery
+    # shape — one pattern per batch, so the group-by plans one cached
+    # inversion and one batched matmul, and jax/pallas dispatch at submit
+    for name in engines:
+        eng = make_engine(name, code)
+        for B in (1, 16):
+            data = rng.integers(0, 256, (B, 8, C), dtype=np.uint8)
+            parity = eng.encode_batch(data)
+            stripes = np.concatenate([data, parity], axis=1)
+            avail = [{i: stripes[b, i] for i in range(10)
+                      if i not in (0, 9)} for b in range(B)]
+            wanted = [[0, 9]] * B
+            us = timeit(lambda: eng.decode_batch(avail, wanted, C), reps=3)
+            emit(f"engine.{name}.decode.B{B}", us,
+                 f"{B * 8 * C}B/call {us / max(B, 1):.1f}us/stripe")
+
+    # native batched RDP on the Pallas grid (PR 5): the (m*r, k*r) 0/1
+    # block matrix runs the column-loop kernel, no jnp fallback
+    rdp = make_code("rdp", 10, 8)
+    B = 4
+    for name in engines:
+        eng = make_engine(name, rdp)
+        data = rng.integers(0, 256, (B, 8, C), dtype=np.uint8)
+        us_e = timeit(eng.encode_batch, data, reps=3)
+        emit(f"engine.{name}.rdp_encode.B{B}", us_e, f"{B * 10 * C}B/call")
+        parity = eng.encode_batch(data)
+        stripes = np.concatenate([data, parity], axis=1)
+        avail = [{i: stripes[b, i] for i in range(10) if i not in (2, 8)}
+                 for b in range(B)]
+        wanted = [[2, 8]] * B
+        us_d = timeit(lambda: eng.decode_batch(avail, wanted, C), reps=3)
+        emit(f"engine.{name}.rdp_decode.B{B}", us_d, f"{B * 8 * C}B/call")
 
 
 if __name__ == "__main__":

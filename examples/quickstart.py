@@ -78,6 +78,37 @@ def main():
           f"{pair[True].stats['proxy_lane_batches']} lane batches; "
           "contents byte-identical to sync")
 
+    # --- 3a'. plan/execute decode + the modeled engine queue (PR 5) ---
+    # decode is a DecodePlan (host metadata: pattern group-by, cached
+    # inversions) plus one batched device matmul per pattern group, so
+    # jax/pallas dispatch it at submit; in async mode degraded
+    # reconstruction overlaps decode with the recon fetches — the win is
+    # stats["decode_overlap_saved_s"].  CostModel(engine_depth=d) bounds
+    # how many engine calls one shard runs concurrently (default inf =
+    # the historical no-contention merge); the extra wait a finite depth
+    # induces lands in stats["engine_queue_wait_s"].
+    from repro.core import CostModel
+    deg = {}
+    for depth in (float("inf"), 1):
+        cl3 = make_cluster(shards=1, num_servers=16, scheme="rs", n=10,
+                           k=8, c=4, chunk_size=512, max_unsealed=2,
+                           num_proxies=1, async_engine=True,
+                           cost=CostModel(coding_Bps=5e7,
+                                          coding_fixed_s=2e-5,
+                                          engine_depth=depth))
+        for i in range(0, 2000, 32):
+            cl3.multi_set(items[i:i + 32])
+        cl3.fail_server(3, recover=False)   # §5.4 on-demand reconstruction
+        cl3.multi_get([k for k, _ in items[:400]])
+        deg[depth] = cl3
+    inf_cl, d1 = deg[float("inf")], deg[1]
+    print(f"eager decode: {inf_cl.stats['reconstructions']} on-demand "
+          f"recons hid {inf_cl.stats['decode_overlap_saved_s']*1e3:.2f} "
+          "modeled ms of decode behind recon fetches; "
+          f"engine_depth=1 adds {d1.stats['engine_queue_wait_s']*1e3:.2f} "
+          "ms of modeled queue wait (depth=inf adds "
+          f"{inf_cl.stats['engine_queue_wait_s']*1e3:.2f})")
+
     # --- 3b. elastic placement: grow the cluster + escape a hot shard ---
     ec = make_cluster(shards=3, placement="ring", num_servers=16,
                       scheme="rs", n=10, k=8, c=4, chunk_size=512,

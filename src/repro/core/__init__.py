@@ -37,8 +37,8 @@ from .baselines import AllReplicationCluster, HybridEncodingCluster
 from .chunk import CHUNK_SIZE, ChunkBuilder, ChunkId, ObjectRef
 from .codes import Code, NoCode, RDPCode, RSCode, XORCode, make_code
 from .coordinator import Coordinator, ServerState
-from .engine import (CodingEngine, EngineFuture, JaxEngine, NumpyEngine,
-                     PallasEngine, make_engine, resolve_async)
+from .engine import (CodingEngine, DecodePlan, EngineFuture, JaxEngine,
+                     NumpyEngine, PallasEngine, make_engine, resolve_async)
 from .engine import engine_specs
 from .index import CuckooIndex
 from .netsim import CostModel, Leg, NetSim

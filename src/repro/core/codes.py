@@ -305,6 +305,32 @@ class RDPCode(Code):
                     diag_d[d] ^= xb[s]
         return np.stack([xor, diag_d.reshape(C)])
 
+    def block_matrix(self) -> np.ndarray:
+        """The code as one (2r, k*r) 0/1 matrix over sub-block rows.
+
+        Chunk i reshapes to r = p-1 sub-block rows; column ``i*r + s``
+        is disk i's sub-row s.  Output rows 0..r-1 are the row parity,
+        rows r..2r-1 the diagonals (the row-parity disk's diagonal
+        contribution expands to XOR over all data disks at its sub-row).
+        This is the analytic form of what ``engine.block_rep`` used to
+        probe out of ``encode`` with k*r basis vectors — pure-XOR, so
+        every entry is 0/1 and the Pallas column-loop kernels apply.
+        """
+        r = self.p - 1
+        E = np.zeros((2 * r, self.k * r), dtype=np.uint8)
+        for i in range(self.k):
+            for s in range(r):
+                E[s, i * r + s] ^= 1                    # row parity
+                d = (i + s) % self.p
+                if d != self.p - 1:
+                    E[r + d, i * r + s] ^= 1            # direct diagonal
+        for s in range(r):  # row-parity disk's diagonal contribution
+            d = (self.row_disk + s) % self.p
+            if d != self.p - 1:
+                for i in range(self.k):
+                    E[r + d, i * r + s] ^= 1
+        return E
+
 
 # ---------------------------------------------------------------------------
 # Single-parity XOR code (n = k + 1)

@@ -15,9 +15,9 @@ Backends (all byte-identical, cross-validated in ``tests/test_engine.py``):
   the reference oracle and the default for the CPU-only simulation.
 * ``JaxEngine``    — pure-jnp batched path (``kernels/ref.py`` idiom).
 * ``PallasEngine`` — batched Pallas grids over ``gf256_matmul`` /
-  ``delta_update`` for dense GF(2^8) codes (RS, XOR); block-structured
-  XOR codes (RDP) reuse the jnp path (their 0/1 block matrix would blow
-  up the unrolled kernel body).
+  ``delta_update``; block-structured codes (RDP) route through the same
+  ``gf256_matmul_batched`` entry natively (column-loop kernels, with
+  0/1 matrices on a bit-plane-free XOR-select body).
 
 The device backends share a *block-linear representation* of the code: any
 systematic code here (RS, RDP, XOR, none) is GF(2^8)-linear over sub-block
@@ -36,22 +36,29 @@ Async submission (PR 4): ``submit_encode`` / ``submit_decode`` /
 cluster can issue coding work while the same shard's netsim legs are
 modeled in flight (``async_engine=True`` / ``$MEMEC_ASYNC``).  The numpy
 backend resolves lazily (the work runs at ``result()``); the jax and
-pallas backends *dispatch* encode/delta on-device at submit time — XLA's
-async dispatch does the real overlapping — and call
-``jax.block_until_ready`` only at resolution.  ``submit_decode`` stays
-lazy on every backend: its host-side erasure-pattern grouping and matrix
-inversion gate the device matmuls, so only the *modeled* overlap applies
-(device-side decode submission is a ROADMAP open item).  Every future
-carries a
-deterministic ``work_bytes`` figure (GF(2^8) multiply-accumulate bytes)
-that ``CostModel.coding_s`` turns into modeled time; results are
-byte-identical to the blocking calls by construction.
+pallas backends *dispatch* on-device at submit time — XLA's async
+dispatch does the real overlapping — and call ``jax.block_until_ready``
+only at resolution.  Every future carries a deterministic ``work_bytes``
+figure (GF(2^8) multiply-accumulate bytes) that ``CostModel.coding_s``
+turns into modeled time; results are byte-identical to the blocking
+calls by construction.
+
+Plan/execute decode (PR 5): decode is split into a ``DecodePlan`` built
+at submit time from host *metadata only* — erasure-pattern signatures,
+the cached ``(k*r, k*r)`` inversions (a bounded LRU, ``inv_cache_size``
+/ ``$MEMEC_INV_CACHE``), per-pattern group layout, and the output
+scatter map — and an execute stage that issues ONE batched device
+matmul per pattern group (plus one for re-encoded parity rows).  On the
+device backends ``submit_decode`` therefore dispatches at submit like
+encode/delta, instead of deferring the group-by to ``result()``; the
+``device_dispatches`` counter is the probe the tests assert this with.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import os
+from collections import OrderedDict
 
 import numpy as np
 
@@ -83,20 +90,60 @@ class BlockRep:
 
 @functools.lru_cache(maxsize=None)
 def block_rep(code: Code) -> BlockRep:
-    """Probe the numpy oracle with basis vectors to extract the matrix.
+    """The code's block-linear matrix, analytic where available.
 
-    All codes here are XOR-linear maps with GF(2^8) coefficients, so k*r
-    single-byte probes at chunk width r fully determine the encode matrix.
+    Codes exposing ``block_matrix()`` (RDP) hand over their matrix
+    directly; anything else is probed from the numpy oracle with basis
+    vectors — all codes here are XOR-linear maps with GF(2^8)
+    coefficients, so k*r single-byte probes at chunk width r fully
+    determine the encode matrix (``tests/test_codes.py`` cross-checks
+    the analytic form against the probe).
     """
     r = (code.p - 1) if isinstance(code, RDPCode) else 1
     k, m = code.k, code.m
-    E = np.zeros((m * r, k * r), dtype=np.uint8)
-    for j in range(k * r):
-        probe = np.zeros((k, r), dtype=np.uint8)
-        probe[j // r, j % r] = 1
-        E[:, j] = code.encode(probe).reshape(m * r)
+    if hasattr(code, "block_matrix"):
+        E = np.asarray(code.block_matrix(), dtype=np.uint8)
+        assert E.shape == (m * r, k * r), (E.shape, m, k, r)
+    else:
+        E = np.zeros((m * r, k * r), dtype=np.uint8)
+        for j in range(k * r):
+            probe = np.zeros((k, r), dtype=np.uint8)
+            probe[j // r, j % r] = 1
+            E[:, j] = code.encode(probe).reshape(m * r)
     E.setflags(write=False)
     return BlockRep(r=r, encode=E)
+
+
+# ---------------------------------------------------------------------------
+# Decode plan (host metadata only — no chunk bytes)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DecodeGroup:
+    """One erasure-pattern group of a batched decode.
+
+    ``idxs``: batch items sharing the pattern; ``use``: the chunk
+    positions feeding the inverse (sorted availability, first k);
+    ``inv``: the cached (k*r, k*r) inverse; ``need_par``/``par_rows``:
+    parity positions to re-encode and their generator rows.
+    """
+    idxs: tuple[int, ...]
+    use: tuple[int, ...]
+    inv: np.ndarray
+    wanted: tuple[int, ...]
+    need_par: tuple[int, ...]
+    par_rows: np.ndarray | None
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodePlan:
+    """Everything a decode needs besides the chunk bytes: the pattern
+    group-by, per-group inverses, and the output scatter map.  Built
+    from host metadata at submit time so device backends can dispatch
+    the per-group matmuls immediately."""
+    n_items: int
+    chunk_size: int
+    groups: tuple[DecodeGroup, ...]
 
 
 # ---------------------------------------------------------------------------
@@ -156,12 +203,26 @@ class CodingEngine:
 
     name = "base"
 
-    def __init__(self, code: Code):
+    #: default bound for the decode-inverse LRU (see ``inv_cache_size``)
+    DEFAULT_INV_CACHE = 256
+
+    def __init__(self, code: Code, inv_cache_size: int | None = None):
         self.code = code
         self.rep = block_rep(code)
-        # decode-matrix cache: erasure patterns recur per failed server
-        self._inv_cache: dict[tuple[int, ...],
-                              tuple[tuple[int, ...], np.ndarray]] = {}
+        # decode-matrix cache: erasure patterns recur per failed server,
+        # but rolling failures across many patterns must not grow it
+        # without bound — bounded LRU (knob: ctor arg or $MEMEC_INV_CACHE)
+        if inv_cache_size is None:
+            inv_cache_size = int(os.environ.get("MEMEC_INV_CACHE",
+                                                self.DEFAULT_INV_CACHE))
+        self.inv_cache_size = max(1, int(inv_cache_size))
+        self._inv_cache: OrderedDict[tuple[int, ...],
+                                     tuple[tuple[int, ...], np.ndarray]] = \
+            OrderedDict()
+        # device-dispatch probe: device backends bump this every time a
+        # kernel/jit call is issued — tests assert submit_* dispatches
+        # at submit (counter moves before result()), numpy stays at 0
+        self.device_dispatches = 0
 
     # -- core batched ops (implemented by backends) ---------------------
     def encode_batch(self, data: np.ndarray) -> np.ndarray:
@@ -242,6 +303,7 @@ class CodingEngine:
         """
         hit = self._inv_cache.get(avail_sig)
         if hit is not None:
+            self._inv_cache.move_to_end(avail_sig)
             return hit
         k, r = self.code.k, self.rep.r
         if len(avail_sig) < k:
@@ -254,7 +316,36 @@ class CodingEngine:
         rows = np.concatenate([G[p * r:(p + 1) * r] for p in use])
         inv = gf256.gf_mat_inv(rows)
         self._inv_cache[avail_sig] = (use, inv)
+        while len(self._inv_cache) > self.inv_cache_size:
+            self._inv_cache.popitem(last=False)
         return use, inv
+
+    def plan_decode(self, avail_sigs, wanted, chunk_size: int) -> DecodePlan:
+        """Build a ``DecodePlan`` from host metadata only.
+
+        ``avail_sigs``: per item, the available stripe positions (any
+        iterable — sorted here); ``wanted``: per item, the positions to
+        reconstruct.  Items sharing (pattern, wanted) decode together:
+        one cached inversion, one batched matmul, one scatter group.
+        """
+        k, r = self.code.k, self.rep.r
+        G = self.rep.generator
+        sigs = [tuple(sorted(s)) for s in avail_sigs]
+        wsigs = [tuple(w) for w in wanted]
+        by_pattern: dict[tuple, list[int]] = {}
+        for i, key in enumerate(zip(sigs, wsigs)):
+            by_pattern.setdefault(key, []).append(i)
+        groups = []
+        for (sig, wsig), idxs in by_pattern.items():
+            use, inv = self._decode_inverse(sig)
+            need_par = tuple(w for w in wsig if w >= k)
+            par_rows = None
+            if need_par:
+                par_rows = np.concatenate(
+                    [G[p * r:(p + 1) * r] for p in need_par])
+            groups.append(DecodeGroup(tuple(idxs), use, inv, wsig,
+                                      need_par, par_rows))
+        return DecodePlan(len(sigs), chunk_size, tuple(groups))
 
 
 class NumpyEngine(CodingEngine):
@@ -324,16 +415,15 @@ class JaxEngine(CodingEngine):
         """(O, J) ∘ (B, J, Cb) -> (B, O, Cb) over GF(2^8), device-side."""
         _, jnp = _jax()
         shared, _ = _jnp_block_matmuls()
+        self.device_dispatches += 1
         return shared(jnp.asarray(M), jnp.asarray(blocks))
 
     def _matmul_per_item_dev(self, Ms: np.ndarray, blocks: np.ndarray):
         """(B, O, J) ∘ (B, J, Cb) -> (B, O, Cb), one matrix per item."""
         _, jnp = _jax()
         _, per_item = _jnp_block_matmuls()
+        self.device_dispatches += 1
         return per_item(jnp.asarray(Ms), jnp.asarray(blocks))
-
-    def _matmul(self, M: np.ndarray, blocks: np.ndarray) -> np.ndarray:
-        return np.asarray(self._matmul_dev(M, blocks))
 
     @staticmethod
     def _resolve_dev(dev, shape):
@@ -383,57 +473,80 @@ class JaxEngine(CodingEngine):
         # byte-identity true by construction
         return self.submit_encode(data).result()
 
-    def decode_batch(self, available, wanted, chunk_size):
-        available = list(available)
-        wanted = [list(w) for w in wanted]
-        results: list[dict | None] = [None] * len(available)
-        k, r, C = self.code.k, self.rep.r, chunk_size
-        groups: dict[tuple, list[int]] = {}
-        for i, (av, w) in enumerate(zip(available, wanted)):
-            groups.setdefault(
-                (tuple(sorted(av.keys())), tuple(w)), []).append(i)
-        G = self.rep.generator
-        for (sig, wsig), idxs in groups.items():
-            use, inv = self._decode_inverse(sig)
+    def submit_decode(self, available, wanted, chunk_size):
+        """Plan on host metadata, dispatch the per-group matmuls NOW.
+
+        The plan's group-by and cached inversions need no chunk bytes,
+        so the device work is issued at submit — like encode/delta —
+        and ``result()`` only blocks on it and scatters the output."""
+        available = [dict(a) for a in available]
+        wb = self.decode_work_bytes(len(available), chunk_size)
+        if not available:
+            return EngineFuture.wrap([], wb, "decode")
+        plan = self.plan_decode([a.keys() for a in available], wanted,
+                                chunk_size)
+        devs = self._execute_decode_dev(plan, available)
+        return EngineFuture(lambda: self._scatter_decode(plan, devs),
+                            wb, "decode")
+
+    def _execute_decode_dev(self, plan: DecodePlan, available) -> list:
+        """Execute stage: one batched device matmul per pattern group
+        (plus one for re-encoded parity rows), data kept on device
+        between the two — no host round trip."""
+        devs = []
+        for g in plan.groups:
             stacked = np.stack(
                 [np.stack([np.asarray(available[i][p], np.uint8)
-                           for p in use]) for i in idxs])     # (Bg, k, C)
-            data_blocks = self._matmul(inv, self._blocks(stacked))
-            data = data_blocks.reshape(len(idxs), k, C)
-            need_par = [w for w in wsig if w >= k]
-            par = None
-            if need_par:
-                rows = np.concatenate(
-                    [G[p * r:(p + 1) * r] for p in need_par])
-                par = self._matmul(rows, data_blocks).reshape(
-                    len(idxs), len(need_par), C)
-            for bi, i in enumerate(idxs):
-                out = {}
-                for w in wsig:
-                    out[w] = (data[bi, w] if w < k
-                              else par[bi, need_par.index(w)])
-                results[i] = out
+                           for p in g.use]) for i in g.idxs])  # (Bg, k, C)
+            data_dev = self._matmul_dev(g.inv, self._blocks(stacked))
+            par_dev = (self._matmul_dev(g.par_rows, data_dev)
+                       if g.par_rows is not None else None)
+            devs.append((data_dev, par_dev))
+        return devs
+
+    def _scatter_decode(self, plan: DecodePlan, devs) -> list[dict]:
+        """Resolution: block on the dispatched groups and scatter each
+        item's wanted positions back into per-stripe dicts."""
+        k, C = self.code.k, plan.chunk_size
+        results: list[dict | None] = [None] * plan.n_items
+        for g, (data_dev, par_dev) in zip(plan.groups, devs):
+            Bg = len(g.idxs)
+            data = self._resolve_dev(data_dev, (Bg, k, C))
+            par = (self._resolve_dev(par_dev, (Bg, len(g.need_par), C))
+                   if par_dev is not None else None)
+            for bi, i in enumerate(g.idxs):
+                results[i] = {w: (data[bi, w] if w < k
+                                  else par[bi, g.need_par.index(w)])
+                              for w in g.wanted}
         return results
+
+    def decode_batch(self, available, wanted, chunk_size):
+        # same plan/execute body as the submitted path, resolved on the
+        # spot — sync/async byte-identity true by construction
+        return self.submit_decode(available, wanted, chunk_size).result()
 
     def delta_batch(self, data_indices, xors):
         return self.submit_delta(data_indices, xors).result()
 
 
 class PallasEngine(JaxEngine):
-    """Batched Pallas grids for dense GF(2^8) codes (r == 1).
+    """Batched Pallas grids for every block-linear code.
 
-    RS and XOR hit the `gf256_matmul`/`delta_update` kernels with a
-    (batch, C-tile) grid; RDP's (m*r, k*r) 0/1 block matrix would unroll
-    into a pathological kernel body, so r > 1 inherits the jnp path —
-    still device-side, still byte-identical.
+    Dense codes (RS, XOR; r == 1) hit the fully-unrolled
+    `gf256_matmul`/`delta_update` kernel bodies with a (batch, C-tile)
+    grid.  Block-structured codes (RDP; r = p-1) route through the SAME
+    `gf256_matmul_batched` entry point natively: its column-loop kernels
+    handle the (m*r, k*r) block matrix — pure-XOR 0/1 matrices drop the
+    bit-plane loop entirely — so RDP encode/decode no longer falls back
+    to the jnp path (ROADMAP "batching RDP natively in Pallas").
+    Per-item delta matrices (r > 1) remain on the jnp per-item matmul.
     """
 
     name = "pallas"
 
     def _matmul_dev(self, M, blocks):
-        if self.rep.r != 1:
-            return super()._matmul_dev(M, blocks)
         from repro.kernels.gf256_matmul import gf256_matmul_batched
+        self.device_dispatches += 1
         return gf256_matmul_batched(M, blocks)
 
     def _gammas(self, data_indices) -> np.ndarray:
@@ -450,6 +563,7 @@ class PallasEngine(JaxEngine):
             return np.zeros((B, self.code.m, C), np.uint8)
         from repro.kernels.delta_update import delta_apply_batched
         # parity=None: delta-only kernel — no dead parity streams
+        self.device_dispatches += 1
         return np.asarray(delta_apply_batched(
             None, self._gammas(data_indices), xors))
 
@@ -463,6 +577,7 @@ class PallasEngine(JaxEngine):
             return EngineFuture.wrap(np.zeros((B, self.code.m, C), np.uint8),
                                      wb, "delta")
         from repro.kernels.delta_update import delta_apply_batched
+        self.device_dispatches += 1
         dev = delta_apply_batched(None, self._gammas(data_indices), xors)
         return EngineFuture(
             lambda: self._resolve_dev(dev, (B, self.code.m, C)), wb, "delta")
@@ -474,6 +589,7 @@ class PallasEngine(JaxEngine):
         if parity.shape[0] == 0 or parity.shape[1] == 0:
             return parity.copy()
         from repro.kernels.delta_update import delta_apply_batched
+        self.device_dispatches += 1
         return np.asarray(delta_apply_batched(
             parity, self._gammas(data_indices), xors))
 

@@ -21,6 +21,13 @@ to the request phases; the async pipeline (``async_engine=True``) merges
 it as ``max(coding, network)`` per phase — the overlap the paper hides
 coding behind.
 
+Engine queue (PR 5): concurrent engine calls submitted in one overlapped
+phase (e.g. per-parity seal folds) contend for ``CostModel.engine_depth``
+execution lanes.  The phase's coding duration is ``engine_makespan`` —
+a depth-limited LPT schedule that degenerates to ``max`` at the default
+infinite depth — so ``max(coding, network)`` is a queue-aware merge and
+``stats["engine_queue_wait_s"]`` exposes the bound on hiding.
+
 Concurrent lanes: ``merge_lanes`` models independent request pipelines
 (e.g. per-proxy sub-batches of one multi-key request) running at the
 same time.  Lanes overlap freely, but a server appearing in several
@@ -57,6 +64,13 @@ class CostModel:
     # figure; shrink `coding_Bps` to model a coding-bound deployment.
     coding_Bps: float = 2.5e9
     coding_fixed_s: float = 2e-6
+    # concurrent-call capacity of one shard's coding engine: engine
+    # calls submitted within one overlapped phase contend for this many
+    # execution lanes.  inf (default) is the historical no-contention
+    # assumption — every modeled latency is unchanged at depth=inf;
+    # finite depths bound how much coding the pipeline can hide and
+    # surface the extra wait as stats["engine_queue_wait_s"].
+    engine_depth: float = float("inf")
 
     def leg(self, payload_bytes: int, to_failed: bool = False) -> float:
         t = self.rtt_s + (payload_bytes + self.header_bytes) / self.bw_Bps + self.proc_s
@@ -69,6 +83,26 @@ class CostModel:
         if work_bytes <= 0 and calls <= 0:
             return 0.0
         return calls * self.coding_fixed_s + work_bytes / self.coding_Bps
+
+    def engine_makespan(self, durations) -> float:
+        """Completion time of engine calls submitted concurrently.
+
+        Longest-processing-time greedy onto ``engine_depth`` lanes —
+        deterministic and within 4/3 of optimal.  At the default
+        ``inf`` depth (or when the calls fit the lanes) this is just
+        ``max(durations)``, the historical infinite-concurrency merge.
+        """
+        ds = sorted((d for d in durations if d > 0), reverse=True)
+        if not ds:
+            return 0.0
+        depth = self.engine_depth
+        if depth == float("inf") or len(ds) <= depth:
+            return ds[0]
+        lanes = [0.0] * max(1, int(depth))
+        for d in ds:
+            i = min(range(len(lanes)), key=lanes.__getitem__)
+            lanes[i] += d
+        return max(lanes)
 
 
 class NetSim:

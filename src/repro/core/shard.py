@@ -535,9 +535,10 @@ class ShardedCluster:
     # shard-scoped failure transitions — one shard's recovery never
     # blocks the others' traffic
     # ------------------------------------------------------------------
-    def fail_server(self, sid: int, shard: int | None = None) -> dict:
+    def fail_server(self, sid: int, shard: int | None = None,
+                    recover: bool = True) -> dict:
         shard, local = self._resolve_server(sid, shard)
-        timings = self.shards[shard].fail_server(local)
+        timings = self.shards[shard].fail_server(local, recover=recover)
         timings["shard"] = shard
         return timings
 

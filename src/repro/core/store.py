@@ -39,6 +39,19 @@ tracks the genuine sync-vs-async win (phases the sync pipeline pays as a
 sum); ``stats["proxy_lane_saved_s"]`` tracks lane overlap relative to
 serially executed per-proxy calls (a different baseline — sync callers
 issuing one batch per proxy call never pay that serialization).
+
+Plan/execute decode + engine queue (PR 5): ``submit_decode`` now
+dispatches on-device at submit on the jax/pallas backends (the engine
+builds a ``DecodePlan`` from host metadata), so degraded reconstruction
+(``_ensure_recon``) and ``fail_server`` batched recovery genuinely
+overlap decode with their fetch legs; their share of the async win is
+``stats["decode_overlap_saved_s"]``.  The degraded-mutate redirect
+deltas are likewise computed through ONE submitted ``submit_delta`` call
+merged with the redirect legs (they used to mutate recon chunks serially
+with unmodeled cost).  Concurrent engine calls in one phase contend for
+``CostModel.engine_depth`` lanes (default inf = the historical
+no-contention merge); the extra wait a finite depth induces is
+``stats["engine_queue_wait_s"]``.
 """
 from __future__ import annotations
 
@@ -163,7 +176,9 @@ class MemECCluster:
                       "migrated_objects": 0, "migrated_chunks": 0,
                       "batch_recovered_chunks": 0, "redirect_handoffs": 0,
                       "modeled_coding_s": 0.0, "intra_overlap_saved_s": 0.0,
-                      "proxy_lane_batches": 0, "proxy_lane_saved_s": 0.0}
+                      "proxy_lane_batches": 0, "proxy_lane_saved_s": 0.0,
+                      "engine_queue_wait_s": 0.0,
+                      "decode_overlap_saved_s": 0.0}
 
     def server_endpoint_names(self) -> list[str]:
         """Netsim endpoint labels of this cluster's storage servers."""
@@ -209,11 +224,31 @@ class MemECCluster:
         self.stats["intra_overlap_saved_s"] += sum(phase_times) - t
         return t
 
-    def _merge_coding(self, coding_s: float, net_s: float) -> float:
+    def _merge_coding(self, coding_s: float, net_s: float,
+                      kind: str | None = None) -> float:
         """Coding vs in-flight netsim legs: serial in sync mode,
-        max(coding, network) in async mode."""
+        max(coding, network) in async mode.  ``kind="decode"`` phases
+        additionally track their share of the async win in
+        ``stats["decode_overlap_saved_s"]`` (a subset of
+        ``intra_overlap_saved_s`` — the read-repair overlap)."""
         self.stats["modeled_coding_s"] += coding_s
-        return self._overlap(coding_s, net_s)
+        t = self._overlap(coding_s, net_s)
+        if self.async_engine and kind == "decode":
+            self.stats["decode_overlap_saved_s"] += coding_s + net_s - t
+        return t
+
+    def _merge_coding_calls(self, durs: list[float], net_s: float,
+                            kind: str | None = None) -> float:
+        """Several engine calls submitted in one overlapped phase
+        contend for the shard engine's ``CostModel.engine_depth`` lanes:
+        the phase's coding duration is the depth-limited makespan (== the
+        historical max at the default infinite depth), with the extra
+        wait surfaced in ``stats["engine_queue_wait_s"]``."""
+        durs = [d for d in durs if d > 0]
+        span = self.net.cost.engine_makespan(durs)
+        if durs:
+            self.stats["engine_queue_wait_s"] += span - max(durs)
+        return self._merge_coding(span, net_s, kind)
 
     def _coding_s(self, fut) -> float:
         """Modeled duration of a submitted engine call."""
@@ -234,10 +269,11 @@ class MemECCluster:
         from different stripe lists (multi-key SETs).
 
         Coding is *submitted* before the seal legs are modeled: distinct
-        parity servers fold concurrently (their coding phase is the max,
-        not the sum), and the async pipeline overlaps that fold with the
-        in-flight seal legs (``max(coding, network)``; serial in sync
-        mode)."""
+        parity servers fold concurrently up to the engine queue's depth
+        (their coding phase is the depth-limited makespan — the plain
+        max at the default infinite ``CostModel.engine_depth``), and the
+        async pipeline overlaps that fold with the in-flight seal legs
+        (``max(coding, network)``; serial in sync mode)."""
         t = 0.0
         legs = []
         per_parity: dict[int, list[tuple]] = {}
@@ -253,9 +289,8 @@ class MemECCluster:
                     [ev for _, _, ev in pitems]))
                  for p, pitems in per_parity.items()]
         net_t = self.net.phase(legs) if legs else 0.0
-        coding_t = 0.0
+        durs = [self._coding_s(fut) for _, _, fut, _ in folds]
         for p, pitems, fut, finish in folds:
-            coding_t = max(coding_t, self._coding_s(fut))
             rebuilts = finish()
             if self.verify_rebuild:
                 for (sl, ds, ev), rebuilt in zip(pitems, rebuilts):
@@ -263,7 +298,7 @@ class MemECCluster:
                     assert src is not None and np.array_equal(rebuilt, src), \
                         "parity rebuild mismatch"
         if folds or legs:
-            t += self._merge_coding(coding_t, net_t)
+            t += self._merge_coding_calls(durs, net_t)
         return t
 
     def _seal_to_failed_parity(self, sl: StripeList, ds: int, ev, failed_p: int) -> float:
@@ -945,10 +980,13 @@ class MemECCluster:
             self.stats["recon_chunk_hits"] += 1
             return rc, 0.0
         available, legs = self._gather_available(sl, stripe_id, position, r)
+        # plan/execute decode: jax/pallas dispatch the pattern-group
+        # matmul on-device HERE, then the fetch legs are modeled while
+        # the device works (async merges the two as max)
         fut = self.engine.submit_decode([available], [[position]],
                                         self.chunk_size)
         net_t = self.net.phase(legs[: self.k]) if legs else 0.0
-        t = self._merge_coding(self._coding_s(fut), net_t)
+        t = self._merge_coding(self._coding_s(fut), net_t, kind="decode")
         rec = fut.result()[0]
         rc = ReconChunk(cid, np.array(rec[position], np.uint8))
         if position < self.k:
@@ -986,12 +1024,13 @@ class MemECCluster:
             all_legs.extend(legs[: self.k])
         # recovery time scales with volume: each redirected server drains
         # its chunk fetches link-serialized, redirected servers in parallel;
-        # the one-shot batched decode is submitted first and its modeled
-        # time overlaps the bulk fetches (decode resolves lazily on every
-        # backend — see the engine module docstring)
+        # the one-shot batched decode is submitted first — on jax/pallas
+        # the per-pattern matmuls dispatch on-device at submit (plan/
+        # execute split) — and its modeled time overlaps the bulk fetches
         fut = self.engine.submit_decode(avail_list, wanted, self.chunk_size)
         t = self._merge_coding(self._coding_s(fut),
-                               self.net.serialized_phase(all_legs))
+                               self.net.serialized_phase(all_legs),
+                               kind="decode")
         recs = fut.result()
         for (sl, cid, r), rec in zip(tasks, recs):
             rc = ReconChunk(cid, np.array(rec[cid.position], np.uint8))
@@ -1060,6 +1099,28 @@ class MemECCluster:
         self.net.record("GET_DEG", t)
         return v
 
+    def _fan_redirect_deltas(self, cid: ChunkId, seg_off: int, seg,
+                             redirected: list, legs: list[Leg]) -> float:
+        """Delta fan-out completion for a degraded mutate of a sealed
+        chunk.  ONE submitted engine call computes every parity row
+        (each failed parity's redirect target consumes its row from it —
+        previously one serial ``delta_batch`` per target with unmodeled
+        cost); the legs are modeled while it is in flight and the
+        redirected recon chunks are patched at resolution."""
+        fut = None
+        if redirected:
+            full = np.zeros(self.chunk_size, np.uint8)
+            full[seg_off: seg_off + len(seg)] = seg
+            fut = self.engine.submit_delta(np.array([cid.position]),
+                                           full[None])
+        t = self._merge_coding(self._coding_s(fut), self.net.phase(legs))
+        if fut is not None:
+            rows = fut.result()[0]
+            for j, rc in redirected:
+                rc.buf ^= rows[j]
+                rc.dirty = True
+        return t
+
     def _degraded_mutate(self, kind: str, proxy: Proxy, sl: StripeList,
                          ds: int, key: bytes, value: bytes | None) -> bool:
         self.stats["degraded_requests"] += 1
@@ -1096,6 +1157,7 @@ class MemECCluster:
         seg_off = off + (int(nz[0]) if len(nz) else 0)
         seg = xor[int(nz[0]): int(nz[-1]) + 1] if len(nz) else xor[:0]
         legs = []
+        redirected: list[tuple[int, ReconChunk]] = []
         for j, p in enumerate(sl.parity_servers):
             pos = self.k + j
             if not self._is_failed(p):
@@ -1114,12 +1176,7 @@ class MemECCluster:
             if sealed:
                 rc, t_rec = self._ensure_recon(sl, p, pos, cid.stripe_id, r)
                 t += t_rec
-                full = np.zeros(self.chunk_size, np.uint8)
-                full[seg_off: seg_off + len(seg)] = seg
-                deltas = self.engine.delta_batch(
-                    np.array([cid.position]), full[None])[0]
-                rc.buf ^= deltas[j]
-                rc.dirty = True
+                redirected.append((j, rc))
             else:
                 # shadow must keep the value size (zero-filled) exactly
                 # like apply_replica_delta does — the eventual seal
@@ -1129,7 +1186,7 @@ class MemECCluster:
                 self._rs(r).temp_replicas[key] = (nv, kind == "delete",
                                                   pre_iseq)
             legs.append(Leg("delta_redirect", len(seg), f"s{ds}", f"s{r}"))
-        t += self.net.phase(legs)
+        t += self._fan_redirect_deltas(cid, seg_off, seg, redirected, legs)
         self.net.record(f"{kind.upper()}_DEG", t)
         return True
 
@@ -1196,30 +1253,32 @@ class MemECCluster:
         seg_off = off + (int(nz[0]) if len(nz) else 0)
         seg = xor[int(nz[0]): int(nz[-1]) + 1] if len(nz) else xor[:0]
         legs = []
+        redirected = []
         for j, p in enumerate(sl.parity_servers):
             if self._is_failed(p):
                 r2 = self.coordinator.redirected_server(sl, p)
                 rc2, t_rec2 = self._ensure_recon(sl, p, self.k + j,
                                                  cid.stripe_id, r2)
                 t += t_rec2
-                full = np.zeros(self.chunk_size, np.uint8)
-                full[seg_off: seg_off + len(seg)] = seg
-                rc2.buf ^= self.engine.delta_batch(
-                    np.array([cid.position]), full[None])[0][j]
-                rc2.dirty = True
+                redirected.append((j, rc2))
                 legs.append(Leg("delta_redirect", len(seg), f"s{r}", f"s{r2}"))
             else:
                 self._sv(p).apply_data_delta(sl, cid, seg_off, seg,
                                              proxy.pid, proxy.seq)
                 legs.append(Leg("delta", len(seg), f"s{r}", f"s{p}"))
-        t += self.net.phase(legs)
+        t += self._fan_redirect_deltas(cid, seg_off, seg, redirected, legs)
         return True, t
 
     # ------------------------------------------------------------------
     # failure / restore transitions (§5.2, §5.5)
     # ------------------------------------------------------------------
-    def fail_server(self, sid: int) -> dict:
-        """Inject a transient failure; returns transition timings."""
+    def fail_server(self, sid: int, recover: bool = True) -> dict:
+        """Inject a transient failure; returns transition timings.
+
+        ``recover=False`` skips the eager one-shot batched recovery so
+        every degraded request reconstructs on demand through
+        ``_ensure_recon`` — the paper's §5.4 on-demand mode, used by the
+        benchmarks to expose the decode path on degraded GET latency."""
         self.failed.add(sid)
         if not self.degraded_enabled:
             return {"T_N_to_D": 0.0}
@@ -1278,7 +1337,8 @@ class MemECCluster:
         # so degraded requests (and the replay below) hit a warm cache.
         # Timed separately — the paper reports transition and recovery
         # durations independently.
-        t_rec, n_rec = self._batch_recover_server(sid)
+        t_rec, n_rec = (self._batch_recover_server(sid) if recover
+                        else (0.0, 0))
         timings["T_recovery"] = t_rec
         timings["recovered_chunks"] = n_rec
         # replay incomplete requests as degraded requests

@@ -19,6 +19,17 @@ Tiling: grid over the byte axis; D tile (k, BC) and P tile (m, BC) live in
 VMEM; APOW (m,k,8 int32) is broadcast to every grid step.  BC=2048 keeps
 the working set (k+m)*BC + 32*m*k ~ 20-40 KB, far under the ~16 MB VMEM
 budget, and 2048 = 16 lanes * 128 keeps the last dim lane-aligned.
+
+Large matrices (PR 5): fully unrolling the (m, k, 8) product is only
+sane for small dense parity shapes; the RDP *block* representation is
+(m*r, k*r) — e.g. (32, 128) for (10,8) at p=17 — and its decode inverse
+is (k*r, k*r).  Above ``MAX_UNROLL_OPS`` the batched entry point
+switches to column-loop kernels whose body is O(k) vector steps over
+(m, BC) lanes; pure-XOR 0/1 matrices (RDP blocks, XOR, and their decode
+inverses — GF(2) systems stay 0/1 under inversion) additionally drop
+the bit-plane loop, since gamma ∈ {0,1} makes gamma·x a select.  This
+is what lets the engine route RDP through the batched Pallas grid
+natively instead of falling back to the jnp path.
 """
 from __future__ import annotations
 
@@ -32,6 +43,10 @@ from jax.experimental import pallas as pl
 from repro.core import gf256
 
 DEFAULT_BLOCK_C = 2048
+
+# beyond this many fused ops (m*k*8) the per-element unrolled kernel
+# body becomes pathological; switch to the column-loop variants
+MAX_UNROLL_OPS = 1024
 
 
 def build_apow(A: np.ndarray) -> np.ndarray:
@@ -99,6 +114,63 @@ def _gf_matmul_batched_call(apow, data, *, m, k, block_c, interpret):
     )(apow, data)
 
 
+def _gf_matmul_cols_kernel(apow_ref, d_ref, o_ref, *, m: int, k: int):
+    """Column-loop body for large matrices: k*8 vectorized (m, BC)
+    accumulation steps instead of m*k*8 scalar-coefficient ops."""
+    d = d_ref[0].astype(jnp.int32)                        # (k, BC)
+    acc = jnp.zeros((m, d.shape[1]), jnp.int32)
+    for j in range(k):
+        dj = d[j]
+        for b in range(8):
+            bit = (dj >> b) & 1                           # (BC,)
+            acc = acc ^ (bit[None, :] * apow_ref[:, j, b][:, None])
+    o_ref[0] = acc.astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "k", "block_c", "interpret"))
+def _gf_matmul_cols_call(apow, data, *, m, k, block_c, interpret):
+    B, _, C = data.shape
+    grid = (B, C // block_c)
+    return pl.pallas_call(
+        functools.partial(_gf_matmul_cols_kernel, m=m, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k, 8), lambda b, c: (0, 0, 0)),
+            pl.BlockSpec((1, k, block_c), lambda b, c: (b, 0, c)),
+        ],
+        out_specs=pl.BlockSpec((1, m, block_c), lambda b, c: (b, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((B, m, C), jnp.uint8),
+        interpret=interpret,
+    )(apow, data)
+
+
+def _gf01_matmul_kernel(a_ref, d_ref, o_ref, *, m: int, k: int):
+    """0/1 matrices (pure-XOR codes): gamma·x is a select, so the
+    bit-plane loop vanishes — k XOR-select steps over (m, BC) lanes."""
+    d = d_ref[0].astype(jnp.int32)                        # (k, BC)
+    acc = jnp.zeros((m, d.shape[1]), jnp.int32)
+    for j in range(k):
+        acc = acc ^ (a_ref[:, j][:, None] * d[j][None, :])
+    o_ref[0] = acc.astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "k", "block_c", "interpret"))
+def _gf01_matmul_call(a01, data, *, m, k, block_c, interpret):
+    B, _, C = data.shape
+    grid = (B, C // block_c)
+    return pl.pallas_call(
+        functools.partial(_gf01_matmul_kernel, m=m, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k), lambda b, c: (0, 0)),
+            pl.BlockSpec((1, k, block_c), lambda b, c: (b, 0, c)),
+        ],
+        out_specs=pl.BlockSpec((1, m, block_c), lambda b, c: (b, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((B, m, C), jnp.uint8),
+        interpret=interpret,
+    )(a01, data)
+
+
 def gf256_matmul_batched(A: np.ndarray, data: jax.Array, *,
                          block_c: int = DEFAULT_BLOCK_C,
                          interpret: bool | None = None) -> jax.Array:
@@ -107,6 +179,11 @@ def gf256_matmul_batched(A: np.ndarray, data: jax.Array, *,
     A: (m, k) uint8 shared across the batch; data: (B, k, C) uint8 ->
     (B, m, C).  The grid runs (batch, C-tiles) so every stripe's tiles are
     independent grid steps — the batched analogue of `gf256_matmul`.
+
+    Works for any matrix size: small dense matrices (RS/XOR parity
+    shapes) take the fully-unrolled kernel; larger ones — the RDP block
+    representation and its decode inverses — take the column-loop
+    kernels, with 0/1 matrices on the bit-plane-free XOR-select body.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -121,9 +198,18 @@ def gf256_matmul_batched(A: np.ndarray, data: jax.Array, *,
     Cp = _round_up(C, block_c)
     if Cp != C:
         data = jnp.pad(data, ((0, 0), (0, 0), (0, Cp - C)))
-    apow = jnp.asarray(build_apow(A))
-    out = _gf_matmul_batched_call(apow, data, m=m, k=k, block_c=block_c,
-                                  interpret=interpret)
+    if m * k * 8 <= MAX_UNROLL_OPS:
+        apow = jnp.asarray(build_apow(A))
+        out = _gf_matmul_batched_call(apow, data, m=m, k=k, block_c=block_c,
+                                      interpret=interpret)
+    elif int(A.max()) <= 1:
+        out = _gf01_matmul_call(jnp.asarray(A.astype(np.int32)), data,
+                                m=m, k=k, block_c=block_c,
+                                interpret=interpret)
+    else:
+        apow = jnp.asarray(build_apow(A))
+        out = _gf_matmul_cols_call(apow, data, m=m, k=k, block_c=block_c,
+                                   interpret=interpret)
     return out[:, :, :C]
 
 

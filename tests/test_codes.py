@@ -104,3 +104,20 @@ def test_make_code_dispatch():
     assert isinstance(make_code("none", 10, 10), NoCode)
     with pytest.raises(ValueError):
         make_code("zfec", 10, 8)
+
+
+def test_rdp_block_matrix_matches_basis_probe():
+    """The analytic RDP block matrix (codes.RDPCode.block_matrix, the
+    one engine.block_rep now uses) must equal the matrix probed out of
+    ``encode`` with k*r basis vectors — and stay 0/1 (pure XOR)."""
+    for k, p in ((8, 17), (5, 7), (3, 5)):
+        code = RDPCode(n=k + 2, k=k, p=p)
+        r = p - 1
+        E = code.block_matrix()
+        assert E.shape == (2 * r, k * r) and int(E.max()) <= 1
+        probed = np.zeros_like(E)
+        for j in range(k * r):
+            basis = np.zeros((k, r), dtype=np.uint8)
+            basis[j // r, j % r] = 1
+            probed[:, j] = code.encode(basis).reshape(2 * r)
+        assert np.array_equal(E, probed), (k, p)

@@ -1,0 +1,278 @@
+"""Plan/execute decode (PR 5).
+
+``submit_decode`` is split into a ``DecodePlan`` built from host
+metadata (erasure-pattern group-by, bounded-LRU cached inversions,
+output scatter map) and an execute stage issuing one batched device
+matmul per pattern group — so the jax/pallas backends dispatch decode
+on-device at submit time, like encode/delta.  These tests pin down:
+
+* cross-backend equivalence (numpy oracle vs jax vs pallas) for RS and
+  RDP, single and double erasures, MIXED patterns in one batch —
+  property-driven;
+* dispatch-at-submit on the device backends, probed via the engines'
+  ``device_dispatches`` counter (numpy stays lazy);
+* the bounded decode-inverse LRU (``inv_cache_size`` /
+  ``$MEMEC_INV_CACHE``) — rolling failures across many patterns must
+  not grow it without limit;
+* the modeled engine queue (``CostModel.engine_depth`` /
+  ``stats["engine_queue_wait_s"]``): finite depth bounds hiding, the
+  default infinite depth preserves every modeled latency.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
+
+from repro.core import CostModel, make_cluster
+from repro.core.codes import RDPCode, make_code
+from repro.core.engine import DecodePlan, NumpyEngine, make_engine
+from repro.data.ycsb import YCSBConfig, YCSBWorkload, run_workload
+
+# (scheme, n, k, chunk sizes) — RDP widths must divide by r = p-1 = 16
+CASES = {
+    "rs": ("rs", 10, 8, (64, 129)),
+    "rdp": ("rdp", 10, 8, (64, 208)),
+}
+BACKENDS = ("numpy", "jax", "pallas")
+
+
+def _stripes(code, B, C, rng):
+    data = rng.integers(0, 256, (B, code.k, C), dtype=np.uint8)
+    parity = np.stack([code.encode(d) for d in data])
+    return np.concatenate([data, parity], axis=1)
+
+
+def _erasure_batch(code, stripes, patterns):
+    """Per-item availability/wanted from a list of erased-position sets."""
+    avail, wanted = [], []
+    for b, erased in enumerate(patterns):
+        avail.append({i: stripes[b, i] for i in range(code.n)
+                      if i not in erased})
+        wanted.append(sorted(erased))
+    return avail, wanted
+
+
+# ---------------------------------------------------------------------------
+# cross-backend equivalence (property-driven, mixed patterns per batch)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(st.data())
+def test_decode_plan_cross_backend_equivalence(data):
+    scheme, n, k, widths = data.draw(st.sampled_from(list(CASES.values())),
+                                     label="case")
+    C = data.draw(st.sampled_from(widths), label="C")
+    B = data.draw(st.integers(min_value=1, max_value=6), label="B")
+    seed = data.draw(st.integers(min_value=0, max_value=2**16), label="seed")
+    code = make_code(scheme, n, k)
+    rng = np.random.default_rng(seed)
+    stripes = _stripes(code, B, C, rng)
+    patterns = []
+    for b in range(B):  # single AND double erasures, varying per item
+        n_erase = data.draw(st.integers(1, code.m), label=f"n_erase{b}")
+        erased = set(rng.choice(code.n, size=n_erase, replace=False).tolist())
+        patterns.append(erased)
+    avail, wanted = _erasure_batch(code, stripes, patterns)
+    want = [code.decode(a, list(w), C) for a, w in zip(avail, wanted)]
+    for backend in BACKENDS:
+        got = make_engine(backend, code).decode_batch(avail, wanted, C)
+        for b in range(B):
+            for w in wanted[b]:
+                assert np.array_equal(got[b][w], want[b][w]), \
+                    (backend, scheme, C, B, b, w)
+                # erased positions must also round-trip the true bytes
+                assert np.array_equal(got[b][w], stripes[b, w]), \
+                    (backend, scheme, C, B, b, w)
+
+
+def test_mixed_patterns_one_batch_group_per_pattern(rng):
+    """One batch holding several distinct erasure patterns plans one
+    group (and one cached inversion) per pattern."""
+    code = make_code("rs", 10, 8)
+    eng = make_engine("jax", code)
+    B, C = 6, 64
+    stripes = _stripes(code, B, C, rng)
+    patterns = [{0}, {0}, {3, 9}, {0}, {3, 9}, {5}]
+    avail, wanted = _erasure_batch(code, stripes, patterns)
+    plan = eng.plan_decode([a.keys() for a in avail], wanted, C)
+    assert isinstance(plan, DecodePlan)
+    assert len(plan.groups) == 3          # {0}, {3,9}, {5}
+    assert sorted(i for g in plan.groups for i in g.idxs) == list(range(B))
+    assert len(eng._inv_cache) == 3
+    got = eng.decode_batch(avail, wanted, C)
+    for b, erased in enumerate(patterns):
+        for w in erased:
+            assert np.array_equal(got[b][w], stripes[b, w])
+
+
+# ---------------------------------------------------------------------------
+# dispatch-at-submit probe
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ("jax", "pallas"))
+@pytest.mark.parametrize("scheme,n,k,C", [("rs", 10, 8, 128),
+                                          ("rdp", 10, 8, 64)])
+def test_submit_decode_dispatches_at_submit(backend, scheme, n, k, C, rng):
+    code = make_code(scheme, n, k)
+    eng = make_engine(backend, code)
+    B = 4
+    stripes = _stripes(code, B, C, rng)
+    # mixed single/double erasures: two pattern groups, one needing a
+    # re-encoded parity row
+    patterns = [{1}, {1}, {0, n - 1}, {0, n - 1}]
+    avail, wanted = _erasure_batch(code, stripes, patterns)
+    before = eng.device_dispatches
+    fut = eng.submit_decode(avail, wanted, C)
+    assert eng.device_dispatches > before, \
+        f"{backend}: submit_decode issued no device work at submit"
+    at_submit = eng.device_dispatches
+    got = fut.result()
+    assert eng.device_dispatches == at_submit, \
+        f"{backend}: result() dispatched extra device work"
+    for b, erased in enumerate(patterns):
+        for w in erased:
+            assert np.array_equal(got[b][w], stripes[b, w])
+
+
+def test_numpy_submit_decode_stays_lazy(rng):
+    code = make_code("rs", 10, 8)
+    eng = make_engine("numpy", code)
+    stripes = _stripes(code, 2, 64, rng)
+    avail, wanted = _erasure_batch(code, stripes, [{2}, {2}])
+    fut = eng.submit_decode(avail, wanted, 64)
+    assert not fut.done and eng.device_dispatches == 0
+    got = fut.result()
+    assert eng.device_dispatches == 0
+    assert np.array_equal(got[0][2], stripes[0, 2])
+
+
+# ---------------------------------------------------------------------------
+# bounded decode-inverse LRU
+# ---------------------------------------------------------------------------
+
+def test_inv_cache_is_lru_bounded(rng):
+    # jax: decode_batch runs through plan_decode, populating the cache
+    # (the numpy oracle loops code.decode and never touches it)
+    code = make_code("rs", 10, 8)
+    eng = make_engine("jax", code)
+    eng.inv_cache_size = 4
+    C = 64
+    stripes = _stripes(code, 1, C, rng)
+    # rolling failures: many distinct erasure patterns, far beyond the cap
+    for i in range(10):
+        erased = {i % code.n, (i + 3) % code.n}
+        avail, wanted = _erasure_batch(code, stripes, [erased])
+        got = eng.decode_batch(avail, wanted, C)
+        for w in wanted[0]:
+            assert np.array_equal(got[0][w], stripes[0, w]), (i, w)
+        assert len(eng._inv_cache) <= 4
+    # recency: a re-touched pattern survives the next evictions
+    keep = {0, 3}
+    avail, wanted = _erasure_batch(code, stripes, [keep])
+    eng.decode_batch(avail, wanted, C)
+    keep_sig = next(reversed(eng._inv_cache))
+    for i in range(3):
+        avail, wanted = _erasure_batch(code, stripes, [{1 + i}])
+        eng.decode_batch(avail, wanted, C)
+    assert keep_sig in eng._inv_cache
+    assert len(eng._inv_cache) <= 4
+
+
+def test_inv_cache_env_knob(monkeypatch, rng):
+    monkeypatch.setenv("MEMEC_INV_CACHE", "2")
+    code = make_code("rs", 6, 4)
+    assert NumpyEngine(code).inv_cache_size == 2     # knob resolves
+    eng = make_engine("jax", code)
+    stripes = _stripes(code, 1, 32, rng)
+    for erased in ({0}, {1}, {2}, {3}):
+        avail, wanted = _erasure_batch(code, stripes, [erased])
+        eng.decode_batch(avail, wanted, 32)
+    assert len(eng._inv_cache) == 2
+    # ctor arg beats the env var
+    assert NumpyEngine(code, inv_cache_size=7).inv_cache_size == 7
+
+
+# ---------------------------------------------------------------------------
+# RDP native Pallas path sanity (analytic 0/1 block matrices)
+# ---------------------------------------------------------------------------
+
+def test_rdp_decode_inverse_stays_binary():
+    """RDP is a GF(2) system: its block matrix AND every decode inverse
+    are 0/1 — the precondition for the bit-plane-free Pallas kernel."""
+    code = make_code("rdp", 10, 8)
+    assert isinstance(code, RDPCode)
+    eng = make_engine("numpy", code)
+    assert int(eng.rep.encode.max()) <= 1
+    for sig in ((1, 2, 3, 4, 5, 6, 7, 8), (0, 1, 2, 3, 4, 5, 6, 9)):
+        _, inv = eng._decode_inverse(sig)
+        assert int(inv.max()) <= 1, sig
+
+
+# ---------------------------------------------------------------------------
+# modeled engine queue
+# ---------------------------------------------------------------------------
+
+class TestEngineQueue:
+    def test_makespan_depth_limited(self):
+        inf = CostModel()
+        assert inf.engine_makespan([]) == 0.0
+        assert inf.engine_makespan([3.0, 2.0, 2.0]) == 3.0
+        d2 = CostModel(engine_depth=2)
+        # LPT onto 2 lanes: [3], [2, 2] -> 4
+        assert d2.engine_makespan([3.0, 2.0, 2.0]) == 4.0
+        assert d2.engine_makespan([3.0, 2.0]) == 3.0   # fits the lanes
+        d1 = CostModel(engine_depth=1)
+        assert d1.engine_makespan([1.0, 2.0, 3.0]) == 6.0
+
+    def _run(self, cost):
+        cl = make_cluster(shards=1, num_servers=16, num_proxies=4,
+                          scheme="rs", n=10, k=8, c=4, chunk_size=512,
+                          max_unsealed=2, cost=cost, async_engine=True)
+        cfg = YCSBConfig(num_objects=900, seed=31)
+        run_workload(cl, "load", 0, cfg, batch_size=16)
+        run_workload(cl, "A", 600, cfg, batch_size=16)
+        return cl
+
+    def test_depth_limit_bounds_hiding_and_surfaces_wait(self):
+        # strongly coding-bound so the depth-limited fold makespan (not
+        # the seal legs' RTT) decides the merged phase duration
+        kw = dict(coding_Bps=1e6, coding_fixed_s=2e-4)
+        unbounded = self._run(CostModel(**kw))
+        bounded = self._run(CostModel(engine_depth=1, **kw))
+        # infinite depth records no queue wait — the historical model
+        assert unbounded.stats["engine_queue_wait_s"] == 0.0
+        # depth=1 serializes the per-parity seal folds: wait shows up
+        # and the total modeled time can only grow
+        assert bounded.stats["engine_queue_wait_s"] > 0.0
+        assert bounded.net.total_recorded_s > unbounded.net.total_recorded_s
+        # scheduling only — served bytes are untouched
+        w = YCSBWorkload(YCSBConfig(num_objects=900, seed=31))
+        keys = [w.key(i) for i in range(900)]
+        assert bounded.multi_get(keys) == unbounded.multi_get(keys)
+
+    def test_degraded_decode_overlap_tracked(self):
+        """Eager decode on the degraded path: async hides decode behind
+        the recon fetches and books the win as decode_overlap_saved_s."""
+        cost = CostModel(coding_Bps=5e7, coding_fixed_s=2e-5)
+        pair = {}
+        for mode in (False, True):
+            # one proxy: the YCSB driver would otherwise spread async
+            # batches across proxy lanes, changing chunk packing order —
+            # the twins must have identical layouts for the per-chunk
+            # reconstruction counts to be comparable
+            cl = make_cluster(shards=1, num_servers=16, num_proxies=1,
+                              scheme="rs", n=10, k=8, c=4, chunk_size=512,
+                              max_unsealed=2, cost=cost, async_engine=mode)
+            cfg = YCSBConfig(num_objects=1000, seed=32)
+            run_workload(cl, "load", 0, cfg, batch_size=16)
+            # on-demand mode (no eager batched recovery): every degraded
+            # GET to a sealed chunk runs the decode plan
+            cl.fail_server(3, recover=False)
+            run_workload(cl, "C", 400, YCSBConfig(num_objects=1000, seed=33),
+                         batch_size=16)
+            pair[mode] = cl
+        sync, asy = pair[False], pair[True]
+        assert sync.stats["reconstructions"] > 0
+        assert sync.stats["reconstructions"] == asy.stats["reconstructions"]
+        assert sync.stats["decode_overlap_saved_s"] == 0.0
+        assert asy.stats["decode_overlap_saved_s"] > 0.0
+        assert asy.net.mean("GET_DEG") < sync.net.mean("GET_DEG")

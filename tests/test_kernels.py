@@ -105,3 +105,33 @@ def test_apow_table():
         for i in range(2):
             for b in range(8):
                 assert ap[r, i, b] == MUL_TABLE[A[r, i], 1 << b]
+
+
+# ---------------------------------------------------------------------------
+# large-matrix batched matmul (PR 5): the RDP block representation —
+# (m*r, k*r) 0/1 matrices and their (k*r, k*r) decode inverses — routes
+# through the column-loop kernel bodies instead of the per-element unroll
+# ---------------------------------------------------------------------------
+
+def test_gf256_matmul_batched_large_binary_matrix(rng):
+    from repro.core.gf256 import gf_matmul_np
+    from repro.kernels.gf256_matmul import MAX_UNROLL_OPS, gf256_matmul_batched
+    O, J, B, Cb = 32, 128, 3, 96          # RDP(10,8)@p=17 block shapes
+    assert O * J * 8 > MAX_UNROLL_OPS     # really takes the 0/1 kernel
+    A = (rng.integers(0, 4, (O, J)) == 0).astype(np.uint8)
+    D = rng.integers(0, 256, (B, J, Cb), dtype=np.uint8)
+    got = np.asarray(gf256_matmul_batched(A, jnp.asarray(D)))
+    want = np.stack([gf_matmul_np(A, d) for d in D])
+    assert np.array_equal(got, want)
+
+
+def test_gf256_matmul_batched_large_dense_matrix(rng):
+    from repro.core.gf256 import gf_matmul_np
+    from repro.kernels.gf256_matmul import MAX_UNROLL_OPS, gf256_matmul_batched
+    O, J, B, Cb = 12, 20, 2, 200          # big AND non-0/1: column loop
+    assert O * J * 8 > MAX_UNROLL_OPS
+    A = rng.integers(0, 256, (O, J), dtype=np.uint8)
+    D = rng.integers(0, 256, (B, J, Cb), dtype=np.uint8)
+    got = np.asarray(gf256_matmul_batched(A, jnp.asarray(D)))
+    want = np.stack([gf_matmul_np(A, d) for d in D])
+    assert np.array_equal(got, want)

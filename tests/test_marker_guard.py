@@ -18,6 +18,7 @@ from conftest import subprocess_env
 # every test module touched by (or load-bearing for) the async pipeline
 GUARDED_MODULES = [
     "tests/test_async_engine.py",
+    "tests/test_decode_plan.py",
     "tests/test_engine.py",
     "tests/test_multikey.py",
     "tests/test_shard.py",
