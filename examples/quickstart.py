@@ -134,15 +134,28 @@ def main():
     assert ec.multi_get([k for k, _ in items[:64]]) == \
         [v for _, v in items[:64]]          # nothing lost along the way
 
-    # --- 4. the TPU data plane: Pallas GF(2^8) kernels ---
+    # --- 4. the compiled GF(2^8) data plane ---
+    # kernels/dispatch picks the path per backend: compiled Pallas grids
+    # on TPU/GPU, an XLA-jitted bit-plane formulation on CPU (faster
+    # than both interpret-mode Pallas and the numpy oracle).  Knobs:
+    #   MEMEC_INTERPRET=1   force interpret-mode Pallas everywhere (the
+    #                       debugging escape hatch; the bench fails
+    #                       loudly if interpret is entered WITHOUT it)
+    #   MEMEC_TUNE_CACHE=f  use tuning cache f instead of the committed
+    #                       kernels/tune_defaults.json; regenerate with
+    #                       `python -m benchmarks.kernels_bench --tune`
+    # `engine.describe()` / `engine.stats()` report the path actually
+    # in use, so a run can always answer "did I actually compile?".
+    from repro.kernels import dispatch
     code = RSCode(n=10, k=8)
     data = jnp.asarray(rng.integers(0, 256, (8, 4096), dtype=np.uint8))
-    parity = ops.encode_stripe(code, data)             # Pallas kernel
+    parity = ops.encode_stripe(code, data)           # dispatched kernel
     stripe = jnp.concatenate([data, parity])
     rec = ops.decode_stripe(code, {i: stripe[i] for i in range(10)
                                    if i not in (1, 9)}, [1, 9], 4096)
     assert np.array_equal(np.asarray(rec[1]), np.asarray(stripe[1]))
-    print("kernel encode + decode-from-8-of-10 round trip: OK")
+    print(f"kernel encode + decode-from-8-of-10 round trip: OK "
+          f"(dispatch: {dispatch.describe()})")
 
 
 if __name__ == "__main__":

@@ -138,6 +138,8 @@ import json
 import os
 import sys
 
+from repro.kernels import dispatch
+
 rows = []
 for line in open(sys.argv[1]):
     parts = line.strip().split(",")
@@ -153,6 +155,10 @@ out = {
     "fast": True,
     "engine_env": os.environ.get("MEMEC_ENGINE", "numpy"),
     "async_env": os.environ.get("MEMEC_ASYNC", "0"),
+    # kernel dispatch provenance: which path produced the compiled rows
+    # (pallas-compiled / xla-compiled / interpret) on this runner
+    "dispatch": dispatch.describe(),
+    "tune_cache": os.environ.get("MEMEC_TUNE_CACHE", "defaults"),
     "rows": rows,
 }
 with open("BENCH_ci.json", "w") as f:

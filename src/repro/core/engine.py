@@ -219,6 +219,10 @@ class CodingEngine:
         self._inv_cache: OrderedDict[tuple[int, ...],
                                      tuple[tuple[int, ...], np.ndarray]] = \
             OrderedDict()
+        # fused decode matrices: [inv ; par_rows ∘ inv] per (use, need_par)
+        # — lets the execute stage issue ONE matmul per pattern group
+        # instead of matmul + re-encode pass (same LRU bound as _inv_cache)
+        self._fused_cache: OrderedDict[tuple, np.ndarray] = OrderedDict()
         # device-dispatch probe: device backends bump this every time a
         # kernel/jit call is issued — tests assert submit_* dispatches
         # at submit (counter moves before result()), numpy stays at 0
@@ -257,6 +261,27 @@ class CodingEngine:
             return parity.copy()
         return parity ^ self.delta_batch(data_indices, xors)
 
+    # -- introspection ---------------------------------------------------
+    def describe(self) -> dict:
+        """Engine identity + the kernel dispatch path actually in use —
+        the answer to "did I actually compile?" (base: host numpy)."""
+        return {
+            "engine": self.name,
+            "code": type(self.code).__name__,
+            "n": self.code.n, "k": self.code.k, "r": self.rep.r,
+            "backend": "host",
+            "path": "numpy-host",
+        }
+
+    def stats(self) -> dict:
+        """Run counters: device dispatches and plan-cache occupancy."""
+        return {
+            "path": self.describe()["path"],
+            "device_dispatches": self.device_dispatches,
+            "inv_cache": len(self._inv_cache),
+            "fused_cache": len(self._fused_cache),
+        }
+
     # -- modeled work (GF(2^8) multiply-accumulate bytes per batch) -----
     def encode_work_bytes(self, batch: int, chunk_size: int) -> int:
         """(m*r, k*r) matrix times (k*r, C/r) blocks, B times."""
@@ -291,6 +316,52 @@ class CodingEngine:
         B, C = xors.shape
         return EngineFuture(lambda: self.delta_batch(data_indices, xors),
                             self.delta_work_bytes(B, C), "delta")
+
+    def submit_fold_rows(self, data_indices, xors: np.ndarray, row_indices,
+                         parity_rows: np.ndarray) -> EngineFuture:
+        """Fused encode + seal-fold: per item, one parity *row*.
+
+        Item i mutates the data chunk at stripe position
+        ``data_indices[i]`` by ``xors[i]`` (B, C) and folds the resulting
+        delta for parity row ``row_indices[i]`` into ``parity_rows[i]``
+        (B, C) — the ``Server.submit_fold_seals`` shape, where each
+        parity server folds only its own row.  Returns (B, C) updated
+        rows.  Base implementation is the two-call composition (full
+        delta, then row pick) the fused device kernels are byte-checked
+        against; work models the single row actually produced.
+        """
+        xors = np.asarray(xors, dtype=np.uint8)
+        parity_rows = np.asarray(parity_rows, dtype=np.uint8)
+        B, C = xors.shape
+        wb = B * self.rep.r * C
+        if B == 0 or self.code.m == 0:
+            return EngineFuture.wrap(parity_rows.copy(), wb, "fold")
+        rows = np.asarray(row_indices, dtype=np.int64)
+        idxs = list(data_indices)
+
+        def thunk():
+            delta = self.delta_batch(idxs, xors)          # (B, m, C)
+            return parity_rows ^ delta[np.arange(B), rows]
+        return EngineFuture(thunk, wb, "fold")
+
+    def submit_apply_delta(self, parity: np.ndarray, data_indices,
+                           xors: np.ndarray) -> EngineFuture:
+        """Fused delta + parity apply: (B, m, C) updated parity.
+
+        The async spelling of ``apply_delta_batch`` — device backends
+        fold the delta into the parity inside one kernel instead of
+        materializing (B, m, C) deltas and XORing on the host.
+        """
+        parity = np.asarray(parity, dtype=np.uint8)
+        xors = np.asarray(xors, dtype=np.uint8)
+        B, C = xors.shape
+        wb = self.delta_work_bytes(B, C)
+        if B == 0 or parity.shape[1] == 0:
+            return EngineFuture.wrap(parity.copy(), wb, "apply_delta")
+        idxs = list(data_indices)
+        return EngineFuture(
+            lambda: self.apply_delta_batch(parity, idxs, xors),
+            wb, "apply_delta")
 
     # -- shared decode plumbing -----------------------------------------
     def _decode_inverse(self, avail_sig: tuple[int, ...]
@@ -347,6 +418,23 @@ class CodingEngine:
                                       need_par, par_rows))
         return DecodePlan(len(sigs), chunk_size, tuple(groups))
 
+    def _fused_decode_matrix(self, g: DecodeGroup) -> np.ndarray:
+        """[inv ; par_rows ∘ inv] — one matrix so a group's data recovery
+        AND parity re-encode are a single device matmul instead of two
+        chained ones.  The composition runs on host once per (use,
+        need_par) pattern and is LRU-cached like the inversions."""
+        key = (g.use, g.need_par)
+        hit = self._fused_cache.get(key)
+        if hit is not None:
+            self._fused_cache.move_to_end(key)
+            return hit
+        M = g.inv if g.par_rows is None else np.concatenate(
+            [g.inv, gf256.gf_matmul_np(g.par_rows, g.inv)])
+        self._fused_cache[key] = M
+        while len(self._fused_cache) > self.inv_cache_size:
+            self._fused_cache.popitem(last=False)
+        return M
+
 
 class NumpyEngine(CodingEngine):
     """Reference oracle: loops the host ``codes.Code`` implementation."""
@@ -385,7 +473,8 @@ def _jax():
 
 @functools.lru_cache(maxsize=None)
 def _jnp_block_matmuls():
-    """jit'd (O,J)x(B,J,Cb) and per-item (B,O,J)x(B,J,Cb) GF(2^8) matmuls."""
+    """jit'd (O,J)x(B,J,Cb) and per-item (B,O,J)x(B,J,Cb) GF(2^8) matmuls,
+    plus the parity-folding per-item variant (fused delta + apply)."""
     jax, jnp = _jax()
     from repro.kernels import ref as kref
 
@@ -399,7 +488,13 @@ def _jnp_block_matmuls():
         prod = kref.gf256_mul_ref(Ms[..., None], D[:, None, :, :])
         return jax.lax.reduce(prod, np.uint8(0), jax.lax.bitwise_xor, (2,))
 
-    return shared, per_item
+    @jax.jit
+    def per_item_fold(Ms, D, P):
+        prod = kref.gf256_mul_ref(Ms[..., None], D[:, None, :, :])
+        return P ^ jax.lax.reduce(prod, np.uint8(0), jax.lax.bitwise_xor,
+                                  (2,))
+
+    return shared, per_item, per_item_fold
 
 
 class JaxEngine(CodingEngine):
@@ -414,16 +509,28 @@ class JaxEngine(CodingEngine):
     def _matmul_dev(self, M: np.ndarray, blocks: np.ndarray):
         """(O, J) ∘ (B, J, Cb) -> (B, O, Cb) over GF(2^8), device-side."""
         _, jnp = _jax()
-        shared, _ = _jnp_block_matmuls()
+        shared, _, _ = _jnp_block_matmuls()
         self.device_dispatches += 1
         return shared(jnp.asarray(M), jnp.asarray(blocks))
 
-    def _matmul_per_item_dev(self, Ms: np.ndarray, blocks: np.ndarray):
-        """(B, O, J) ∘ (B, J, Cb) -> (B, O, Cb), one matrix per item."""
+    def _matmul_per_item_dev(self, Ms: np.ndarray, blocks: np.ndarray,
+                             parity: np.ndarray | None = None):
+        """(B, O, J) ∘ (B, J, Cb) -> (B, O, Cb), one matrix per item;
+        ``parity`` (B, O, Cb), when given, is folded in the same jit."""
         _, jnp = _jax()
-        _, per_item = _jnp_block_matmuls()
+        _, per_item, per_item_fold = _jnp_block_matmuls()
         self.device_dispatches += 1
-        return per_item(jnp.asarray(Ms), jnp.asarray(blocks))
+        if parity is None:
+            return per_item(jnp.asarray(Ms), jnp.asarray(blocks))
+        return per_item_fold(jnp.asarray(Ms), jnp.asarray(blocks),
+                             jnp.asarray(parity))
+
+    def describe(self) -> dict:
+        from repro.kernels import dispatch
+        d = super().describe()
+        d.update(backend=dispatch.backend(), path=dispatch.XLA,
+                 interpret_forced=dispatch.interpret_forced())
+        return d
 
     @staticmethod
     def _resolve_dev(dev, shape):
@@ -459,6 +566,50 @@ class JaxEngine(CodingEngine):
         return EngineFuture(lambda: self._resolve_dev(dev, (B, m, C)),
                             wb, "delta")
 
+    def submit_fold_rows(self, data_indices, xors, row_indices, parity_rows):
+        """Fused: per item, the (r, r) sub-system for ONE parity row is
+        multiplied against the xor blocks and folded into the row inside
+        a single device call — m× less delta work than ``submit_delta``
+        and no host-side XOR pass."""
+        xors = np.asarray(xors, dtype=np.uint8)
+        parity_rows = np.asarray(parity_rows, dtype=np.uint8)
+        B, C = xors.shape
+        m, k, r = self.code.m, self.code.k, self.rep.r
+        wb = B * r * C
+        if B == 0 or m == 0:
+            return EngineFuture.wrap(parity_rows.copy(), wb, "fold")
+        idx = np.asarray(data_indices, dtype=np.int64)
+        rows = np.asarray(row_indices, dtype=np.int64)
+        # E reshaped (m, r, k, r): item i's system is E4[row_i, :, pos_i, :]
+        E4 = self.rep.encode.reshape(m, r, k, r)
+        Ms = np.ascontiguousarray(E4[rows, :, idx, :])    # (B, r, r)
+        dev = self._matmul_per_item_dev(Ms, xors.reshape(B, r, C // r),
+                                        parity_rows.reshape(B, r, C // r))
+        return EngineFuture(lambda: self._resolve_dev(dev, (B, C)),
+                            wb, "fold")
+
+    def submit_apply_delta(self, parity, data_indices, xors):
+        """Fused delta + parity apply in one per-item device call (the
+        old path materialized (B, m, C) deltas, round-tripped them to
+        host, and XORed there)."""
+        parity = np.asarray(parity, dtype=np.uint8)
+        xors = np.asarray(xors, dtype=np.uint8)
+        B, C = xors.shape
+        m, k, r = self.code.m, self.code.k, self.rep.r
+        wb = self.delta_work_bytes(B, C)
+        if B == 0 or m == 0:
+            return EngineFuture.wrap(parity.copy(), wb, "apply_delta")
+        idx = np.asarray(data_indices, dtype=np.int64)
+        cols = self.rep.encode.reshape(m * r, k, r)[:, idx, :]
+        Ms = np.ascontiguousarray(np.transpose(cols, (1, 0, 2)))
+        dev = self._matmul_per_item_dev(Ms, xors.reshape(B, r, C // r),
+                                        parity.reshape(B, m * r, C // r))
+        return EngineFuture(lambda: self._resolve_dev(dev, (B, m, C)),
+                            wb, "apply_delta")
+
+    def apply_delta_batch(self, parity, data_indices, xors):
+        return self.submit_apply_delta(parity, data_indices, xors).result()
+
     def _blocks(self, chunks: np.ndarray) -> np.ndarray:
         """(B, x, C) -> (B, x*r, C//r) sub-block rows."""
         B, x, C = chunks.shape
@@ -490,33 +641,35 @@ class JaxEngine(CodingEngine):
                             wb, "decode")
 
     def _execute_decode_dev(self, plan: DecodePlan, available) -> list:
-        """Execute stage: one batched device matmul per pattern group
-        (plus one for re-encoded parity rows), data kept on device
-        between the two — no host round trip."""
+        """Execute stage: ONE batched device matmul per pattern group.
+
+        The group's inverse and its re-encoded-parity rows are fused into
+        a single host-composed matrix (``_fused_decode_matrix``), so the
+        old matmul -> parity-re-encode chain collapses to one kernel —
+        byte-checked against the two-call composition in
+        ``tests/test_dispatch_tune.py``."""
         devs = []
         for g in plan.groups:
             stacked = np.stack(
                 [np.stack([np.asarray(available[i][p], np.uint8)
                            for p in g.use]) for i in g.idxs])  # (Bg, k, C)
-            data_dev = self._matmul_dev(g.inv, self._blocks(stacked))
-            par_dev = (self._matmul_dev(g.par_rows, data_dev)
-                       if g.par_rows is not None else None)
-            devs.append((data_dev, par_dev))
+            M = self._fused_decode_matrix(g)
+            devs.append(self._matmul_dev(M, self._blocks(stacked)))
         return devs
 
     def _scatter_decode(self, plan: DecodePlan, devs) -> list[dict]:
         """Resolution: block on the dispatched groups and scatter each
-        item's wanted positions back into per-stripe dicts."""
+        item's wanted positions back into per-stripe dicts.  The fused
+        matmul output is (Bg, k + n_par, C): data rows then the
+        re-encoded parity rows."""
         k, C = self.code.k, plan.chunk_size
         results: list[dict | None] = [None] * plan.n_items
-        for g, (data_dev, par_dev) in zip(plan.groups, devs):
-            Bg = len(g.idxs)
-            data = self._resolve_dev(data_dev, (Bg, k, C))
-            par = (self._resolve_dev(par_dev, (Bg, len(g.need_par), C))
-                   if par_dev is not None else None)
+        for g, dev in zip(plan.groups, devs):
+            Bg, npar = len(g.idxs), len(g.need_par)
+            out = self._resolve_dev(dev, (Bg, k + npar, C))
             for bi, i in enumerate(g.idxs):
-                results[i] = {w: (data[bi, w] if w < k
-                                  else par[bi, g.need_par.index(w)])
+                results[i] = {w: (out[bi, w] if w < k
+                                  else out[bi, k + g.need_par.index(w)])
                               for w in g.wanted}
         return results
 
@@ -539,7 +692,14 @@ class PallasEngine(JaxEngine):
     handle the (m*r, k*r) block matrix — pure-XOR 0/1 matrices drop the
     bit-plane loop entirely — so RDP encode/decode no longer falls back
     to the jnp path (ROADMAP "batching RDP natively in Pallas").
-    Per-item delta matrices (r > 1) remain on the jnp per-item matmul.
+    Per-item delta matrices (r > 1) run `gf256_matmul_per_item_batched`
+    — the same batched grid with one matrix tile per item — so RDP
+    updates no longer drop to the jnp per-item matmul either.
+
+    How the kernels actually run comes from ``kernels.dispatch``:
+    compiled Pallas on TPU/GPU, the XLA-jitted ``xla_gf256`` twins on
+    CPU, interpret mode only under ``$MEMEC_INTERPRET=1`` —
+    ``describe()`` reports the resolved path.
     """
 
     name = "pallas"
@@ -548,6 +708,17 @@ class PallasEngine(JaxEngine):
         from repro.kernels.gf256_matmul import gf256_matmul_batched
         self.device_dispatches += 1
         return gf256_matmul_batched(M, blocks)
+
+    def _matmul_per_item_dev(self, Ms, blocks, parity=None):
+        from repro.kernels.gf256_matmul import gf256_matmul_per_item_batched
+        self.device_dispatches += 1
+        return gf256_matmul_per_item_batched(Ms, blocks, parity)
+
+    def describe(self) -> dict:
+        from repro.kernels import dispatch
+        d = CodingEngine.describe(self)
+        d.update(dispatch.describe())
+        return d
 
     def _gammas(self, data_indices) -> np.ndarray:
         idx = np.asarray(data_indices, dtype=np.int64)
@@ -582,16 +753,21 @@ class PallasEngine(JaxEngine):
         return EngineFuture(
             lambda: self._resolve_dev(dev, (B, self.code.m, C)), wb, "delta")
 
-    def apply_delta_batch(self, parity, data_indices, xors):
-        if self.rep.r != 1:
-            return super().apply_delta_batch(parity, data_indices, xors)
+    def submit_apply_delta(self, parity, data_indices, xors):
+        if self.rep.r != 1 or self.code.m == 0:
+            # r > 1: the per-item Pallas grid with in-kernel parity fold
+            return super().submit_apply_delta(parity, data_indices, xors)
         parity = np.asarray(parity, dtype=np.uint8)
-        if parity.shape[0] == 0 or parity.shape[1] == 0:
-            return parity.copy()
+        xors = np.asarray(xors, dtype=np.uint8)
+        B, C = xors.shape
+        wb = self.delta_work_bytes(B, C)
+        if B == 0 or parity.shape[1] == 0:
+            return EngineFuture.wrap(parity.copy(), wb, "apply_delta")
         from repro.kernels.delta_update import delta_apply_batched
         self.device_dispatches += 1
-        return np.asarray(delta_apply_batched(
-            parity, self._gammas(data_indices), xors))
+        dev = delta_apply_batched(parity, self._gammas(data_indices), xors)
+        return EngineFuture(
+            lambda: self._resolve_dev(dev, parity.shape), wb, "apply_delta")
 
 
 # ---------------------------------------------------------------------------

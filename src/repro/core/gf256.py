@@ -51,7 +51,12 @@ MUL_TABLE[1:, 1:] = EXP_TABLE[(LOG_TABLE[_nz][:, None] + LOG_TABLE[_nz][None, :]
 # Device-resident copies (created lazily to keep import cheap on workers).
 @functools.lru_cache(maxsize=None)
 def _device_tables():
-    return (jnp.asarray(EXP_TABLE), jnp.asarray(LOG_TABLE), jnp.asarray(MUL_TABLE))
+    # ensure_compile_time_eval: the first call may happen inside a jit
+    # trace (e.g. the table-strategy matmul); without it the cache would
+    # capture trace-local constants and leak tracers into later traces
+    with jax.ensure_compile_time_eval():
+        return (jnp.asarray(EXP_TABLE), jnp.asarray(LOG_TABLE),
+                jnp.asarray(MUL_TABLE))
 
 
 # ---------------------------------------------------------------------------

@@ -321,6 +321,13 @@ class Server:
             self.sealed[idx] = True  # parity chunks are never appended to
         return idx
 
+    def parity_row(self, sl: StripeList, stripe_id: int) -> np.ndarray:
+        """Parity role: this server's parity chunk for a stripe
+        (allocated zero on first touch — identical bytes to the
+        unallocated case).  The cluster's fused delta+apply path gathers
+        these as the kernel's parity input."""
+        return self.region[self._parity_slot_for(sl, stripe_id)]
+
     def rebuild_seal_chunk(self, ev: SealEvent) -> tuple[int, int, np.ndarray]:
         """Parity role, step 1 of a seal: rebuild the sealed data chunk from
         replicas, allocate the parity slot, and drop the consumed replicas.
@@ -375,12 +382,29 @@ class Server:
         rebuilds = [self.rebuild_seal_chunk(ev) for ev in events]
         positions = np.array([pos for _, pos, _ in rebuilds])
         xors = np.stack([reb for _, _, reb in rebuilds])
-        fut = self.engine.submit_delta(positions, xors)  # (B, m, C)
+        # fused encode + seal-fold: this server only ever folds its OWN
+        # parity row per event, so submit the row-fold (r*C work/item)
+        # instead of the full m-row delta the old path discarded m-1 of
+        rows = np.array([ev.stripe_list.parity_servers.index(self.sid)
+                         for ev in events])
+        slots = [idx for idx, _, _ in rebuilds]
+        old_rows = np.stack([self.region[idx] for idx in slots])
+        fut = self.engine.submit_fold_rows(positions, xors, rows, old_rows)
 
         def finish() -> list[np.ndarray]:
-            for ev, (idx, _, _), delta in zip(events, rebuilds, fut.result()):
-                ppos = ev.stripe_list.parity_servers.index(self.sid)
-                self.region[idx] ^= delta[ppos]
+            new_rows = fut.result()                       # (B, C)
+            counts: dict[int, int] = {}
+            for idx in slots:
+                counts[idx] = counts.get(idx, 0) + 1
+            for i, idx in enumerate(slots):
+                if counts[idx] == 1:
+                    self.region[idx][:] = new_rows[i]
+                else:
+                    # two chunks of one stripe sealing in the same batch
+                    # share a parity slot; both folds gathered the same
+                    # pre-batch row, so apply each event's exact delta
+                    # (new ^ old) instead of letting the writes clobber
+                    self.region[idx] ^= new_rows[i] ^ old_rows[i]
             return [reb for _, _, reb in rebuilds]
 
         return fut, finish
@@ -388,13 +412,17 @@ class Server:
     def apply_data_delta(self, sl: StripeList, chunk_id: ChunkId, offset: int,
                          xor_seg: np.ndarray, proxy_id: int, seq: int):
         """Parity role: apply a (sealed-chunk) update delta; buffer for
-        revert (§5.3)."""
+        revert (§5.3).  Runs the fused single-row fold (this server's
+        parity row only) rather than materializing all m delta rows."""
         full = np.zeros(self.chunk_size, np.uint8)
         full[offset: offset + len(xor_seg)] = xor_seg
-        deltas = self.engine.delta_batch(
-            np.array([chunk_id.position]), full[None])[0]  # (m, C)
         ppos = sl.parity_servers.index(self.sid)
-        self.apply_data_delta_row(sl, chunk_id, deltas[ppos], proxy_id, seq)
+        idx = self._parity_slot_for(sl, chunk_id.stripe_id)
+        folded = self.engine.submit_fold_rows(
+            np.array([chunk_id.position]), full[None], np.array([ppos]),
+            self.region[idx][None]).result()[0]
+        self.apply_data_delta_row(sl, chunk_id, folded ^ self.region[idx],
+                                  proxy_id, seq)
 
     def apply_data_delta_row(self, sl: StripeList, chunk_id: ChunkId,
                              delta_row: np.ndarray, proxy_id: int, seq: int):

@@ -658,17 +658,24 @@ class MemECCluster:
                 ok[i] = True
             legs = []
             fut = None
+            old_par = None
             if sealed_jobs:
-                # one *submitted* engine call computes every parity row of
-                # every updated chunk (vs. one xor_delta per key x parity);
-                # the delta legs are modeled while it is in flight
+                # one *submitted* engine call computes AND folds every
+                # parity row of every updated chunk (fused delta+apply —
+                # no separate (B, m, C) delta materialization); the delta
+                # legs are modeled while it is in flight
                 fulls = np.zeros((len(sealed_jobs), self.chunk_size),
                                  np.uint8)
                 for b, (sl, ds, cid, seg_off, seg, req) in enumerate(sealed_jobs):
                     fulls[b, seg_off: seg_off + len(seg)] = seg
                 positions = np.array(
                     [cid.position for _, _, cid, _, _, _ in sealed_jobs])
-                fut = self.engine.submit_delta(positions, fulls)
+                old_par = np.stack(
+                    [np.stack([self._sv(p).parity_row(sl, cid.stripe_id)
+                               for p in sl.parity_servers])
+                     for sl, ds, cid, _, _, _ in sealed_jobs])
+                fut = self.engine.submit_apply_delta(old_par, positions,
+                                                     fulls)
                 for sl, ds, cid, seg_off, seg, req in sealed_jobs:
                     legs += [Leg("delta", len(seg), f"s{ds}", f"s{p}",
                                  self._is_failed(p))
@@ -681,8 +688,13 @@ class MemECCluster:
                                     f"s{ds}", f"s{p}", self._is_failed(p)))
             net_t = self.net.phase(legs) if legs else 0.0
             if fut is not None:
+                # per-row deltas (new ^ old) feed the §5.3 revert buffer;
+                # extraction is stale-proof even when two jobs share a
+                # stripe's parity slot — the delta never depends on the
+                # gathered parity content
+                deltas = fut.result() ^ old_par
                 for (sl, ds, cid, seg_off, seg, req), delta in zip(
-                        sealed_jobs, fut.result()):
+                        sealed_jobs, deltas):
                     for j, p in enumerate(sl.parity_servers):
                         self._sv(p).apply_data_delta_row(
                             sl, cid, delta[j], proxy.pid, req.seq)
@@ -808,17 +820,20 @@ class MemECCluster:
             seg_off, seg = off, xor[:0]
         crash = (self.crash_hook is not None and self.crash_hook[0] == kind
                  and self.crash_hook[1] == key)
-        # one submitted engine call serves every parity server (the rows
-        # are column slices of the same delta); resolution is safe before
-        # the crash check — engine calls carry no cluster state
+        # one submitted engine call serves every parity server (fused
+        # delta+apply over the gathered parity rows); resolution is safe
+        # before the crash check — engine calls carry no cluster state,
+        # and the per-row deltas extracted here feed the per-leg applies
         fut = None
         rows = None
         if sealed and self.code.m > 0:
             full = np.zeros(self.chunk_size, np.uint8)
             full[seg_off: seg_off + len(seg)] = seg
-            fut = self.engine.submit_delta(np.array([cid.position]),
-                                           full[None])
-            rows = fut.result()[0]
+            old_par = np.stack([self._sv(p).parity_row(sl, cid.stripe_id)
+                                for p in sl.parity_servers])
+            fut = self.engine.submit_apply_delta(
+                old_par[None], np.array([cid.position]), full[None])
+            rows = fut.result()[0] ^ old_par
         applied = 0
         legs = []
         for j, p in enumerate(sl.parity_servers):

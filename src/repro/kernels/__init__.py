@@ -7,7 +7,10 @@
   (the §Perf cell-B memory lever for dense training/prefill).
 
 `ops` holds the jit'd public wrappers; `ref` the pure-jnp oracles.
-Kernels run in interpret mode on CPU and compiled on TPU.
+`dispatch` picks the path per backend: compiled Pallas on TPU/GPU, the
+XLA-jitted GF(2^8) twins (`xla_gf256`) on CPU, interpret-mode Pallas
+only behind `$MEMEC_INTERPRET=1`; `tune` autotunes strategy/block_c per
+shape into a persisted cache.
 """
 from . import ops, ref
 from .cuckoo_lookup import cuckoo_lookup

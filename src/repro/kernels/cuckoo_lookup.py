@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import dispatch
+
 try:  # TPU grid spec with scalar prefetch
     from jax.experimental.pallas import tpu as pltpu
     _HAVE_PLTPU = True
@@ -77,10 +79,13 @@ def cuckoo_lookup(fingerprints, occupied, h1, h2, fp, *,
     fingerprints: (B,4) uint64 (numpy or jnp); occupied: (B,4) bool;
     h1/h2: (Q,) uint64 hashes; fp: (Q,) uint64 fingerprints.
     Returns (found bool (Q,), slot int32 (Q,) = bucket*4+slot or -1).
+
+    Dispatch: compiled Pallas scalar-prefetch grid on TPU/GPU; on CPU the
+    jitted jnp probe (``ref.cuckoo_lookup_ref`` — the gather vectorizes
+    fine under XLA CPU, no interpret tax).
     """
     import numpy as np
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    dec = dispatch.decide(interpret)
     fingerprints = np.asarray(fingerprints, dtype=np.uint64)
     B = fingerprints.shape[0]
     flo = jnp.asarray((fingerprints & np.uint64(0xFFFFFFFF)).astype(np.uint32))
@@ -93,6 +98,15 @@ def cuckoo_lookup(fingerprints, occupied, h1, h2, fp, *,
     b2 = jnp.asarray((h2 % B).astype(np.int32))
     qlo = jnp.asarray((fp & np.uint64(0xFFFFFFFF)).astype(np.uint32))
     qhi = jnp.asarray((fp >> np.uint64(32)).astype(np.uint32))
-    found, slot = _probe_call(b1, b2, flo, fhi, occ, qlo, qhi,
-                              interpret=interpret)
+    if dec.path == dispatch.XLA:
+        found, slot = _probe_xla(flo, fhi, occ, b1, b2, qlo, qhi)
+    else:
+        found, slot = _probe_call(b1, b2, flo, fhi, occ, qlo, qhi,
+                                  interpret=dec.interpret)
     return found.astype(bool), slot
+
+
+@jax.jit
+def _probe_xla(flo, fhi, occ, b1, b2, qlo, qhi):
+    from repro.kernels.ref import cuckoo_lookup_ref
+    return cuckoo_lookup_ref(flo, fhi, occ, b1, b2, qlo, qhi)

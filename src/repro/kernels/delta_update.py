@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import dispatch
+
 DEFAULT_BLOCK_C = 2048
 
 
@@ -129,8 +131,11 @@ def delta_apply_batched(parity: jax.Array | None, gammas: jax.Array,
     minus the parity read/write streams, for callers that fold the delta
     into host-side buffers themselves.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    dec = dispatch.decide(interpret)
+    if dec.path == dispatch.XLA:
+        from repro.kernels import xla_gf256
+        return xla_gf256.delta_batched(gammas, xor, parity)
+    interpret = dec.interpret
     xor = jnp.asarray(xor, dtype=jnp.uint8)
     gammas = jnp.asarray(gammas, dtype=jnp.int32)
     B, m = gammas.shape
@@ -157,8 +162,11 @@ def delta_update(parity: jax.Array, gammas: jax.Array, old: jax.Array,
                  new: jax.Array, *, block_c: int = DEFAULT_BLOCK_C,
                  interpret: bool | None = None) -> jax.Array:
     """parity (m,C), gammas (m,), old/new (C,) -> new parity (m,C)."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    dec = dispatch.decide(interpret)
+    if dec.path == dispatch.XLA:
+        from repro.kernels import xla_gf256
+        return xla_gf256.delta_single(parity, gammas, old, new)
+    interpret = dec.interpret
     parity = jnp.asarray(parity, dtype=jnp.uint8)
     old = jnp.asarray(old, dtype=jnp.uint8)
     new = jnp.asarray(new, dtype=jnp.uint8)

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import dispatch
+
 NEG_INF = -1e30
 
 
@@ -97,9 +99,17 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
 
     GQA: each group of H//KV query heads shares a KV head; the wrapper
     expands by indexing (no materialized repeat).
+
+    Dispatch: compiled Pallas flash schedule on TPU/GPU; on CPU a jitted
+    dense-softmax attention (XLA CPU has no flash win to fuse for, and
+    interpret-mode Pallas would just simulate the grid serially).
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    dec = dispatch.decide(interpret)
+    if dec.path == dispatch.XLA:
+        kv_idx = np.arange(q.shape[2]) // (q.shape[2] // k.shape[2])
+        return _attention_xla(jnp.asarray(q), jnp.asarray(k),
+                              jnp.asarray(v), jnp.asarray(kv_idx),
+                              causal=causal)
     B, Sq, H, hd = q.shape
     Skv, KV = k.shape[1], k.shape[2]
     G = H // KV
@@ -119,6 +129,24 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
     kf = k.transpose(0, 2, 1, 3)[:, kv_idx].reshape(B * H, Skv_p, hd)
     vf = v.transpose(0, 2, 1, 3)[:, kv_idx].reshape(B * H, Skv_p, hd)
     out = _flash_call(qf, kf, vf, bq=bq, bkv=bkv, causal=causal,
-                      interpret=interpret)
+                      interpret=dec.interpret)
     out = out.reshape(B, H, Sq_p, hd).transpose(0, 2, 1, 3)
     return out[:, :Sq]
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def _attention_xla(q, k, v, kv_idx, *, causal):
+    """Dense-softmax attention in fp32, GQA by KV-head indexing — the
+    compiled CPU twin of the flash kernel (same math, no tiling)."""
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    kf = k[:, :, kv_idx]                                  # (B, Skv, H, hd)
+    vf = v[:, :, kv_idx]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) / np.sqrt(hd)
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Skv)[None, :]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vf.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -41,12 +41,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import gf256
+from repro.kernels import dispatch
 
 DEFAULT_BLOCK_C = 2048
 
-# beyond this many fused ops (m*k*8) the per-element unrolled kernel
-# body becomes pathological; switch to the column-loop variants
+# heuristic fallback when no tuning entry covers the shape: beyond this
+# many fused ops (m*k*8) the per-element unrolled kernel body becomes
+# pathological and the column-loop variants take over.  The tuner
+# (kernels/tune.py) overrides this per (k, m, chunk, batch) key.
 MAX_UNROLL_OPS = 1024
+
+# Pallas-path strategy names (the tuner's vocabulary; the XLA CPU path
+# has its own set in xla_gf256.STRATEGIES)
+PALLAS_STRATEGIES = ("unroll", "cols", "gf01")
 
 
 def build_apow(A: np.ndarray) -> np.ndarray:
@@ -172,7 +179,8 @@ def _gf01_matmul_call(a01, data, *, m, k, block_c, interpret):
 
 
 def gf256_matmul_batched(A: np.ndarray, data: jax.Array, *,
-                         block_c: int = DEFAULT_BLOCK_C,
+                         block_c: int | None = None,
+                         strategy: str | None = None,
                          interpret: bool | None = None) -> jax.Array:
     """Batched A (*) data over GF(2^8): one matrix, a whole batch of stripes.
 
@@ -180,13 +188,16 @@ def gf256_matmul_batched(A: np.ndarray, data: jax.Array, *,
     (B, m, C).  The grid runs (batch, C-tiles) so every stripe's tiles are
     independent grid steps — the batched analogue of `gf256_matmul`.
 
-    Works for any matrix size: small dense matrices (RS/XOR parity
-    shapes) take the fully-unrolled kernel; larger ones — the RDP block
-    representation and its decode inverses — take the column-loop
-    kernels, with 0/1 matrices on the bit-plane-free XOR-select body.
+    Dispatch: the path comes from ``kernels.dispatch`` (compiled Pallas
+    on TPU/GPU, the XLA-jitted ``xla_gf256`` formulations on CPU,
+    interpret only when forced).  ``strategy``/``block_c`` default to the
+    tuning cache for this (path, shape) key, then to the MAX_UNROLL_OPS
+    heuristic: small dense matrices (RS/XOR parity shapes) take the
+    fully-unrolled kernel; larger ones — the RDP block representation and
+    its decode inverses — take the column-loop kernels, with 0/1 matrices
+    on the bit-plane-free XOR-select body.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    from repro.kernels import tune, xla_gf256
     A = np.asarray(A, dtype=np.uint8)
     m, k = A.shape
     data = jnp.asarray(data, dtype=jnp.uint8)
@@ -194,48 +205,186 @@ def gf256_matmul_batched(A: np.ndarray, data: jax.Array, *,
     assert kd == k, (data.shape, k)
     if B == 0 or m == 0:
         return jnp.zeros((B, m, C), jnp.uint8)
-    block_c = min(block_c, _round_up(C, 128))
+    dec = dispatch.decide(interpret)
+    cls = "01" if int(A.max(initial=0)) <= 1 else "gf"
+    if strategy is None or block_c is None:
+        entry = tune.lookup("matmul", dec.path, k=k, m=m, chunk=C,
+                            batch=B, cls=cls)
+        if entry:
+            strategy = strategy or entry.get("strategy")
+            if block_c is None and entry.get("block_c"):
+                block_c = entry["block_c"]
+    if dec.path == dispatch.XLA:
+        s = strategy if strategy in xla_gf256.STRATEGIES else None
+        return xla_gf256.matmul_batched(A, data, strategy=s)
+    block_c = min(block_c or DEFAULT_BLOCK_C, _round_up(C, 128))
     Cp = _round_up(C, block_c)
     if Cp != C:
         data = jnp.pad(data, ((0, 0), (0, 0), (0, Cp - C)))
-    if m * k * 8 <= MAX_UNROLL_OPS:
+    if strategy not in PALLAS_STRATEGIES:
+        strategy = ("unroll" if m * k * 8 <= MAX_UNROLL_OPS
+                    else "gf01" if cls == "01" else "cols")
+    if strategy == "gf01" and cls != "01":
+        strategy = "cols"
+    if strategy == "unroll":
         apow = jnp.asarray(build_apow(A))
         out = _gf_matmul_batched_call(apow, data, m=m, k=k, block_c=block_c,
-                                      interpret=interpret)
-    elif int(A.max()) <= 1:
+                                      interpret=dec.interpret)
+    elif strategy == "gf01":
         out = _gf01_matmul_call(jnp.asarray(A.astype(np.int32)), data,
                                 m=m, k=k, block_c=block_c,
-                                interpret=interpret)
+                                interpret=dec.interpret)
     else:
         apow = jnp.asarray(build_apow(A))
         out = _gf_matmul_cols_call(apow, data, m=m, k=k, block_c=block_c,
-                                   interpret=interpret)
+                                   interpret=dec.interpret)
     return out[:, :, :C]
 
 
 def gf256_matmul(A: np.ndarray, data: jax.Array, *,
-                 block_c: int = DEFAULT_BLOCK_C,
+                 block_c: int | None = None,
                  interpret: bool | None = None) -> jax.Array:
     """Compute A (*) data over GF(2^8).
 
     A: (m, k) uint8 host matrix (encode parity matrix or decode inverse);
     data: (k, C) uint8.  C is padded to a multiple of block_c internally.
+    Dispatches like ``gf256_matmul_batched`` (the XLA CPU path runs it as
+    a batch of one).
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    from repro.kernels import tune, xla_gf256
     A = np.asarray(A, dtype=np.uint8)
     m, k = A.shape
-    data = jnp.asarray(data, dtype=jnp.uint8)
+    data = xla_gf256._as_u8(data)
     assert data.shape[0] == k, (data.shape, k)
     C = data.shape[1]
-    block_c = min(block_c, _round_up(C, 128))
+    dec = dispatch.decide(interpret)
+    if dec.path == dispatch.XLA:
+        ent = tune.lookup("matmul", dec.path, k=k, m=m, chunk=C, batch=1,
+                          cls=tune.matrix_cls(A))
+        s = ent.get("strategy") if ent else None
+        return xla_gf256.matmul(
+            A, data, strategy=s if s in xla_gf256.STRATEGIES else None)
+    block_c = min(block_c or DEFAULT_BLOCK_C, _round_up(C, 128))
     Cp = _round_up(C, block_c)
     if Cp != C:
         data = jnp.pad(data, ((0, 0), (0, Cp - C)))
     apow = jnp.asarray(build_apow(A))
     out = _gf_matmul_call(apow, data, m=m, k=k, block_c=block_c,
-                          interpret=interpret)
+                          interpret=dec.interpret)
     return out[:, :C]
+
+
+def _per_item_acc(m_ref, d, o: int, j: int, is01: bool):
+    """Accumulate M_b (*) D_b for one grid step's (O, J) matrix tile.
+
+    Coefficients are traced (each batch item carries its own matrix), so
+    gamma powers come from in-kernel xtime steps like delta_update's —
+    no host APOW table.  0/1 matrices skip the bit-plane loop entirely.
+    """
+    acc = jnp.zeros((o, d.shape[1]), jnp.int32)
+    for jj in range(j):
+        x = d[jj]                                         # (BC,)
+        if is01:
+            acc = acc ^ (m_ref[0, :, jj][:, None] * x[None, :])
+        else:
+            g = m_ref[0, :, jj].astype(jnp.int32)         # (O,)
+            for b in range(8):
+                acc = acc ^ (((x >> b) & 1)[None, :] * g[:, None])
+                g = ((g << 1) ^ jnp.where((g & 0x80) != 0, 0x11D, 0)) & 0xFF
+    return acc
+
+
+def _per_item_kernel(m_ref, d_ref, o_ref, *, o: int, j: int, is01: bool):
+    d = d_ref[0].astype(jnp.int32)                        # (J, BC)
+    o_ref[0] = _per_item_acc(m_ref, d, o, j, is01).astype(jnp.uint8)
+
+
+def _per_item_fold_kernel(m_ref, p_ref, d_ref, o_ref, *, o: int, j: int,
+                          is01: bool):
+    d = d_ref[0].astype(jnp.int32)
+    o_ref[0] = p_ref[0] ^ _per_item_acc(m_ref, d, o, j, is01).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("o", "j", "block_c", "interpret", "is01"))
+def _per_item_call(Ms, data, *, o, j, block_c, interpret, is01):
+    B, _, C = data.shape
+    grid = (B, C // block_c)
+    return pl.pallas_call(
+        functools.partial(_per_item_kernel, o=o, j=j, is01=is01),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, o, j), lambda b, c: (b, 0, 0)),
+            pl.BlockSpec((1, j, block_c), lambda b, c: (b, 0, c)),
+        ],
+        out_specs=pl.BlockSpec((1, o, block_c), lambda b, c: (b, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((B, o, C), jnp.uint8),
+        interpret=interpret,
+    )(Ms, data)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("o", "j", "block_c", "interpret", "is01"))
+def _per_item_fold_call(Ms, parity, data, *, o, j, block_c, interpret, is01):
+    B, _, C = data.shape
+    grid = (B, C // block_c)
+    return pl.pallas_call(
+        functools.partial(_per_item_fold_kernel, o=o, j=j, is01=is01),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, o, j), lambda b, c: (b, 0, 0)),
+            pl.BlockSpec((1, o, block_c), lambda b, c: (b, 0, c)),
+            pl.BlockSpec((1, j, block_c), lambda b, c: (b, 0, c)),
+        ],
+        out_specs=pl.BlockSpec((1, o, block_c), lambda b, c: (b, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((B, o, C), jnp.uint8),
+        interpret=interpret,
+    )(Ms, parity, data)
+
+
+def gf256_matmul_per_item_batched(Ms, blocks, parity=None, *,
+                                  block_c: int | None = None,
+                                  strategy: str | None = None,
+                                  interpret: bool | None = None):
+    """Per-item matrices: (B, O, J) (*) (B, J, C) -> (B, O, C).
+
+    Each batch item multiplies by its *own* matrix — the r > 1 (RDP)
+    delta shape, where every update folds a (r, r)-per-parity-row system,
+    and the fused seal-fold path.  ``parity`` (B, O, C), when given, is
+    XORed into the product inside the same kernel (one read stream more,
+    one device round trip fewer).  Grid = (batch, C-tiles), like
+    ``gf256_matmul_batched``; 0/1 matrices drop the bit-plane loop.
+    """
+    from repro.kernels import xla_gf256
+    Ms = np.asarray(Ms, dtype=np.uint8)
+    blocks = jnp.asarray(blocks, dtype=jnp.uint8)
+    B, O, J = Ms.shape
+    assert blocks.shape[:2] == (B, J), (Ms.shape, blocks.shape)
+    C = blocks.shape[2]
+    if B == 0 or O == 0:
+        return (jnp.asarray(parity, jnp.uint8) if parity is not None
+                else jnp.zeros((B, O, C), jnp.uint8))
+    dec = dispatch.decide(interpret)
+    if dec.path == dispatch.XLA:
+        s = strategy if strategy in xla_gf256.STRATEGIES else None
+        return xla_gf256.matmul_per_item(Ms, blocks, parity, strategy=s)
+    is01 = int(Ms.max(initial=0)) <= 1 and strategy != "cols"
+    block_c = min(block_c or DEFAULT_BLOCK_C, _round_up(C, 128))
+    Cp = _round_up(C, block_c)
+    if Cp != C:
+        blocks = jnp.pad(blocks, ((0, 0), (0, 0), (0, Cp - C)))
+    Ms_dev = jnp.asarray(Ms.astype(np.int32))
+    if parity is None:
+        out = _per_item_call(Ms_dev, blocks, o=O, j=J, block_c=block_c,
+                             interpret=dec.interpret, is01=is01)
+    else:
+        parity = jnp.asarray(parity, dtype=jnp.uint8)
+        if Cp != C:
+            parity = jnp.pad(parity, ((0, 0), (0, 0), (0, Cp - C)))
+        out = _per_item_fold_call(Ms_dev, parity, blocks, o=O, j=J,
+                                  block_c=block_c, interpret=dec.interpret,
+                                  is01=is01)
+    return out[:, :, :C]
 
 
 def _round_up(x: int, mult: int) -> int:

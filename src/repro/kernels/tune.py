@@ -1,0 +1,224 @@
+"""Shape autotuner for the GF(2^8) kernel data plane.
+
+The kernels have real strategy choices — per-element unroll vs column
+loop vs 0/1 XOR-select on the Pallas grids, packed bit-plane vs log/exp
+table on the XLA CPU path — plus a ``block_c`` tile knob, and the right
+answer depends on ``(k, m, chunk_size, batch)`` and the dispatch path.
+The old code hard-wired one threshold (``MAX_UNROLL_OPS = 1024``); this
+module turns that into a measured, persisted decision:
+
+* ``lookup(op, path, ...)`` — consult the tuning cache; returns
+  ``{"strategy": ..., "block_c": ...}`` or None (callers then use their
+  built-in heuristic, so a missing/corrupt cache can never break
+  dispatch — regression-tested).
+* ``autotune(...)`` — time every valid (strategy, block_c) candidate for
+  one shape and record the winner.
+* ``autotune_ci_shapes()`` — the sweep behind ``python -m
+  benchmarks.kernels_bench --tune``: tunes the CI bench shapes and
+  persists the cache.
+
+Cache file: ``$MEMEC_TUNE_CACHE`` when set, else the committed defaults
+``kernels/tune_defaults.json`` (tuned on the CI runner class).  The JSON
+is a flat ``{key: entry}`` map with keys like
+``matmul/xla-compiled/gf/k8m2c4096b16``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+import warnings
+
+import numpy as np
+
+DEFAULTS_PATH = os.path.join(os.path.dirname(__file__), "tune_defaults.json")
+
+# block_c candidates for the Pallas grids (lane-aligned); the XLA path
+# has no tile knob, so its entries carry block_c = 0
+BLOCK_C_CANDIDATES = (512, 1024, 2048, 4096)
+
+_cache: dict | None = None
+_cache_src: str | None = None          # path the cache was loaded from
+_warned: set = set()
+
+
+def cache_path() -> str:
+    """Active cache file: ``$MEMEC_TUNE_CACHE`` or the committed defaults."""
+    return os.environ.get("MEMEC_TUNE_CACHE") or DEFAULTS_PATH
+
+
+def _warn_once(msg: str) -> None:
+    if msg not in _warned:
+        _warned.add(msg)
+        warnings.warn(msg, stacklevel=3)
+
+
+def load_cache(reload: bool = False) -> dict:
+    """The tuning map (lazily loaded; reloaded when the env path moves).
+
+    A missing or corrupt cache degrades to ``{}`` — dispatch falls back
+    to the built-in heuristics, it never crashes."""
+    global _cache, _cache_src
+    path = cache_path()
+    if _cache is not None and _cache_src == path and not reload:
+        return _cache
+    entries: dict = {}
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+        body = raw.get("entries", raw) if isinstance(raw, dict) else None
+        if isinstance(body, dict):
+            entries = {k: v for k, v in body.items()
+                       if isinstance(v, dict) and "strategy" in v}
+        else:
+            _warn_once(f"tune cache {path}: not a JSON object; ignoring")
+    except FileNotFoundError:
+        if path != DEFAULTS_PATH:
+            _warn_once(f"tune cache {path}: not found; using heuristics")
+    except (json.JSONDecodeError, OSError) as e:
+        _warn_once(f"tune cache {path}: unreadable ({e}); using heuristics")
+    _cache, _cache_src = entries, path
+    return entries
+
+
+def key(op: str, path: str, *, k: int, m: int, chunk: int, batch: int,
+        cls: str = "gf") -> str:
+    """Cache key: op + dispatch path + matrix class (``01`` matrices have
+    strategies dense ones can't use) + the shape tuple."""
+    return f"{op}/{path}/{cls}/k{k}m{m}c{chunk}b{batch}"
+
+
+def matrix_cls(A) -> str:
+    return "01" if int(np.asarray(A).max(initial=0)) <= 1 else "gf"
+
+
+def lookup(op: str, path: str, *, k: int, m: int, chunk: int, batch: int,
+           cls: str = "gf") -> dict | None:
+    """Tuned entry for a shape, or None (caller heuristic applies)."""
+    return load_cache().get(key(op, path, k=k, m=m, chunk=chunk,
+                                batch=batch, cls=cls))
+
+
+def record(entry_key: str, entry: dict) -> None:
+    cache = load_cache()
+    cache[entry_key] = entry
+
+
+def save(path: str | None = None) -> str:
+    """Persist the in-memory cache (sorted, versioned) and return the path."""
+    path = path or cache_path()
+    cache = load_cache()
+    with open(path, "w") as f:
+        json.dump({"version": 1,
+                   "entries": {k: cache[k] for k in sorted(cache)}},
+                  f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+# ---------------------------------------------------------------------------
+# measurement
+# ---------------------------------------------------------------------------
+
+def _time_call(fn, reps: int = 5) -> float:
+    """Median-of-reps wall time in us (each rep blocks on the device)."""
+    import jax
+    jax.block_until_ready(fn())          # warmup / compile
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def candidates(op: str, path: str, *, ops: int, is01: bool) -> list[dict]:
+    """Valid (strategy, block_c) combinations for one op on one path."""
+    from . import dispatch, xla_gf256
+    out = []
+    if path == dispatch.XLA:
+        strategies = [xla_gf256.BITPLANE32, xla_gf256.TABLE]
+        if is01:
+            strategies.append(xla_gf256.SELECT32)
+        return [{"strategy": s, "block_c": 0} for s in strategies]
+    # pallas-shaped paths: strategy x block_c grid
+    strategies = ["cols"]
+    if op == "matmul" and ops <= 8192:   # unroll trace blows up past this
+        strategies.append("unroll")
+    if is01:
+        strategies.append("gf01")
+    for s in strategies:
+        for bc in BLOCK_C_CANDIDATES:
+            out.append({"strategy": s, "block_c": bc})
+    return out
+
+
+def autotune_matmul(A: np.ndarray, *, chunk: int, batch: int,
+                    path: str | None = None, reps: int = 5,
+                    verbose: bool = False) -> dict:
+    """Tune the shared-matrix batched matmul for one (A, chunk, batch).
+
+    ``chunk`` is the *chunk size* at the engine interface; the matrix's
+    block width (k*r columns) determines the device-side block width.
+    Records and returns the winning entry."""
+    from . import dispatch, xla_gf256
+    from .gf256_matmul import gf256_matmul_batched
+    path = path or dispatch.decide().path
+    A = np.asarray(A, dtype=np.uint8)
+    O, J = A.shape
+    rng = np.random.default_rng(0)
+    data = rng.integers(0, 256, (max(batch, 1), J, chunk), dtype=np.uint8)
+    is01 = int(A.max(initial=0)) <= 1
+    best = None
+    for cand in candidates("matmul", path, ops=O * J * 8, is01=is01):
+        if batch == 1 and path == dispatch.XLA:
+            # batch=1 entries feed the single-stripe call, which has its
+            # own 2D jits — time the path the entry will actually steer
+            fn = (lambda cand=cand: xla_gf256.matmul(
+                A, data[0], strategy=cand["strategy"]))
+        else:
+            fn = (lambda cand=cand: gf256_matmul_batched(
+                A, data, strategy=cand["strategy"],
+                block_c=cand["block_c"] or 2048,
+                interpret=(True if path == dispatch.INTERPRET else None)))
+        try:
+            us = _time_call(fn, reps=reps)
+        except Exception as e:     # a candidate failing to lower is data
+            if verbose:
+                print(f"  {cand} failed: {type(e).__name__}")
+            continue
+        if verbose:
+            print(f"  matmul k{J}m{O}c{chunk}b{batch} {cand} -> {us:.1f}us")
+        if best is None or us < best["us"]:
+            best = dict(cand, us=round(us, 2))
+    assert best is not None, "no tuning candidate succeeded"
+    entry_key = key("matmul", path, k=J, m=O, chunk=chunk, batch=batch,
+                    cls="01" if is01 else "gf")
+    record(entry_key, best)
+    return best
+
+
+def autotune_ci_shapes(verbose: bool = True) -> dict:
+    """Tune the shapes the CI bench smoke exercises; returns the cache.
+
+    Called by ``python -m benchmarks.kernels_bench --tune``; commit the
+    refreshed ``tune_defaults.json`` when the runner class changes."""
+    from repro.core.codes import RSCode, make_code
+    from repro.core.engine import block_rep
+    rs = RSCode(n=10, k=8)
+    rdp = make_code("rdp", 10, 8)
+    rep = block_rep(rdp)
+    shapes = [
+        # (matrix, chunk at the matmul interface, batch)
+        (rs.parity_matrix, 4096, 1),        # bench encode row
+        (rs.parity_matrix, 4096, 16),       # batched engine row
+        (rs.parity_matrix, 65536, 1),       # slow-sweep encode row
+        (rep.encode, 4096 // rep.r, 4),     # RDP block encode (0/1)
+    ]
+    for A, chunk, batch in shapes:
+        if verbose:
+            O, J = A.shape
+            print(f"tuning matmul k={J} m={O} chunk={chunk} batch={batch}")
+        autotune_matmul(np.asarray(A), chunk=chunk, batch=batch,
+                        verbose=verbose)
+    return load_cache()

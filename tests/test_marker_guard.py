@@ -19,6 +19,7 @@ from conftest import subprocess_env
 GUARDED_MODULES = [
     "tests/test_async_engine.py",
     "tests/test_decode_plan.py",
+    "tests/test_dispatch_tune.py",
     "tests/test_engine.py",
     "tests/test_multikey.py",
     "tests/test_shard.py",
