@@ -4,7 +4,7 @@ from __future__ import annotations
 import time
 
 from repro.core import (AllReplicationCluster, HybridEncodingCluster,
-                        make_cluster)
+                        make_cluster, telemetry)
 from repro.data.ycsb import YCSBConfig, run_workload
 
 
@@ -75,4 +75,26 @@ def cluster_metrics(cluster, ops: int, kinds=("GET", "UPDATE", "SET")):
             k = kind + suffix
             if net.latencies.get(k):
                 out[f"p95_{k}_ms"] = net.percentile(k, 95) * 1e3
+    return out
+
+
+def tail_metrics(cluster, kinds=None) -> dict:
+    """Per-kind tail percentiles (ms) off the validated telemetry
+    snapshot — the benchmarks' one consumption point for the versioned
+    schema (core/telemetry.py), so a schema drift fails here, loudly.
+
+    Returns ``{kind: {count, mean_ms, p50_ms, p99_ms, p999_ms
+    [, queue_wait_ms]}}``, restricted to ``kinds`` when given.
+    """
+    snap = telemetry.validate(telemetry.snapshot(cluster))
+    out = {}
+    for kind, s in snap["latency"].items():
+        if kinds is not None and kind not in kinds:
+            continue
+        row = {"count": s["count"], "mean_ms": s["mean_s"] * 1e3,
+               "p50_ms": s["p50_s"] * 1e3, "p99_ms": s["p99_s"] * 1e3,
+               "p999_ms": s["p999_s"] * 1e3}
+        if "queue_wait_s" in s:
+            row["queue_wait_ms"] = s["queue_wait_s"] * 1e3
+        out[kind] = row
     return out

@@ -13,7 +13,8 @@ import os
 from repro.data.ycsb import YCSBConfig
 
 from .common import (cluster_metrics, emit, make_allrep, make_hybrid,
-                     make_memec, modeled_seq_kops, timed_workload)
+                     make_memec, modeled_seq_kops, tail_metrics,
+                     timed_workload)
 
 N_OBJECTS = 4000
 N_OPS = 6000
@@ -205,6 +206,96 @@ def run_async_sweep():
     emit("async_sweep.done", 0.0,
          "sync==async contents verified; async modeled latency lower; "
          "eager decode cut degraded-GET latency")
+    run_tail_sweep()
+
+
+def _tail_rows(engine, rates, n_obj, n_ops, inflight=2, seed=11):
+    """Open-loop GET tail percentiles at several offered-load multiples.
+
+    The service rate is calibrated from a closed-loop twin (ops over
+    modeled request time), then each multiple ``x`` drives a fresh
+    cluster with a seeded ``poisson:x*rate`` arrival process through the
+    same read-only YCSB window.  Returns one row dict per rate with
+    p50/p99/p999 and the queue-wait share (via the telemetry snapshot —
+    ``tail_metrics`` validates the schema on every call).
+    """
+    from repro.data.ycsb import run_workload
+
+    cfg = YCSBConfig(num_objects=n_obj)
+    kw = dict(scheme="rs", engine=engine, shards=1, c=4,
+              chunk_size=512, max_unsealed=2)
+    base = make_memec(**kw)
+    run_workload(base, "load", 0, cfg, batch_size=1)
+    t0 = base.net.total_recorded_s
+    ops, _ = run_workload(base, "C", n_ops, cfg, batch_size=1)
+    svc_rate = ops / (base.net.total_recorded_s - t0)
+    rows = []
+    for x in rates:
+        rate = x * svc_rate
+        cl = make_memec(arrival=f"poisson:{rate:.6g}:seed={seed}"
+                                f":inflight={inflight}", **kw)
+        run_workload(cl, "load", 0, cfg, batch_size=1)
+        cl.net.reset()   # measure the read window, not the load phase
+        run_workload(cl, "C", n_ops, cfg, batch_size=1)
+        tm = tail_metrics(cl, kinds=("GET",))["GET"]
+        rows.append(dict({"engine": engine, "rate_x": x, "rate_ops_s": rate,
+                          "kind": "GET"}, **tm))
+    return rows
+
+
+def run_tail_sweep():
+    """Open-loop tail-latency sweep (PR 7) — rate multiples per engine.
+
+    The discrete-event runtime replaces "every request sees an idle
+    cluster": with a Poisson arrival process, queueing behind busy
+    admission slots / links / engine lanes lands in the percentiles.
+    Asserted shape per engine: p99 >= p50 everywhere, p99 monotonically
+    non-decreasing in offered load, p50 near-flat below saturation
+    (queueing is a tail phenomenon until the queue is persistent), and
+    saturation (rate >> service rate) inflating p99 well above the
+    unloaded run.
+    """
+    print("\n# Open-loop tail-latency sweep — rate multiples (modeled)")
+    print("engine,rate_x,rate_ops_s,kind,p50_ms,p99_ms,p999_ms,qwait_ms")
+    engines = os.environ.get("MEMEC_BENCH_ENGINES", "numpy").split(",")
+    fast = bool(os.environ.get("MEMEC_BENCH_FAST"))
+    n_obj, n_ops = (250, 400) if fast else (600, 1200)
+    rates = (0.2, 0.8, 3.0)
+    for engine in engines:
+        rows = _tail_rows(engine, rates, n_obj, n_ops)
+        for r in rows:
+            print(f"{r['engine']},{r['rate_x']},{r['rate_ops_s']:.0f},"
+                  f"{r['kind']},{r['p50_ms']:.3f},{r['p99_ms']:.3f},"
+                  f"{r['p999_ms']:.3f},{r['queue_wait_ms']:.3f}")
+        by = {r["rate_x"]: r for r in rows}
+        assert all(r["p99_ms"] >= r["p50_ms"] for r in rows), \
+            "p99 below p50 — percentile computation broken"
+        p99s = [by[x]["p99_ms"] for x in rates]
+        assert all(b >= a for a, b in zip(p99s, p99s[1:])), \
+            f"p99 not monotone in offered load: {p99s}"
+        assert by[0.8]["p50_ms"] < 2.0 * by[0.2]["p50_ms"], \
+            "p50 inflated below saturation — queueing should be a tail effect"
+        assert by[3.0]["p99_ms"] > 1.5 * by[0.2]["p99_ms"], \
+            "saturation did not inflate p99 over the unloaded run"
+    emit("tail_sweep.done", 0.0,
+         "p99 monotone in offered load; saturation inflates p99; "
+         "p50 flat below saturation")
+
+
+def tail_smoke(engine=None) -> list[dict]:
+    """CI tail-latency smoke: one engine column, unloaded vs saturated.
+
+    Returns the row dicts for BENCH_ci.json after asserting p99 >= p50
+    on every row and that saturation inflates p99 vs the unloaded run.
+    """
+    engine = engine or os.environ.get("MEMEC_ENGINE", "numpy")
+    rows = _tail_rows(engine, rates=(0.2, 3.0), n_obj=250, n_ops=400)
+    assert all(r["p99_ms"] >= r["p50_ms"] for r in rows), \
+        "p99 below p50 — percentile computation broken"
+    by = {r["rate_x"]: r for r in rows}
+    assert by[3.0]["p99_ms"] > 1.5 * by[0.2]["p99_ms"], \
+        "saturation did not inflate p99 over the unloaded run"
+    return rows
 
 
 if __name__ == "__main__":

@@ -134,6 +134,35 @@ def main():
     assert ec.multi_get([k for k, _ in items[:64]]) == \
         [v for _, v in items[:64]]          # nothing lost along the way
 
+    # --- 3c. open-loop arrivals + tail percentiles (PR 7) ---
+    # the phase algebra prices each request in isolation; an open-loop
+    # ArrivalProcess (arrival= / $MEMEC_ARRIVAL) turns every recorded
+    # request into a discrete event contending FCFS for admission slots,
+    # per-endpoint link clocks, and CostModel.engine_depth coding lanes,
+    # so p50/p99/p999 in stats["latency"] include queue wait.  Specs:
+    #   MEMEC_ARRIVAL=poisson:5000:seed=1:inflight=4   seeded Poisson
+    #   MEMEC_ARRIVAL=uniform:2000                     fixed 1/rate gaps
+    #   MEMEC_ARRIVAL=trace:0.001,0.003,0.0035         explicit arrivals
+    # The default "closed" keeps the historical closed loop (no event
+    # machinery; rate->inf with inflight=1 reproduces it exactly), and
+    # repro.core.telemetry.snapshot() exports the versioned dict schema
+    # BENCH_ci.json and the benchmark harness consume.
+    from repro.core import telemetry
+    ol = MemECCluster(num_servers=16, scheme="rs", n=10, k=8, c=16,
+                      chunk_size=512, max_unsealed=2,
+                      arrival="poisson:2500:seed=1:inflight=4")
+    for i in range(2000):
+        ol.set(b"tail%06d" % i, rng.bytes(24))
+    for i in range(4000):
+        ol.get(b"tail%06d" % (i % 2000))
+    lat = ol.stats["latency"]["GET"]
+    snap = telemetry.validate(telemetry.snapshot(ol))
+    print(f"open loop (poisson, inflight=4): GET p50 "
+          f"{lat['p50_s']*1e3:.3f} ms, p99 {lat['p99_s']*1e3:.3f} ms, "
+          f"p999 {lat['p999_s']*1e3:.3f} ms; queue wait "
+          f"{ol.stats['queue_wait_s']*1e3:.1f} modeled ms "
+          f"(telemetry schema {snap['schema']} v{snap['version']})")
+
     # --- 4. the compiled GF(2^8) data plane ---
     # kernels/dispatch picks the path per backend: compiled Pallas grids
     # on TPU/GPU, an XLA-jitted bit-plane formulation on CPU (faster

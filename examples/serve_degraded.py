@@ -33,9 +33,8 @@ def main():
 
     # protect the serving state (KV window + recurrent states) with EC —
     # in production this runs continuously via delta parity updates
-    import jax.sharding as jshard
-    mesh = jax.make_mesh((4, 1), ("data", "model"),
-                         axis_types=(jshard.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((4, 1), ("data", "model"))
     cspecs = shd.cache_specs(cfg, jax.eval_shape(lambda: eng.cache), mesh)
     eng.protect_cache(mesh, cspecs, ECConfig(k=2, m=1, page_size=256))
     print("cache pages erasure-coded")

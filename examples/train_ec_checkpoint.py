@@ -31,9 +31,8 @@ def main():
 
     cfg = get_reduced(args.arch)
     model = Model(cfg)
-    import jax.sharding as jshard
-    mesh = jax.make_mesh((4, 1), ("data", "model"),
-                         axis_types=(jshard.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((4, 1), ("data", "model"))
     params = model.init(jax.random.PRNGKey(0))
     opt = make_optimizer("adamw", lr=1e-3, warmup_steps=10,
                          total_steps=args.steps)

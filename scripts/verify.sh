@@ -6,9 +6,9 @@
 #   scripts/verify.sh            # tier-1 minus `slow`-marked tests + bench smoke
 #   scripts/verify.sh --slow     # full suite incl. `slow` + shard-equivalence smoke
 #   scripts/verify.sh --ci       # CI mode: also emit BENCH_ci.json (kernel
-#                                # smoke numbers for the perf trajectory) and
-#                                # fail loudly if the bench smoke hangs
-#   FULL=1 scripts/verify.sh     # include known jax-version-broken modules
+#                                # smoke numbers + open-loop tail-latency rows
+#                                # for the perf trajectory) and fail loudly if
+#                                # the bench smoke hangs
 #   SKIP_BENCH=1 scripts/verify.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -24,21 +24,10 @@ for arg in "$@"; do
     esac
 done
 
-# test_distributed / test_hlo_analysis / test_train_serve carry
-# pre-existing failures from jax API drift (jax.sharding.AxisType,
-# cost_analysis() shape) unrelated to the coding core; exclude them by
-# default so the script is a usable regression gate.
-DESELECT=(--ignore=tests/test_distributed.py
-          --ignore=tests/test_hlo_analysis.py
-          --ignore=tests/test_train_serve.py)
-if [ -n "${FULL:-}" ]; then
-    DESELECT=()
-fi
-
 if [ -n "$SLOW" ]; then
-    python -m pytest -x -q "${DESELECT[@]}"
+    python -m pytest -x -q
 else
-    python -m pytest -x -q -m "not slow" "${DESELECT[@]}"
+    python -m pytest -x -q -m "not slow"
 fi
 
 if [ -n "$SLOW" ]; then
@@ -169,6 +158,28 @@ EOF
 fi
 
 if [ -n "$CI_MODE" ]; then
+    # open-loop tail-latency smoke: drive the event runtime at an unloaded
+    # and a saturated arrival rate, assert p99 >= p50 and queueing-driven
+    # p99 inflation, and merge the per-engine p50/p99 rows into
+    # BENCH_ci.json so the workflow tracks the tail trajectory too
+    python - <<'EOF'
+import json
+import os
+
+from benchmarks.throughput import tail_smoke
+
+rows = tail_smoke()
+out = {}
+if os.path.exists("BENCH_ci.json"):
+    with open("BENCH_ci.json") as f:
+        out = json.load(f)
+out["tail"] = rows
+with open("BENCH_ci.json", "w") as f:
+    json.dump(out, f, indent=2)
+print(f"BENCH_ci.json: {len(rows)} tail rows merged "
+      f"(engine={rows[0]['engine']})")
+EOF
+
     # marker hygiene: `-m "not slow"` must still collect tests in every
     # async-pipeline-touched module — a marker typo that deselects a
     # whole suite would otherwise pass CI silently

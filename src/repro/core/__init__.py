@@ -41,7 +41,8 @@ from .engine import (CodingEngine, DecodePlan, EngineFuture, JaxEngine,
                      NumpyEngine, PallasEngine, make_engine, resolve_async)
 from .engine import engine_specs
 from .index import CuckooIndex
-from .netsim import CostModel, Leg, NetSim
+from .netsim import (ArrivalProcess, CostModel, EventRuntime, LatencyRecorder,
+                     Leg, NetSim, resolve_arrival)
 from .proxy import Proxy
 from .rebalance import MigrationPlan, Rebalancer
 from .ring import (ModPlacement, Placement, RingPlacement, make_placement)
@@ -50,6 +51,7 @@ from .shard import (ShardedCluster, ShardedNet, make_cluster, resolve_shards,
                     shard_for_key)
 from .store import MemECCluster, PartialFailure
 from .stripe import StripeList, StripeMapper, generate_stripe_lists
+from . import telemetry
 
 __all__ = [
     "AnalysisParams", "redundancy_all_encoding", "redundancy_all_replication",
@@ -58,10 +60,11 @@ __all__ = [
     "ObjectRef", "Code", "NoCode", "RDPCode", "RSCode", "XORCode",
     "make_code", "CodingEngine", "EngineFuture", "JaxEngine", "NumpyEngine",
     "PallasEngine", "make_engine", "resolve_async", "engine_specs",
-    "Coordinator", "ServerState", "CostModel",
+    "Coordinator", "ServerState", "CostModel", "ArrivalProcess",
+    "EventRuntime", "LatencyRecorder", "resolve_arrival",
     "Leg", "NetSim", "Proxy", "Server", "MemECCluster", "PartialFailure",
     "ShardedCluster", "ShardedNet", "make_cluster", "resolve_shards",
     "shard_for_key", "StripeList", "StripeMapper", "generate_stripe_lists",
     "Placement", "ModPlacement", "RingPlacement", "make_placement",
-    "Rebalancer", "MigrationPlan",
+    "Rebalancer", "MigrationPlan", "telemetry",
 ]

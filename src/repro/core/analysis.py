@@ -76,3 +76,18 @@ def crossover_value(K: float, nk: tuple[int, int], target: float, model: str = "
         if fn(AnalysisParams(K=K, V=v, n=n, k=k)) <= target:
             return v
     return -1
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """Version-tolerant ``compiled.cost_analysis()``.
+
+    jax <= 0.4.x returns a *list* of per-program dicts (one entry for a
+    single-device program), newer jax returns the dict directly, and
+    either may return None/empty for trivial programs.  Always hands
+    back a plain dict so callers can ``.get("flops", 0)`` regardless of
+    the installed jax.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
+    return dict(cost) if cost else {}

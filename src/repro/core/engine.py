@@ -227,6 +227,15 @@ class CodingEngine:
         # kernel/jit call is issued — tests assert submit_* dispatches
         # at submit (counter moves before result()), numpy stays at 0
         self.device_dispatches = 0
+        # cumulative modeled engine-busy seconds (CostModel.coding_s of
+        # every call merged into a request); the sharded scatter planner
+        # sorts shard groups by this clock to drain idle engines first
+        self.modeled_busy_s = 0.0
+
+    def note_modeled_busy(self, coding_s: float):
+        """Charge modeled busy seconds against this engine's clock."""
+        if coding_s > 0.0:
+            self.modeled_busy_s += coding_s
 
     # -- core batched ops (implemented by backends) ---------------------
     def encode_batch(self, data: np.ndarray) -> np.ndarray:
@@ -280,6 +289,7 @@ class CodingEngine:
             "device_dispatches": self.device_dispatches,
             "inv_cache": len(self._inv_cache),
             "fused_cache": len(self._fused_cache),
+            "modeled_busy_s": self.modeled_busy_s,
         }
 
     # -- modeled work (GF(2^8) multiply-accumulate bytes per batch) -----

@@ -35,10 +35,27 @@ lanes serializes its own legs — the merged duration is
 ``max(slowest lane, busiest shared endpoint)``, clamped by the fully
 serial sum.  Per-endpoint busy time is tracked in ``time_by_endpoint``
 (snapshot/diff via ``busy_snapshot``).
+
+Event runtime (PR 7): the phase algebra above prices one request in
+isolation — a busy engine never delays the *next* request.  With an
+open-loop ``ArrivalProcess`` (``arrival=`` / ``$MEMEC_ARRIVAL``:
+``poisson:RATE`` / ``uniform:RATE`` / ``trace:T0,T1,...``), every
+recorded request additionally becomes a discrete event in an
+``EventRuntime``: arrival drawn from the process, start gated FCFS on
+admission slots (``inflight`` client contexts), per-endpoint link
+occupancy clocks (``time_by_endpoint`` deltas) and
+``CostModel.engine_depth`` coding lanes, completion = start + service.
+Recorded latency then includes queue wait, so ``p50/p99/p999`` per
+request kind reflect contention; the pure phase-algebra service times
+stay available in ``NetSim.service``.  The default ``closed`` process
+keeps the historical numbers bit-identical (no event machinery at all),
+and ``inflight=1`` with rate→inf degenerates back to the serial
+closed-loop totals (property-tested in tests/test_event_runtime.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 from collections import defaultdict
 
 
@@ -105,10 +122,268 @@ class CostModel:
         return max(lanes)
 
 
+class LatencyRecorder:
+    """Single source of truth for latency aggregation.
+
+    Both the unsharded ``NetSim`` and the sharded facade report from one
+    of these, so percentile/mean formulas cannot diverge between paths
+    (they used to be copy-pasted into ``core/shard.py``).
+    ``total_recorded_s`` is monotonic — it survives ``clear()`` so
+    callers can take O(1) before/after snapshots of modeled time.
+    """
+
+    PERCENTILES = ((50.0, "p50_s"), (99.0, "p99_s"), (99.9, "p999_s"))
+
+    def __init__(self):
+        self.latencies: dict[str, list[float]] = defaultdict(list)
+        self.ops_by_kind: dict[str, int] = defaultdict(int)
+        self.total_recorded_s = 0.0
+
+    def record(self, kind: str, latency_s: float):
+        self.latencies[kind].append(latency_s)
+        self.ops_by_kind[kind] += 1
+        self.total_recorded_s += latency_s
+
+    @staticmethod
+    def percentile_of(xs, q: float) -> float:
+        import numpy as np
+        if not xs:
+            return float("nan")
+        return float(np.percentile(xs, q))
+
+    @staticmethod
+    def mean_of(xs) -> float:
+        return sum(xs) / len(xs) if xs else float("nan")
+
+    def percentile(self, kind: str, q: float) -> float:
+        return self.percentile_of(self.latencies.get(kind, []), q)
+
+    def mean(self, kind: str) -> float:
+        return self.mean_of(self.latencies.get(kind, []))
+
+    @classmethod
+    def summary_of(cls, xs) -> dict:
+        out = {"count": len(xs), "mean_s": cls.mean_of(xs)}
+        for q, name in cls.PERCENTILES:
+            out[name] = cls.percentile_of(xs, q)
+        return out
+
+    def summary(self) -> dict:
+        """``{kind: {count, mean_s, p50_s, p99_s, p999_s}}``."""
+        return {k: self.summary_of(xs)
+                for k, xs in sorted(self.latencies.items())}
+
+    def clear(self):
+        self.latencies.clear()
+        self.ops_by_kind.clear()
+
+
+class ArrivalProcess:
+    """Open-loop arrival-time generator for the event runtime.
+
+    Specs (``arrival=`` ctor arg, else ``$MEMEC_ARRIVAL``, else closed):
+
+    * ``closed`` — the historical closed loop: the next request is
+      issued when the previous completes.  No event machinery runs.
+    * ``poisson:RATE`` — seeded exponential inter-arrival gaps at RATE
+      req/s (``inf`` → zero gaps, i.e. everything arrives at t=0).
+    * ``uniform:RATE`` — deterministic 1/RATE gaps.
+    * ``trace:T0,T1,...`` — explicit arrival times in seconds; the gap
+      pattern cycles if the workload outruns the trace.
+
+    Extra ``:key=val`` fields: ``seed=N`` (poisson rng),
+    ``inflight=K`` (concurrent client contexts admitted by the
+    EventRuntime; default 1 matches the sequential closed-loop driver).
+    """
+
+    def __init__(self, kind: str = "closed", rate: float | None = None,
+                 seed: int = 0, inflight: int = 1,
+                 trace: list[float] | None = None):
+        if kind not in ("closed", "poisson", "uniform", "trace"):
+            raise ValueError(f"unknown arrival kind: {kind!r}")
+        self.kind = kind
+        self.rate = rate
+        self.seed = int(seed)
+        self.inflight = max(1, int(inflight))
+        self.trace = list(trace or [])
+        if kind in ("poisson", "uniform") and not (rate and rate > 0):
+            raise ValueError(f"{kind} arrival needs a positive rate")
+        if kind == "trace" and not self.trace:
+            raise ValueError("trace arrival needs at least one time")
+        self.reset()
+
+    @classmethod
+    def parse(cls, spec: str) -> "ArrivalProcess":
+        parts = [p for p in str(spec).strip().split(":") if p != ""]
+        if not parts:
+            return cls("closed")
+        kind, args = parts[0].lower(), parts[1:]
+        kw: dict = {}
+        for a in args:
+            if "=" in a:
+                key, val = a.split("=", 1)
+                if key == "seed":
+                    kw["seed"] = int(val)
+                elif key == "inflight":
+                    kw["inflight"] = int(val)
+                else:
+                    raise ValueError(f"unknown arrival option: {a!r}")
+            elif kind == "trace":
+                kw["trace"] = [float(t) for t in a.split(",")]
+            else:
+                kw["rate"] = float(a)
+        return cls(kind, **kw)
+
+    @property
+    def open_loop(self) -> bool:
+        return self.kind != "closed"
+
+    def reset(self):
+        import numpy as np
+        self._t = 0.0
+        self._rng = np.random.default_rng(self.seed)
+        self._trace_i = 0
+        if self.kind == "trace":
+            ts = self.trace
+            self._gaps = [ts[0]] + [b - a for a, b in zip(ts, ts[1:])]
+
+    def next_arrival(self) -> float:
+        """Absolute arrival time of the next request (monotonic)."""
+        if self.kind == "poisson":
+            gap = 0.0 if self.rate == float("inf") else \
+                float(self._rng.exponential(1.0 / self.rate))
+        elif self.kind == "uniform":
+            gap = 0.0 if self.rate == float("inf") else 1.0 / self.rate
+        elif self.kind == "trace":
+            gap = self._gaps[self._trace_i % len(self._gaps)]
+            self._trace_i += 1
+        else:  # closed — never driven through the event runtime
+            gap = 0.0
+        self._t = max(0.0, self._t + gap)
+        return self._t
+
+    def describe(self) -> dict:
+        d = {"kind": self.kind, "inflight": self.inflight}
+        if self.rate is not None:
+            d["rate"] = self.rate
+        if self.kind == "poisson":
+            d["seed"] = self.seed
+        if self.kind == "trace":
+            d["trace_len"] = len(self.trace)
+        return d
+
+
+def resolve_arrival(arrival=None, env: str = "MEMEC_ARRIVAL") -> ArrivalProcess:
+    """Ctor arg wins; else ``$MEMEC_ARRIVAL``; else the closed loop."""
+    if isinstance(arrival, ArrivalProcess):
+        return arrival
+    if arrival is None:
+        arrival = os.environ.get(env) or "closed"
+    return ArrivalProcess.parse(arrival)
+
+
+class EventRuntime:
+    """Discrete-event scheduling overlay over eager request execution.
+
+    Requests still *execute* eagerly in program order — what the runtime
+    replays is time.  Each recorded request becomes one event chain:
+
+        arrival    — drawn from the open-loop ArrivalProcess
+        start      — max(arrival, FCFS resource clocks)
+        completion — start + service   (service = phase-algebra latency)
+
+    Resources, each a ``free_at`` clock:
+
+    * admission slots: ``arrival.inflight`` concurrent client contexts.
+      ``inflight=1`` is the sequential closed-loop driver — at rate→inf
+      it reproduces the serial phase-algebra totals (makespan ==
+      sum(service) up to link-occupancy overhang).
+    * per-endpoint links: held for the request's ``time_by_endpoint``
+      occupancy delta — two admitted requests hammering the same server
+      NIC serialize there.
+    * coding-engine lanes: ``CostModel.engine_depth`` lanes held for the
+      request's modeled coding seconds (``NetSim.note_coding``) — a busy
+      engine delays the next request's submit.  Infinite depth keeps the
+      historical no-contention assumption.
+
+    Queue wait = start − arrival, with a per-resource breakdown
+    (clipped maxima, not additive — waits overlap).
+    """
+
+    RESOURCES = ("admission", "endpoint", "engine")
+
+    def __init__(self, cost: CostModel, arrival: ArrivalProcess):
+        self.cost = cost
+        self.arrival = arrival
+        self.slots = [0.0] * arrival.inflight
+        self.link_free: dict[str, float] = defaultdict(float)
+        depth = cost.engine_depth
+        self.engine_lanes = ([] if depth == float("inf")
+                             else [0.0] * max(1, int(depth)))
+        self.waits = LatencyRecorder()
+        self.wait_s_by_resource: dict[str, float] = dict.fromkeys(
+            self.RESOURCES, 0.0)
+        # (seq, kind, arrival, start, completion) — determinism probe
+        self.events: list[tuple] = []
+        self.makespan_s = 0.0
+        self.offered = 0
+
+    def engine_ready_at(self) -> float:
+        """When the earliest coding lane frees up (0.0 = idle/unbounded);
+        the scatter/gather planner uses this to prefer idle engines."""
+        return min(self.engine_lanes) if self.engine_lanes else 0.0
+
+    def submit(self, kind: str, service_s: float,
+               busy: dict[str, float] | None = None,
+               engine_s: float = 0.0) -> float:
+        """Schedule one request; returns its latency incl. queue wait."""
+        arrival = self.arrival.next_arrival()
+        slot = min(range(len(self.slots)), key=self.slots.__getitem__)
+        admit_ready = self.slots[slot]
+        busy = busy or {}
+        link_ready = max((self.link_free[ep] for ep in busy), default=0.0)
+        lane = -1
+        engine_ready = 0.0
+        if engine_s > 0.0 and self.engine_lanes:
+            lane = min(range(len(self.engine_lanes)),
+                       key=self.engine_lanes.__getitem__)
+            engine_ready = self.engine_lanes[lane]
+        start = max(arrival, admit_ready, link_ready, engine_ready)
+        completion = start + service_s
+        self.slots[slot] = completion
+        for ep, occ in busy.items():
+            self.link_free[ep] = start + occ
+        if lane >= 0:
+            self.engine_lanes[lane] = start + engine_s
+        wait = start - arrival
+        self.waits.record(kind, wait)
+        self.wait_s_by_resource["admission"] += min(
+            wait, max(0.0, admit_ready - arrival))
+        self.wait_s_by_resource["endpoint"] += min(
+            wait, max(0.0, link_ready - arrival))
+        self.wait_s_by_resource["engine"] += min(
+            wait, max(0.0, engine_ready - arrival))
+        self.events.append((self.offered, kind, arrival, start, completion))
+        self.offered += 1
+        self.makespan_s = max(self.makespan_s, completion)
+        return completion - arrival
+
+    def snapshot(self) -> dict:
+        return {
+            "arrival": self.arrival.describe(),
+            "offered": self.offered,
+            "makespan_s": self.makespan_s,
+            "queue_wait_s": self.waits.total_recorded_s,
+            "queue_wait_s_by_kind": {
+                k: sum(xs) for k, xs in sorted(self.waits.latencies.items())},
+            "queue_wait_s_by_resource": dict(self.wait_s_by_resource),
+        }
+
+
 class NetSim:
     """Accumulates modeled time and byte counters."""
 
-    def __init__(self, cost: CostModel | None = None):
+    def __init__(self, cost: CostModel | None = None, arrival=None):
         self.cost = cost or CostModel()
         self.bytes_by_kind: dict[str, int] = defaultdict(int)
         self.msgs_by_kind: dict[str, int] = defaultdict(int)
@@ -118,12 +393,25 @@ class NetSim:
         # lanes.  Occupancy only: RTT/processing pipeline across legs, so
         # they don't serialize; draining bytes through one NIC does.
         self.time_by_endpoint: dict[str, float] = defaultdict(float)
-        self.latencies: dict[str, list[float]] = defaultdict(list)
-        self.ops_by_kind: dict[str, int] = defaultdict(int)
-        # monotonic sum of every recorded request latency; lets callers
-        # (e.g. the sharded facade) take O(1) before/after snapshots of
-        # modeled time spent inside a call
-        self.total_recorded_s = 0.0
+        # recorded request latencies (incl. queue wait in event mode);
+        # `latencies`/`ops_by_kind` alias the recorder's dicts so legacy
+        # readers keep working, and `total_recorded_s` (monotonic sum,
+        # survives reset) is a property over the recorder
+        self.recorder = LatencyRecorder()
+        self.latencies = self.recorder.latencies
+        self.ops_by_kind = self.recorder.ops_by_kind
+        # pure phase-algebra service times (== recorder in closed mode;
+        # in event mode the queue-free component of each latency)
+        self.service = LatencyRecorder()
+        self.arrival = resolve_arrival(arrival)
+        self.events = (EventRuntime(self.cost, self.arrival)
+                       if self.arrival.open_loop else None)
+        self._event_busy_mark: dict[str, float] = {}
+        self._pending_coding_s = 0.0
+
+    @property
+    def total_recorded_s(self) -> float:
+        return self.recorder.total_recorded_s
 
     # -- request construction ------------------------------------------
     def _account_leg(self, leg: Leg) -> float:
@@ -190,22 +478,50 @@ class NetSim:
         floor = max(busy.values(), default=0.0)
         return min(serial, max(max(lane_durations), floor))
 
-    def record(self, req_kind: str, latency_s: float):
-        self.latencies[req_kind].append(latency_s)
-        self.ops_by_kind[req_kind] += 1
-        self.total_recorded_s += latency_s
+    def note_coding(self, coding_s: float):
+        """Event-mode demand capture: modeled engine-busy seconds charged
+        to the request currently executing (no-op in closed-loop mode —
+        the phase algebra already merged them into the latency)."""
+        if self.events is not None and coding_s > 0.0:
+            self._pending_coding_s += coding_s
+
+    def record(self, req_kind: str, latency_s: float) -> float:
+        """Record one finished request.
+
+        Closed loop: the phase-algebra latency is recorded verbatim (the
+        historical numbers, bit-identical).  Open loop: the request is
+        additionally submitted to the EventRuntime — its endpoint demand
+        is the ``time_by_endpoint`` delta since the previous record, its
+        engine demand the coding seconds noted via ``note_coding`` — and
+        the recorded latency includes the FCFS queue wait."""
+        if self.events is None:
+            self.recorder.record(req_kind, latency_s)
+            return latency_s
+        busy = self.busy_delta(self._event_busy_mark, self.time_by_endpoint)
+        self._event_busy_mark = self.busy_snapshot()
+        engine_s, self._pending_coding_s = self._pending_coding_s, 0.0
+        self.service.record(req_kind, latency_s)
+        lat = self.events.submit(req_kind, latency_s, busy, engine_s)
+        self.recorder.record(req_kind, lat)
+        return lat
 
     # -- reporting -------------------------------------------------------
     def percentile(self, req_kind: str, q: float) -> float:
-        import numpy as np
-        xs = self.latencies.get(req_kind, [])
-        if not xs:
-            return float("nan")
-        return float(np.percentile(xs, q))
+        return self.recorder.percentile(req_kind, q)
 
     def mean(self, req_kind: str) -> float:
-        xs = self.latencies.get(req_kind, [])
-        return sum(xs) / len(xs) if xs else float("nan")
+        return self.recorder.mean(req_kind)
+
+    def latency_summary(self) -> dict:
+        """Per-kind count/mean/p50/p99/p999 plus, in event mode, the
+        per-kind queue-wait share and the per-resource breakdown."""
+        out = self.recorder.summary()
+        if self.events is not None:
+            for kind, s in out.items():
+                ws = self.events.waits.latencies.get(kind, [])
+                s["queue_wait_s"] = sum(ws)
+                s["queue_wait_p99_s"] = LatencyRecorder.percentile_of(ws, 99.0)
+        return out
 
     def total_bytes(self) -> int:
         return sum(self.bytes_by_kind.values())
@@ -240,12 +556,20 @@ class NetSim:
         self.msgs_by_kind.clear()
         self.bytes_by_endpoint.clear()
         self.time_by_endpoint.clear()
-        self.latencies.clear()
-        self.ops_by_kind.clear()
+        self.recorder.clear()
+        self.service.clear()
+        self._event_busy_mark = {}
+        self._pending_coding_s = 0.0
+        if self.events is not None:
+            self.arrival.reset()
+            self.events = EventRuntime(self.cost, self.arrival)
 
     def snapshot(self) -> dict:
-        return {
+        out = {
             "bytes_by_kind": dict(self.bytes_by_kind),
             "msgs_by_kind": dict(self.msgs_by_kind),
             "bytes_by_endpoint": dict(self.bytes_by_endpoint),
         }
+        if self.events is not None:
+            out["event"] = self.events.snapshot()
+        return out

@@ -46,7 +46,7 @@ from collections import defaultdict
 from concurrent.futures import ThreadPoolExecutor
 
 from .index import fnv1a
-from .netsim import NetSim
+from .netsim import LatencyRecorder, NetSim, resolve_arrival
 from .ring import make_placement
 from .store import MemECCluster
 
@@ -93,8 +93,21 @@ class ShardedNet:
 
     def __init__(self, cluster: "ShardedCluster"):
         self._cl = cluster
-        self.local = NetSim(cluster.shards[0].net.cost)
+        # the facade's own event runtime lives here: merged batches and
+        # migration legs are submitted against per-shard "sh{i}" resource
+        # clocks (shard nets stay closed-loop — their phase algebra is
+        # the service time, the facade adds the queueing)
+        self.local = NetSim(cluster.shards[0].net.cost,
+                            arrival=cluster.arrival)
         self.cost = self.local.cost
+
+    @property
+    def events(self):
+        return self.local.events
+
+    @property
+    def arrival(self):
+        return self.local.arrival
 
     def _shard_nets(self):
         return [sh.net for sh in self._cl.shards]
@@ -162,15 +175,27 @@ class ShardedNet:
             out[ep] = out.get(ep, 0) + n
         return out
 
-    # -- reporting (same formulas as NetSim) ----------------------------
+    # -- reporting (shared LatencyRecorder formulas — cannot diverge
+    # from NetSim's) ----------------------------------------------------
     def percentile(self, req_kind: str, q: float) -> float:
-        import numpy as np
-        xs = self.latencies.get(req_kind, [])
-        return float(np.percentile(xs, q)) if xs else float("nan")
+        return LatencyRecorder.percentile_of(
+            self.latencies.get(req_kind, []), q)
 
     def mean(self, req_kind: str) -> float:
-        xs = self.latencies.get(req_kind, [])
-        return sum(xs) / len(xs) if xs else float("nan")
+        return LatencyRecorder.mean_of(self.latencies.get(req_kind, []))
+
+    def latency_summary(self) -> dict:
+        """Per-kind count/mean/p50/p99/p999 over the merged view (same
+        shape as ``NetSim.latency_summary``), with facade-level queue
+        waits attached in event mode."""
+        out = {k: LatencyRecorder.summary_of(xs)
+               for k, xs in sorted(self.latencies.items())}
+        if self.local.events is not None:
+            for kind, s in out.items():
+                ws = self.local.events.waits.latencies.get(kind, [])
+                s["queue_wait_s"] = sum(ws)
+                s["queue_wait_p99_s"] = LatencyRecorder.percentile_of(ws, 99.0)
+        return out
 
     def total_bytes(self) -> int:
         return sum(self.bytes_by_kind.values())
@@ -209,13 +234,16 @@ class ShardedNet:
     def snapshot(self) -> dict:
         # per-shard load + skew ride along so rebalancing decisions and
         # benchmarks read one source of truth
-        return {
+        out = {
             "bytes_by_kind": self.bytes_by_kind,
             "msgs_by_kind": self.msgs_by_kind,
             "bytes_by_endpoint": self.bytes_by_endpoint,
             "shard_ops": list(self._cl.shard_ops),
             "load_skew": self._cl.load_skew(),
         }
+        if self.local.events is not None:
+            out["event"] = self.local.events.snapshot()
+        return out
 
 
 class ShardedCluster:
@@ -228,13 +256,19 @@ class ShardedCluster:
     """
 
     def __init__(self, shards=None, engine=None, pipeline: bool = True,
-                 placement=None, **cluster_kw):
+                 placement=None, arrival=None, **cluster_kw):
         from .engine import engine_specs
         self.num_shards = resolve_shards(shards)
         self._engine_spec = engine
-        self._cluster_kw = dict(cluster_kw)
+        # open-loop event mode runs at the facade (ShardedNet.local): the
+        # shard stores are forced closed-loop so their phase algebra
+        # stays the pure per-shard service time — the facade adds the
+        # queueing against per-shard resource clocks.
+        self.arrival = resolve_arrival(arrival)
+        self._cluster_kw = dict(cluster_kw, arrival="closed")
         specs = engine_specs(engine, self.num_shards)
-        self.shards = [MemECCluster(engine=specs[i], shard_id=i, **cluster_kw)
+        self.shards = [MemECCluster(engine=specs[i], shard_id=i,
+                                    **self._cluster_kw)
                        for i in range(self.num_shards)]
         s0 = self.shards[0]
         self.servers_per_shard = len(s0.servers)
@@ -308,9 +342,21 @@ class ShardedCluster:
         out = dict(self._stats)
         for sh in self.shards:
             for k, v in sh.stats.items():
+                if not isinstance(v, (int, float)):
+                    continue  # nested summaries are rebuilt facade-level
                 out[k] = out.get(k, 0) + v
         out["shard_ops"] = list(self.shard_ops)
         out["load_skew"] = self.load_skew()
+        # merged-view latency percentiles (shared LatencyRecorder
+        # formulas) + facade queue-wait breakdown in event mode
+        out["latency"] = self.net.latency_summary()
+        if self.net.events is not None:
+            ev = self.net.events.snapshot()
+            out["arrival"] = ev["arrival"]
+            out["queue_wait_s"] = ev["queue_wait_s"]
+            out["queue_wait_s_by_kind"] = ev["queue_wait_s_by_kind"]
+            out["queue_wait_s_by_resource"] = ev["queue_wait_s_by_resource"]
+            out["event_makespan_s"] = ev["makespan_s"]
         return out
 
     def load_skew(self) -> float:
@@ -360,11 +406,18 @@ class ShardedCluster:
     def _scatter(self, fn, groups: dict[int, list[int]]):
         """Run ``fn(shard_index, request_indices)`` for every shard group.
 
-        With pipelining, groups execute on one worker per shard (each
-        worker touches only its own shard's state, so this is safe and
-        deterministic); results return in shard order either way.
+        Groups are issued idle-engines-first: shards are ordered by their
+        engine's cumulative modeled-busy clock (``modeled_busy_s``, fed
+        by every coding call), shard id as the deterministic tie-break —
+        the serial path drains idle engines before queueing behind busy
+        ones, and the thread pool submits them first.  With pipelining,
+        groups execute on one worker per shard (each worker touches only
+        its own shard's state, so this is safe and deterministic);
+        results return in issue order either way.
         """
-        items = sorted(groups.items())
+        items = sorted(groups.items(),
+                       key=lambda kv: (self.engines[kv[0]].modeled_busy_s,
+                                       kv[0]))
         for si, idxs in items:
             self.shard_ops[si] += len(idxs)
         if self.pipeline and len(items) > 1:
@@ -377,17 +430,33 @@ class ShardedCluster:
                 return [(si, idxs, f.result()) for si, idxs, f in futures]
         return [(si, idxs, fn(si, idxs)) for si, idxs in items]
 
-    def _record_batch(self, kind: str, dts: list[float]):
+    def _record_batch(self, kind: str, dts: list[tuple[int, float]]):
         """Merged-request latency under pipelining: the per-shard batches
         overlap fully (disjoint servers/proxies/engines), so the request
-        completes when the slowest shard does."""
+        completes when the slowest shard does.  ``dts``: (shard id,
+        modeled shard-batch seconds) pairs.  In open-loop event mode the
+        merged batch is one event against the facade runtime — each
+        involved shard's "sh{i}" resource clock is held for that shard's
+        share, so back-to-back batches hitting the same hot shard queue
+        there while disjoint shards overlap."""
         if not dts:
             return
-        self.net.record(kind, max(dts))
+        service = max(dt for _, dt in dts)
+        net = self.net.local
+        if net.events is not None:
+            busy = {}
+            for si, dt in dts:
+                busy[f"sh{si}"] = busy.get(f"sh{si}", 0.0) + dt
+            net.service.record(kind, service)
+            lat = net.events.submit(kind, service, busy)
+            net.recorder.record(kind, lat)
+        else:
+            net.record(kind, service)
         self._stats["cross_shard_batches"] += 1
         if len(dts) > 1:
             self._stats["pipelined_batches"] += 1
-            self._stats["pipeline_overlap_saved_s"] += sum(dts) - max(dts)
+            self._stats["pipeline_overlap_saved_s"] += \
+                sum(dt for _, dt in dts) - service
 
     def multi_get(self, keys, proxy_id: int | None = 0) -> list:
         keys = list(keys)
@@ -404,7 +473,7 @@ class ShardedCluster:
         for si, idxs, (vals, dt) in self._scatter(run, groups):
             for i, v in zip(idxs, vals):
                 out[i] = v
-            dts.append(dt)
+            dts.append((si, dt))
         self._record_batch("MGET", dts)
         return out
 
@@ -423,7 +492,7 @@ class ShardedCluster:
         for si, idxs, (oks, dt) in self._scatter(run, groups):
             for i, o in zip(idxs, oks):
                 ok[i] = o
-            dts.append(dt)
+            dts.append((si, dt))
         self._record_batch("MSET", dts)
         return ok
 
@@ -442,7 +511,7 @@ class ShardedCluster:
         for si, idxs, (oks, dt) in self._scatter(run, groups):
             for i, o in zip(idxs, oks):
                 ok[i] = o
-            dts.append(dt)
+            dts.append((si, dt))
         self._record_batch("MUPDATE", dts)
         return ok
 

@@ -142,7 +142,8 @@ class MemECCluster:
                  verify_rebuild: bool = False, mapping_ckpt_every: int = 256,
                  engine: str | CodingEngine | None = None,
                  shard_id: int | None = None,
-                 async_engine: bool | None = None):
+                 async_engine: bool | None = None,
+                 arrival=None):
         self.shard_id = shard_id   # None when not part of a ShardedCluster
         # intra-shard async pipeline (None defers to $MEMEC_ASYNC): issue
         # coding through engine futures while netsim legs are in flight
@@ -164,14 +165,17 @@ class MemECCluster:
         self.num_proxies = num_proxies
         self.coordinator = Coordinator(num_servers, self.stripe_lists,
                                        shard_id=shard_id)
-        self.net = NetSim(cost)
+        # arrival: open-loop event mode ("poisson:RATE" / "uniform:RATE" /
+        # "trace:..." / ArrivalProcess; None defers to $MEMEC_ARRIVAL,
+        # default closed loop — see core/netsim.py EventRuntime)
+        self.net = NetSim(cost, arrival=arrival)
         self.degraded_enabled = degraded_enabled
         self.verify_rebuild = verify_rebuild
         self.failed: set[int] = set()          # injected transient failures
         self.redirect: dict[int, RedirectStore] = {}
         # fault-injection hook: ("update"|"delete"|"set", key, parity_legs)
         self.crash_hook: tuple | None = None
-        self.stats = {"reconstructions": 0, "recon_chunk_hits": 0,
+        self._stats = {"reconstructions": 0, "recon_chunk_hits": 0,
                       "reverted_deltas": 0, "degraded_requests": 0,
                       "migrated_objects": 0, "migrated_chunks": 0,
                       "batch_recovered_chunks": 0, "redirect_handoffs": 0,
@@ -179,6 +183,23 @@ class MemECCluster:
                       "proxy_lane_batches": 0, "proxy_lane_saved_s": 0.0,
                       "engine_queue_wait_s": 0.0,
                       "decode_overlap_saved_s": 0.0}
+
+    @property
+    def stats(self) -> dict:
+        """Counter dict plus derived observability: per-kind latency
+        percentiles (``latency[kind] = {count, mean_s, p50_s, p99_s,
+        p999_s}``) and, in open-loop event mode, per-kind/per-resource
+        queue-wait breakdowns plus the arrival descriptor."""
+        out = dict(self._stats)
+        out["latency"] = self.net.latency_summary()
+        if self.net.events is not None:
+            ev = self.net.events.snapshot()
+            out["arrival"] = ev["arrival"]
+            out["queue_wait_s"] = ev["queue_wait_s"]
+            out["queue_wait_s_by_kind"] = ev["queue_wait_s_by_kind"]
+            out["queue_wait_s_by_resource"] = ev["queue_wait_s_by_resource"]
+            out["event_makespan_s"] = ev["makespan_s"]
+        return out
 
     def server_endpoint_names(self) -> list[str]:
         """Netsim endpoint labels of this cluster's storage servers."""
@@ -221,7 +242,7 @@ class MemECCluster:
         if not self.async_engine:
             return sum(phase_times)
         t = max(phase_times, default=0.0)
-        self.stats["intra_overlap_saved_s"] += sum(phase_times) - t
+        self._stats["intra_overlap_saved_s"] += sum(phase_times) - t
         return t
 
     def _merge_coding(self, coding_s: float, net_s: float,
@@ -231,10 +252,15 @@ class MemECCluster:
         additionally track their share of the async win in
         ``stats["decode_overlap_saved_s"]`` (a subset of
         ``intra_overlap_saved_s`` — the read-repair overlap)."""
-        self.stats["modeled_coding_s"] += coding_s
+        self._stats["modeled_coding_s"] += coding_s
+        # event-mode demand capture: the in-flight request's engine-busy
+        # seconds (gates later submits on the engine lanes) + the shard
+        # engine's cumulative modeled-busy clock (idle-engine planning)
+        self.net.note_coding(coding_s)
+        self.engine.note_modeled_busy(coding_s)
         t = self._overlap(coding_s, net_s)
         if self.async_engine and kind == "decode":
-            self.stats["decode_overlap_saved_s"] += coding_s + net_s - t
+            self._stats["decode_overlap_saved_s"] += coding_s + net_s - t
         return t
 
     def _merge_coding_calls(self, durs: list[float], net_s: float,
@@ -247,7 +273,7 @@ class MemECCluster:
         durs = [d for d in durs if d > 0]
         span = self.net.cost.engine_makespan(durs)
         if durs:
-            self.stats["engine_queue_wait_s"] += span - max(durs)
+            self._stats["engine_queue_wait_s"] += span - max(durs)
         return self._merge_coding(span, net_s, kind)
 
     def _coding_s(self, fut) -> float:
@@ -322,7 +348,7 @@ class MemECCluster:
         cid = self._stripe_chunk_id(sl, ev.chunk_id.stripe_id, self.k + ppos)
         rc = ReconChunk(cid, parity[ppos].copy(), dirty=True)
         rs.recon[cid.key()] = rc
-        self.stats["reconstructions"] += 1
+        self._stats["reconstructions"] += 1
         return t
 
     def _maybe_checkpoint(self, ds: int) -> float:
@@ -457,11 +483,11 @@ class MemECCluster:
                 # apart from intra_overlap_saved_s, which only counts
                 # overlaps the sync pipeline genuinely pays as a sum
                 # (coding vs legs, seal fan-out vs acks)
-                self.stats["proxy_lane_saved_s"] += sum(dts) - merged
+                self._stats["proxy_lane_saved_s"] += sum(dts) - merged
             else:
                 merged = sum(dts)
             if len(dts) > 1:
-                self.stats["proxy_lane_batches"] += 1
+                self._stats["proxy_lane_batches"] += 1
             self.net.record(kind, merged)
         return results
 
@@ -902,7 +928,7 @@ class MemECCluster:
                     return self._degraded_mutate("update", proxy, sl, ds,
                                                  key, value)
                 self._degraded_mutate("delete", proxy, sl, ds, key, None)
-        self.stats["degraded_requests"] += 1
+        self._stats["degraded_requests"] += 1
         t = self._coord_hop(proxy, len(key))
         obj_bytes = object_size(len(key), len(value))
         if self._is_failed(ds):
@@ -992,7 +1018,7 @@ class MemECCluster:
         cid = self._stripe_chunk_id(sl, stripe_id, position)
         rc = rs.recon.get(cid.key())
         if rc is not None:
-            self.stats["recon_chunk_hits"] += 1
+            self._stats["recon_chunk_hits"] += 1
             return rc, 0.0
         available, legs = self._gather_available(sl, stripe_id, position, r)
         # plan/execute decode: jax/pallas dispatch the pattern-group
@@ -1007,7 +1033,7 @@ class MemECCluster:
         if position < self.k:
             rc.parse()
         rs.recon[cid.key()] = rc
-        self.stats["reconstructions"] += 1
+        self._stats["reconstructions"] += 1
         return rc, t
 
     def _batch_recover_server(self, sid: int) -> tuple[float, int]:
@@ -1052,12 +1078,12 @@ class MemECCluster:
             if cid.position < self.k:
                 rc.parse()
             self._rs(r).recon[cid.key()] = rc
-        self.stats["reconstructions"] += len(tasks)
-        self.stats["batch_recovered_chunks"] += len(tasks)
+        self._stats["reconstructions"] += len(tasks)
+        self._stats["batch_recovered_chunks"] += len(tasks)
         return t, len(tasks)
 
     def _degraded_get(self, proxy: Proxy, sl: StripeList, ds: int, key: bytes):
-        self.stats["degraded_requests"] += 1
+        self._stats["degraded_requests"] += 1
         t = self._coord_hop(proxy, len(key))
         r = self.coordinator.redirected_server(sl, ds)
         rs = self._rs(r)
@@ -1099,7 +1125,7 @@ class MemECCluster:
                                            cid.stripe_id, r)
             t += t_rec
         else:
-            self.stats["recon_chunk_hits"] += 1
+            self._stats["recon_chunk_hits"] += 1
         entry = (rc.objects or {}).get(key)
         if entry is None:
             self.net.record("GET_DEG", t)
@@ -1138,7 +1164,7 @@ class MemECCluster:
 
     def _degraded_mutate(self, kind: str, proxy: Proxy, sl: StripeList,
                          ds: int, key: bytes, value: bytes | None) -> bool:
-        self.stats["degraded_requests"] += 1
+        self._stats["degraded_requests"] += 1
         t = self._coord_hop(proxy, len(key))
         if self._is_failed(ds):
             ok, t2 = self._degraded_mutate_failed_ds(kind, proxy, sl, ds, key, value)
@@ -1317,7 +1343,7 @@ class MemECCluster:
                     continue
                 nrev = srv.revert_deltas(proxy.pid, unacked)
                 if nrev:
-                    self.stats["reverted_deltas"] += nrev
+                    self._stats["reverted_deltas"] += nrev
                     legs.append(Leg("revert", 16 * nrev, f"p{proxy.pid}",
                                     f"s{srv.sid}"))
             if legs:
@@ -1434,7 +1460,7 @@ class MemECCluster:
                 legs.append(Leg("handoff_replica", len(okey) + len(rep[0]),
                                 f"s{failing}", f"s{r2}"))
                 moved += 1
-        self.stats["redirect_handoffs"] += moved
+        self._stats["redirect_handoffs"] += moved
         return self.net.phase(legs) if legs else 0.0
 
     def restore_server(self, sid: int) -> dict:
@@ -1469,7 +1495,7 @@ class MemECCluster:
                     restored.region[slot][:] = rc.buf
                     legs.append(Leg("migrate_chunk", self.chunk_size,
                                     f"s{r}", f"s{sid}"))
-                    self.stats["migrated_chunks"] += 1
+                    self._stats["migrated_chunks"] += 1
                     if rc.chunk_id.position < self.k:
                         # fix the object index for objects deleted in
                         # degraded mode — only when the index still points
@@ -1494,7 +1520,7 @@ class MemECCluster:
                 val = rs.temp_objects.pop(okey)
                 legs.append(Leg("migrate_obj", len(okey) + len(val),
                                 f"s{r}", f"s{sid}"))
-                self.stats["migrated_objects"] += 1
+                self._stats["migrated_objects"] += 1
                 ref = restored.lookup(okey)
                 if ref is not None and ref.value_size == len(val):
                     self._update_small(okey, val, 0)

@@ -1,0 +1,81 @@
+"""Structured telemetry snapshots for MemEC clusters.
+
+One versioned dict schema for everything an external consumer (the
+benchmark harness, ``BENCH_ci.json``, a future dashboard) needs to read
+off a running cluster, instead of each caller picking fields out of
+``stats`` / ``net`` ad hoc.  The shape is stable under the
+``(schema, version)`` pair — add fields freely, bump ``VERSION`` on any
+rename/removal so consumers can gate.
+
+Snapshot layout (version 1)::
+
+    {
+      "schema":   "memec/telemetry",
+      "version":  1,
+      "arrival":  {kind, inflight[, rate, seed, trace_len]},
+      "open_loop": bool,
+      "latency":  {KIND: {count, mean_s, p50_s, p99_s, p999_s
+                          [, queue_wait_s, queue_wait_p99_s]}},
+      "counters": {...},            # every numeric stats entry
+      "engines":  [{engine, path, device_dispatches, modeled_busy_s,
+                    ...}, ...],     # one per shard engine
+      "event":    {offered, makespan_s, queue_wait_s,
+                   queue_wait_s_by_kind, queue_wait_s_by_resource,
+                   arrival}         # open-loop mode only
+    }
+
+Works duck-typed for both ``MemECCluster`` (``net`` is a ``NetSim``) and
+``ShardedCluster`` (``net`` is the ``ShardedNet`` facade view).
+"""
+from __future__ import annotations
+
+SCHEMA = "memec/telemetry"
+VERSION = 1
+
+#: keys every snapshot must carry, whatever the mode
+REQUIRED_KEYS = ("schema", "version", "arrival", "open_loop", "latency",
+                 "counters", "engines")
+
+
+def snapshot(cluster) -> dict:
+    """Versioned telemetry snapshot of a cluster (sharded or not)."""
+    net = cluster.net
+    stats = cluster.stats
+    engines = getattr(cluster, "engines", None) or [cluster.engine]
+    snap = {
+        "schema": SCHEMA,
+        "version": VERSION,
+        "arrival": net.arrival.describe(),
+        "open_loop": net.events is not None,
+        "latency": net.latency_summary(),
+        "counters": {k: v for k, v in stats.items()
+                     if isinstance(v, (int, float))},
+        "engines": [dict(e.stats(), engine=e.name) for e in engines],
+    }
+    if net.events is not None:
+        snap["event"] = net.events.snapshot()
+    return snap
+
+
+def validate(snap: dict) -> dict:
+    """Assert ``snap`` is a consumable version-1 snapshot; returns it.
+
+    Consumers (benchmarks/common.py, the verify.sh CI smoke) call this
+    before reading fields so a schema drift fails loudly at the seam
+    instead of as a KeyError three layers down.
+    """
+    if snap.get("schema") != SCHEMA:
+        raise ValueError(f"not a {SCHEMA} snapshot: {snap.get('schema')!r}")
+    if snap.get("version") != VERSION:
+        raise ValueError(f"telemetry version {snap.get('version')!r} != "
+                         f"supported {VERSION}")
+    missing = [k for k in REQUIRED_KEYS if k not in snap]
+    if missing:
+        raise ValueError(f"telemetry snapshot missing keys: {missing}")
+    if snap["open_loop"] and "event" not in snap:
+        raise ValueError("open-loop snapshot without an 'event' section")
+    for kind, s in snap["latency"].items():
+        for field in ("count", "mean_s", "p50_s", "p99_s", "p999_s"):
+            if field not in s:
+                raise ValueError(f"latency[{kind!r}] missing {field}")
+    return snap

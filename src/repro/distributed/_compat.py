@@ -1,4 +1,11 @@
-"""Version-compat shim for shard_map (moved out of experimental in 0.8)."""
+"""Version-compat shims for jax API drift.
+
+* ``shard_map`` moved out of experimental in 0.8;
+* ``jax.lax.axis_size`` only exists on newer jax — older versions spell
+  it ``psum(1, axis)`` (statically evaluated to the bound axis size);
+* ``jax.sharding.AbstractMesh`` changed its constructor from a single
+  ``((name, size), ...)`` shape tuple to ``(axis_sizes, axis_names)``.
+"""
 from __future__ import annotations
 
 
@@ -13,3 +20,20 @@ def shard_map(f, mesh, in_specs, out_specs, check_rep: bool = False):
     from jax.experimental.shard_map import shard_map as _sm
     return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                check_rep=check_rep)
+
+
+def axis_size(name) -> int:
+    """Size of a bound mesh axis inside shard_map/pmap-style code."""
+    import jax
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+def abstract_mesh(shape, axes):
+    """``jax.sharding.AbstractMesh`` across the ctor-signature change."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:  # jax <= 0.4.x wants (("data", 4), ("model", 2))
+        return AbstractMesh(tuple(zip(axes, shape)))

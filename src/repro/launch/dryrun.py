@@ -355,7 +355,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
         lowered = jitted.lower(*args)
         compiled = lowered.compile()
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        from repro.core.analysis import xla_cost_analysis
+        cost = xla_cost_analysis(compiled)
     hlo = compiled.as_text()
     # scan-aware analysis (XLA cost_analysis counts while bodies once —
     # see hlo_analysis docstring; raw numbers kept for cross-reference)
@@ -376,8 +377,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
     n_dev = mesh.devices.size
     flops = float(ana["flops"])
     bytes_acc = float(ana["bytes"])
-    raw_flops = float((cost or {}).get("flops", 0.0))
-    raw_bytes = float((cost or {}).get("bytes accessed", 0.0))
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
     mem_d = {}
     if mem is not None:
         for attr in ("generated_code_size_in_bytes",

@@ -16,6 +16,15 @@ def _mesh(shape, axes):
     return jax.make_mesh(shape, axes)
 
 
+def make_mesh(shape, axes):
+    """Version-guarded ``jax.make_mesh``: requests ``AxisType.Auto`` axes
+    where the installed jax has them and plain axes otherwise.  Every
+    mesh construction (tests, examples, launch scripts) must route
+    through here — constructing with ``axis_types=`` directly raises
+    ``AttributeError`` on jax < 0.6."""
+    return _mesh(tuple(shape), tuple(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -31,8 +31,8 @@ def test_ecstore_encode_delta_reconstruct_vs_oracle():
         from repro.distributed.ecstore import (ECConfig, parity_delta_update,
                                                reconstruct_failed, encode_parity)
         from repro.core.codes import RSCode
-        mesh = jax.make_mesh((12, 1), ("data", "model"),
-                             axis_types=(jshard.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((12, 1), ("data", "model"))
         from jax.sharding import PartitionSpec as P
         cfg = ECConfig(k=8, m=2, page_size=64)
         A, Pn = 12, 16
@@ -140,8 +140,8 @@ def test_ec_checkpoint_protects_training_state():
         from repro.train.optimizer import make_optimizer
         from repro.train.train_step import make_train_step
         from repro.data.pipeline import DataConfig, SyntheticLM
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jshard.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
         cfg = get_reduced("starcoder2-3b")
         model = Model(cfg)
         params = model.init(jax.random.PRNGKey(0))
@@ -228,8 +228,8 @@ class TestShardingRules:
         from repro.configs import ARCH_NAMES, get_reduced
         from repro.distributed import sharding as shd
         from repro.models import Model
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jshard.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((1, 1), ("data", "model"))
         for arch in ARCH_NAMES:
             cfg = get_reduced(arch)
             shapes = jax.eval_shape(Model(cfg).init, jax.random.PRNGKey(0))
@@ -241,9 +241,10 @@ class TestShardingRules:
             assert n_spec == n_leaf, arch
 
     def test_fit_spec_demotes_indivisible(self):
-        from jax.sharding import AbstractMesh, PartitionSpec as P
+        from jax.sharding import PartitionSpec as P
         from repro.distributed.sharding import fit_spec
-        mesh = AbstractMesh((4, 2), ("data", "model"))
+        from repro.distributed._compat import abstract_mesh
+        mesh = abstract_mesh((4, 2), ("data", "model"))
         assert fit_spec(P("data", "model"), (8, 6), mesh) == P("data", "model")
         assert fit_spec(P("data", "model"), (7, 6), mesh) == P(None, "model")
         # unknown axis ("pod") dropped; remaining must divide
@@ -292,8 +293,8 @@ def test_dryrun_cell_compiles():
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         import jax.sharding as jshard
-        mesh = jax.make_mesh((4, 4), ("data", "model"),
-                             axis_types=(jshard.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4, 4), ("data", "model"))
         from repro.launch.dryrun import build_cell, collective_bytes
         built, why = build_cell("starcoder2-3b", "decode_32k", mesh)
         assert built is not None, why

@@ -1,0 +1,370 @@
+"""Event-driven request runtime (PR 7).
+
+The open-loop ``ArrivalProcess`` + ``EventRuntime`` must be a pure
+*scheduling* overlay: execution stays eager and byte-identical, only the
+modeled clock changes.  Properties pinned here:
+
+* the default ``closed`` process runs zero event machinery (historical
+  numbers bit-identical);
+* seeded determinism — same spec, same workload, identical event log;
+* closed-loop equivalence — ``poisson:inf:inflight=1`` reproduces the
+  serial phase-algebra totals (makespan == closed-loop modeled time);
+* offered-load shape — p99 grows monotonically with arrival rate while
+  p50 stays near-flat below saturation;
+* resource gating — finite ``engine_depth`` lanes and shared endpoint
+  clocks delay subsequent submissions;
+* one ``LatencyRecorder`` feeds both NetSim and the sharded facade;
+* the telemetry snapshot validates against its own schema.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
+
+from repro.core import (ArrivalProcess, CostModel, EventRuntime,
+                        LatencyRecorder, MemECCluster, NetSim, make_cluster,
+                        resolve_arrival, telemetry)
+
+KW = dict(num_servers=16, scheme="rs", n=10, k=8, c=4,
+          chunk_size=512, max_unsealed=2)
+
+
+def cluster(arrival=None, **kw):
+    merged = dict(KW)
+    merged.update(kw)
+    return MemECCluster(arrival=arrival, **merged)
+
+
+def drive(cl, n_obj=40, reads=120, seed=0):
+    """Deterministic set+get workload; returns the keys written."""
+    rng = np.random.default_rng(seed)
+    keys = []
+    for i in range(n_obj):
+        key = b"ev%08d" % i
+        cl.set(key, bytes(rng.integers(0, 256, 24, dtype=np.uint8)))
+        keys.append(key)
+    for i in range(reads):
+        assert cl.get(keys[(i * 7) % n_obj]) is not None
+    return keys
+
+
+# ---------------------------------------------------------------------------
+# ArrivalProcess parsing + generation
+# ---------------------------------------------------------------------------
+
+class TestArrivalProcess:
+    def test_default_is_closed(self, monkeypatch):
+        monkeypatch.delenv("MEMEC_ARRIVAL", raising=False)
+        ap = resolve_arrival()
+        assert ap.kind == "closed" and not ap.open_loop
+
+    def test_env_var_resolves(self, monkeypatch):
+        monkeypatch.setenv("MEMEC_ARRIVAL", "poisson:500:seed=7:inflight=3")
+        ap = resolve_arrival()
+        assert (ap.kind, ap.rate, ap.seed, ap.inflight) == ("poisson", 500.0, 7, 3)
+        # explicit ctor arg wins over the env var
+        assert resolve_arrival("closed").kind == "closed"
+
+    def test_parse_variants(self):
+        assert ArrivalProcess.parse("uniform:250").rate == 250.0
+        assert ArrivalProcess.parse("poisson:inf").rate == float("inf")
+        tr = ArrivalProcess.parse("trace:0.1,0.2,0.4")
+        assert tr.trace == [0.1, 0.2, 0.4]
+
+    @pytest.mark.parametrize("bad", ["burst:10", "poisson", "poisson:0",
+                                     "trace", "poisson:10:retries=2"])
+    def test_parse_rejects(self, bad):
+        with pytest.raises(ValueError):
+            ArrivalProcess.parse(bad)
+
+    def test_poisson_seeded_and_resettable(self):
+        a = ArrivalProcess.parse("poisson:1000:seed=3")
+        b = ArrivalProcess.parse("poisson:1000:seed=3")
+        xs = [a.next_arrival() for _ in range(50)]
+        assert xs == [b.next_arrival() for _ in range(50)]
+        assert xs == sorted(xs)          # arrivals are monotonic
+        a.reset()
+        assert [a.next_arrival() for _ in range(50)] == xs
+        c = ArrivalProcess.parse("poisson:1000:seed=4")
+        assert [c.next_arrival() for _ in range(50)] != xs
+
+    def test_rate_inf_means_zero_gaps(self):
+        ap = ArrivalProcess.parse("poisson:inf")
+        assert [ap.next_arrival() for _ in range(5)] == [0.0] * 5
+
+    def test_trace_gap_pattern_cycles(self):
+        ap = ArrivalProcess.parse("trace:0.5,1.0")
+        assert [ap.next_arrival() for _ in range(4)] == [0.5, 1.0, 1.5, 2.0]
+
+
+# ---------------------------------------------------------------------------
+# closed loop: no event machinery, verbatim records
+# ---------------------------------------------------------------------------
+
+class TestClosedLoop:
+    def test_no_event_runtime_by_default(self, monkeypatch):
+        monkeypatch.delenv("MEMEC_ARRIVAL", raising=False)
+        cl = cluster()
+        assert cl.net.events is None and not cl.net.arrival.open_loop
+        drive(cl, n_obj=10, reads=20)
+        st_ = cl.stats
+        assert "queue_wait_s" not in st_ and "arrival" not in st_
+        assert st_["latency"]["GET"]["p99_s"] >= st_["latency"]["GET"]["p50_s"]
+
+    def test_record_is_verbatim(self):
+        net = NetSim(CostModel(), arrival="closed")
+        assert net.record("GET", 0.25) == 0.25
+        assert net.latencies["GET"] == [0.25]
+        assert net.total_recorded_s == 0.25
+
+
+# ---------------------------------------------------------------------------
+# seeded determinism of the event log
+# ---------------------------------------------------------------------------
+
+class TestDeterminism:
+    SPEC = "poisson:800:seed=5:inflight=2"
+
+    def test_same_seed_identical_events(self):
+        a, b = cluster(self.SPEC), cluster(self.SPEC)
+        drive(a)
+        drive(b)
+        assert a.net.events.events == b.net.events.events
+        assert a.net.percentile("GET", 99) == b.net.percentile("GET", 99)
+        assert a.net.latency_summary() == b.net.latency_summary()
+
+    def test_different_seed_differs(self):
+        a = cluster(self.SPEC)
+        b = cluster("poisson:800:seed=6:inflight=2")
+        drive(a)
+        drive(b)
+        assert a.net.events.events != b.net.events.events
+
+    def test_reset_rewinds_the_arrival_process(self):
+        cl = cluster(self.SPEC)
+        drive(cl, n_obj=10, reads=20)
+        first = list(cl.net.events.events)
+        cl.net.reset()
+        assert cl.net.events.offered == 0
+        drive(cl, n_obj=10, reads=20, seed=1)  # same op sequence, new values
+        replay = cl.net.events.events
+        # same arrival draws and same op order -> same arrival column
+        assert [e[2] for e in replay] == [e[2] for e in first]
+
+
+# ---------------------------------------------------------------------------
+# closed-loop equivalence: rate -> inf, inflight=1 degenerates to the
+# serial phase-algebra totals (the tentpole's backward-compat property)
+# ---------------------------------------------------------------------------
+
+class TestClosedLoopEquivalence:
+    @settings(max_examples=4, deadline=None)
+    @given(st.integers(min_value=0, max_value=3))
+    def test_rate_inf_matches_closed_totals(self, seed):
+        closed = cluster("closed")
+        event = cluster(f"poisson:inf:seed={seed}:inflight=1")
+        drive(closed, n_obj=25, reads=60, seed=seed)
+        drive(event, n_obj=25, reads=60, seed=seed)
+        # execution is identical: per-kind service == closed latencies
+        assert dict(event.net.service.latencies) == dict(closed.net.latencies)
+        # and the serial schedule reproduces the closed-loop total
+        total = closed.net.total_recorded_s
+        assert event.net.events.makespan_s == pytest.approx(total, rel=1e-3)
+        assert sum(sum(xs) for xs in event.net.service.latencies.values()) \
+            == pytest.approx(total, rel=1e-12)
+
+    def test_uniform_overload_inflates_latency(self):
+        closed = cluster("closed")
+        slow = cluster("uniform:1e9")   # arrivals far faster than service
+        drive(closed, n_obj=25, reads=60)
+        drive(slow, n_obj=25, reads=60)
+        assert slow.net.events.snapshot()["queue_wait_s"] > 0.0
+        assert slow.net.percentile("GET", 99) > closed.net.percentile("GET", 99)
+
+
+# ---------------------------------------------------------------------------
+# offered-load shape: p99 monotone, p50 near-flat below saturation
+# ---------------------------------------------------------------------------
+
+class TestRateSweep:
+    def test_tail_grows_before_the_median(self):
+        base = cluster("closed")
+        drive(base, n_obj=30, reads=100)
+        t0 = base.net.total_recorded_s
+        svc_rate = sum(base.net.ops_by_kind.values()) / t0
+        rows = {}
+        for x in (0.2, 0.8, 4.0):
+            cl = cluster(f"poisson:{x * svc_rate:.6g}:seed=11:inflight=2")
+            drive(cl, n_obj=30, reads=100)
+            rows[x] = {"p50": cl.net.percentile("GET", 50),
+                       "p99": cl.net.percentile("GET", 99)}
+        p99s = [rows[x]["p99"] for x in (0.2, 0.8, 4.0)]
+        assert all(b >= a for a, b in zip(p99s, p99s[1:])), p99s
+        assert rows[4.0]["p99"] > 1.5 * rows[0.2]["p99"]
+        assert rows[0.8]["p50"] < 2.0 * rows[0.2]["p50"]
+
+
+# ---------------------------------------------------------------------------
+# resource gating: engine lanes, endpoint clocks, admission slots
+# ---------------------------------------------------------------------------
+
+class TestResourceGating:
+    def test_engine_lanes_serialize_coding(self):
+        rt = EventRuntime(CostModel(engine_depth=1),
+                          ArrivalProcess.parse("poisson:inf:inflight=4"))
+        for _ in range(4):
+            rt.submit("GET", 1e-3, engine_s=1e-3)
+        assert rt.wait_s_by_resource["engine"] > 0.0
+        assert rt.makespan_s == pytest.approx(4e-3)
+
+    def test_infinite_depth_never_gates(self):
+        rt = EventRuntime(CostModel(),
+                          ArrivalProcess.parse("poisson:inf:inflight=4"))
+        for _ in range(4):
+            rt.submit("GET", 1e-3, engine_s=1e-3)
+        assert rt.wait_s_by_resource["engine"] == 0.0
+        assert rt.makespan_s == pytest.approx(1e-3)
+
+    def test_shared_endpoint_serializes(self):
+        rt = EventRuntime(CostModel(),
+                          ArrivalProcess.parse("poisson:inf:inflight=2"))
+        rt.submit("GET", 1e-3, busy={"s0": 8e-4})
+        rt.submit("GET", 1e-3, busy={"s0": 8e-4})
+        assert rt.wait_s_by_resource["endpoint"] == pytest.approx(8e-4)
+        rt.submit("GET", 1e-3, busy={"s1": 8e-4})   # disjoint endpoint
+        assert rt.wait_s_by_resource["endpoint"] == pytest.approx(8e-4)
+
+    def test_engine_ready_at_prefers_idle(self):
+        rt = EventRuntime(CostModel(engine_depth=2),
+                          ArrivalProcess.parse("poisson:inf:inflight=4"))
+        assert rt.engine_ready_at() == 0.0
+        rt.submit("SET", 1e-3, engine_s=5e-4)
+        assert rt.engine_ready_at() == 0.0          # second lane still idle
+        rt.submit("SET", 1e-3, engine_s=5e-4)
+        assert rt.engine_ready_at() > 0.0
+
+    def test_modeled_engine_busy_accumulates(self):
+        cl = cluster()
+        # values big enough to fill chunks -> seals -> parity engine calls
+        rng = np.random.default_rng(0)
+        for i in range(150):
+            cl.set(b"mb%07d" % i,
+                   bytes(rng.integers(0, 256, 200, dtype=np.uint8)))
+        assert cl.engine.stats()["modeled_busy_s"] > 0.0
+        assert cl.engine.modeled_busy_s == cl.engine.stats()["modeled_busy_s"]
+
+
+# ---------------------------------------------------------------------------
+# sharded facade: one event runtime at the facade, shards stay closed
+# ---------------------------------------------------------------------------
+
+class TestShardedEventMode:
+    SPEC = "poisson:2000:seed=9:inflight=2"
+
+    def _sharded(self):
+        cl = make_cluster(shards=2, arrival=self.SPEC, **KW)
+        rng = np.random.default_rng(0)
+        keys = [b"sh%08d" % i for i in range(40)]
+        cl.multi_set([(k, bytes(rng.integers(0, 256, 24, dtype=np.uint8)))
+                      for k in keys])
+        for _ in range(6):
+            assert all(v is not None for v in cl.multi_get(keys))
+        return cl
+
+    def test_shards_forced_closed_facade_open(self):
+        cl = self._sharded()
+        assert cl.net.events is not None
+        assert all(sh.net.events is None for sh in cl.shards)
+        ev = cl.net.events.snapshot()
+        assert ev["offered"] > 0
+        st_ = cl.stats
+        assert st_["arrival"]["kind"] == "poisson"
+        assert "MGET" in st_["latency"]
+        assert st_["latency"]["MGET"]["p99_s"] >= st_["latency"]["MGET"]["p50_s"]
+
+    def test_facade_percentile_uses_shared_recorder(self):
+        cl = self._sharded()
+        merged = cl.net.latencies["MGET"]
+        assert cl.net.percentile("MGET", 99) \
+            == LatencyRecorder.percentile_of(merged, 99.0) \
+            == float(np.percentile(merged, 99.0))
+        assert cl.net.mean("MGET") == LatencyRecorder.mean_of(merged)
+
+
+# ---------------------------------------------------------------------------
+# shared LatencyRecorder: one formula set for both report paths
+# ---------------------------------------------------------------------------
+
+class TestLatencyRecorder:
+    def test_summary_shape(self):
+        rec = LatencyRecorder()
+        for x in (1.0, 2.0, 3.0, 10.0):
+            rec.record("GET", x)
+        s = rec.summary()["GET"]
+        assert s["count"] == 4 and s["mean_s"] == 4.0
+        assert s["p50_s"] == float(np.percentile([1, 2, 3, 10], 50))
+        assert set(s) == {"count", "mean_s", "p50_s", "p99_s", "p999_s"}
+
+    def test_total_recorded_survives_clear(self):
+        rec = LatencyRecorder()
+        rec.record("GET", 2.0)
+        rec.clear()
+        assert rec.total_recorded_s == 2.0 and rec.latencies == {}
+
+    def test_netsim_delegates(self):
+        net = NetSim(CostModel())
+        for x in (1.0, 5.0, 9.0):
+            net.record("GET", x)
+        assert net.percentile("GET", 50) == 5.0
+        assert net.mean("GET") == 5.0
+        assert net.recorder.latencies is net.latencies
+
+    def test_empty_is_nan(self):
+        assert np.isnan(LatencyRecorder.percentile_of([], 99.0))
+        assert np.isnan(LatencyRecorder.mean_of([]))
+
+
+# ---------------------------------------------------------------------------
+# telemetry snapshot schema
+# ---------------------------------------------------------------------------
+
+class TestTelemetry:
+    def test_closed_snapshot_validates(self):
+        cl = cluster()
+        drive(cl, n_obj=10, reads=20)
+        snap = telemetry.validate(telemetry.snapshot(cl))
+        assert snap["schema"] == telemetry.SCHEMA
+        assert snap["version"] == telemetry.VERSION
+        assert not snap["open_loop"] and "event" not in snap
+        assert snap["latency"]["GET"]["count"] == 20
+        assert snap["counters"]  # numeric stats made it through
+
+    def test_open_loop_snapshot_has_event_section(self):
+        cl = cluster("poisson:2000:seed=2:inflight=2")
+        drive(cl, n_obj=10, reads=20)
+        snap = telemetry.validate(telemetry.snapshot(cl))
+        assert snap["open_loop"]
+        assert snap["event"]["offered"] == snap["latency"]["GET"]["count"] \
+            + snap["latency"]["SET"]["count"]
+        assert "queue_wait_s" in snap["latency"]["GET"]
+        assert set(snap["event"]["queue_wait_s_by_resource"]) \
+            == set(EventRuntime.RESOURCES)
+
+    def test_validate_rejects_drift(self):
+        cl = cluster()
+        drive(cl, n_obj=5, reads=5)
+        snap = telemetry.snapshot(cl)
+        for corrupt in ({**snap, "schema": "memec/other"},
+                        {**snap, "version": telemetry.VERSION + 1},
+                        {k: v for k, v in snap.items() if k != "latency"}):
+            with pytest.raises(ValueError):
+                telemetry.validate(corrupt)
+
+    def test_sharded_snapshot_validates(self):
+        cl = make_cluster(shards=2, **KW)
+        rng = np.random.default_rng(1)
+        cl.multi_set([(b"t%06d" % i,
+                       bytes(rng.integers(0, 256, 16, dtype=np.uint8)))
+                      for i in range(20)])
+        snap = telemetry.validate(telemetry.snapshot(cl))
+        assert len(snap["engines"]) == 2
+        assert all("modeled_busy_s" in e for e in snap["engines"])

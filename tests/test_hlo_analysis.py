@@ -4,6 +4,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from repro.core.analysis import xla_cost_analysis
 from repro.launch.hlo_analysis import analyze, parse_hlo
 
 
@@ -30,7 +31,7 @@ def test_scan_multiplies_body():
         return out
 
     c = _compile(scanned, a, a)
-    raw = c.cost_analysis().get("flops", 0)
+    raw = xla_cost_analysis(c).get("flops", 0)
     ours = analyze(c.as_text())["flops"]
     expect = 8 * 2 * 256**3
     assert raw < expect / 4          # XLA undercounts (1 body)
