@@ -81,7 +81,9 @@ def cluster_metrics(cluster, ops: int, kinds=("GET", "UPDATE", "SET")):
 def tail_metrics(cluster, kinds=None) -> dict:
     """Per-kind tail percentiles (ms) off the validated telemetry
     snapshot — the benchmarks' one consumption point for the versioned
-    schema (core/telemetry.py), so a schema drift fails here, loudly.
+    schema (core/telemetry.py, version 2: adds ``trace`` +
+    ``critical_path`` sections), so a schema drift — including a stale
+    v1 snapshot — fails here, loudly.
 
     Returns ``{kind: {count, mean_ms, p50_ms, p99_ms, p999_ms
     [, queue_wait_ms]}}``, restricted to ``kinds`` when given.

@@ -298,5 +298,56 @@ def tail_smoke(engine=None) -> list[dict]:
     return rows
 
 
+def trace_smoke(path="TRACE_ci.json", engine=None) -> dict:
+    """CI trace smoke (PR 8): traced open-loop window -> critical-path
+    rows + a Perfetto-loadable Chrome trace artifact.
+
+    Guards the tracer end to end: every span tree checks (children nest,
+    max-weight path == recorded latency), the exported JSON is
+    structurally valid trace-event format, a `TraceCapture` of the run
+    replayed via ``arrival="trace:..."`` reproduces the per-kind
+    p50/p99 exactly, and a tracing-off twin allocates zero tracer
+    state.  Returns the telemetry ``trace`` summary + ``critical_path``
+    rows for BENCH_ci.json's ``"trace"`` key.
+    """
+    from repro.core import telemetry, trace
+    from repro.data.ycsb import run_workload
+
+    engine = engine or os.environ.get("MEMEC_ENGINE", "numpy")
+    cfg = YCSBConfig(num_objects=200)
+    kw = dict(scheme="rs", engine=engine, shards=1, c=4,
+              chunk_size=512, max_unsealed=2,
+              arrival="poisson:20000:seed=5:inflight=2")
+    cl = make_memec(trace=True, **kw)
+    run_workload(cl, "load", 0, cfg, batch_size=1)
+    run_workload(cl, "A", 300, cfg, batch_size=1)
+    for r in cl.tracer.requests:
+        r.check()
+    snap = telemetry.validate(telemetry.snapshot(cl))
+    assert snap["trace"]["enabled"] and snap["critical_path"], \
+        "traced run produced no critical-path rows"
+    doc = trace.export_chrome(cl, path=path)
+    trace.validate_chrome(doc)
+
+    # capture -> replay reproduces the per-kind p50/p99 exactly
+    cap = trace.TraceCapture.from_cluster(cl)
+    rep = make_memec(**dict(kw, arrival=cap.arrival_spec()))
+    run_workload(rep, "load", 0, cfg, batch_size=1)
+    run_workload(rep, "A", 300, cfg, batch_size=1)
+    orig, got = cl.net.latency_summary(), rep.net.latency_summary()
+    for kind in orig:
+        for field in ("count", "p50_s", "p99_s"):
+            assert orig[kind][field] == got[kind][field], \
+                f"trace replay drifted: {kind}.{field}"
+
+    # tracing-off twin: provably zero tracer state
+    off = make_memec(**kw)
+    run_workload(off, "load", 0, cfg, batch_size=1)
+    assert off.tracer is None and off.net.tracer is None, \
+        "tracing-off run allocated tracer state"
+    return {"engine": engine, "summary": snap["trace"],
+            "critical_path": snap["critical_path"], "artifact": path}
+
+
 if __name__ == "__main__":
     run()

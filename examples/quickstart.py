@@ -163,6 +163,42 @@ def main():
           f"{ol.stats['queue_wait_s']*1e3:.1f} modeled ms "
           f"(telemetry schema {snap['schema']} v{snap['version']})")
 
+    # --- 3d. span tracing + critical-path attribution (PR 8) ---
+    # a bad p99 is opaque until you can see WHICH leg was slow.  With
+    # trace=True (or MEMEC_TRACE=1) every recorded request grows a span
+    # tree — admission wait, per-endpoint link legs, engine-lane queue +
+    # service, seal/delta/decode phases tagged normal vs degraded — whose
+    # max-weight root-to-leaf path equals the recorded latency.  Off by
+    # default and zero-cost when off (no tracer state is allocated).
+    #   trace.critical_paths(cl)  decomposes the p50/p99/p999 witness per
+    #                             request kind into additive components
+    #                             (telemetry v2 "critical_path" section)
+    #   trace.export_chrome(cl, path="trace.json")  writes Chrome
+    #                             trace-event JSON — open in Perfetto
+    #                             (ui.perfetto.dev), one pid per shard,
+    #                             one tid per server link / engine lane
+    #   TraceCapture.from_cluster(cl)  records the run's arrivals + kinds;
+    #                             replay it deterministically with
+    #                             arrival=cap.arrival_spec() (or save()
+    #                             and arrival="trace:@capture.json") to
+    #                             reproduce a tail incident exactly
+    from repro.core import TraceCapture, trace
+    tr = MemECCluster(num_servers=16, scheme="rs", n=10, k=8, c=16,
+                      chunk_size=512, max_unsealed=2,
+                      arrival="poisson:2500:seed=1:inflight=4", trace=True)
+    for i in range(400):
+        tr.set(b"sp%06d" % i, rng.bytes(24))
+    for i in range(800):
+        tr.get(b"sp%06d" % (i % 400))
+    cp = trace.critical_paths(tr)["GET"]["p99"]
+    top, share = max(cp["components"].items(), key=lambda kv: kv[1]), \
+        cp["latency_s"]
+    print(f"GET p99 critical path: {top[0]} = {top[1]/share:.0%} of "
+          f"{share*1e3:.3f} ms ({len(cp['components'])} components)")
+    cap = TraceCapture.from_cluster(tr)
+    print(f"captured {len(cap.arrivals)} arrivals; replay with "
+          f"arrival=cap.arrival_spec() for a deterministic re-run")
+
     # --- 4. the compiled GF(2^8) data plane ---
     # kernels/dispatch picks the path per backend: compiled Pallas grids
     # on TPU/GPU, an XLA-jitted bit-plane formulation on CPU (faster

@@ -7,7 +7,9 @@
 #   scripts/verify.sh --slow     # full suite incl. `slow` + shard-equivalence smoke
 #   scripts/verify.sh --ci       # CI mode: also emit BENCH_ci.json (kernel
 #                                # smoke numbers + open-loop tail-latency rows
-#                                # for the perf trajectory) and fail loudly if
+#                                # + critical-path trace rows for the perf
+#                                # trajectory), write the TRACE_ci.json
+#                                # Chrome-trace artifact, and fail loudly if
 #                                # the bench smoke hangs
 #   SKIP_BENCH=1 scripts/verify.sh
 set -euo pipefail
@@ -178,6 +180,30 @@ with open("BENCH_ci.json", "w") as f:
     json.dump(out, f, indent=2)
 print(f"BENCH_ci.json: {len(rows)} tail rows merged "
       f"(engine={rows[0]['engine']})")
+EOF
+
+    # trace smoke (PR 8): traced open-loop window -> TRACE_ci.json Chrome
+    # trace artifact (Perfetto-loadable) + per-kind critical-path rows
+    # merged into BENCH_ci.json under "trace".  trace_smoke itself guards
+    # that the artifact is structurally valid trace-event JSON, that
+    # capture->replay reproduces p50/p99 exactly, and that tracing-off
+    # runs allocate zero tracer state.
+    python - <<'EOF'
+import json
+import os
+
+from benchmarks.throughput import trace_smoke
+
+row = trace_smoke(path="TRACE_ci.json")
+out = {}
+if os.path.exists("BENCH_ci.json"):
+    with open("BENCH_ci.json") as f:
+        out = json.load(f)
+out["trace"] = row
+with open("BENCH_ci.json", "w") as f:
+    json.dump(out, f, indent=2)
+print(f"BENCH_ci.json: trace rows merged ({len(row['critical_path'])} kinds; "
+      f"artifact {row['artifact']})")
 EOF
 
     # marker hygiene: `-m "not slow"` must still collect tests in every

@@ -28,6 +28,11 @@ Layers:
   paths, redirect-style forwarding keeps every key readable
   mid-migration), and skew-aware rebalancing via
   `ShardedCluster.add_shard/remove_shard/rebalance`;
+* trace / telemetry — the observability layer: opt-in per-request span
+  tracing (`trace=` / `$MEMEC_TRACE`) with critical-path attribution,
+  Chrome trace-event export (Perfetto-loadable), deterministic trace
+  capture/replay (`TraceCapture` → `arrival="trace:..."`), and the
+  versioned telemetry snapshot every consumer reads;
 * baselines — all-replication + hybrid-encoding comparison stores (§3.1);
 * analysis — the redundancy formulas of §3.3 (Figure 2).
 """
@@ -51,7 +56,11 @@ from .shard import (ShardedCluster, ShardedNet, make_cluster, resolve_shards,
                     shard_for_key)
 from .store import MemECCluster, PartialFailure
 from .stripe import StripeList, StripeMapper, generate_stripe_lists
+from .trace import (Span, TraceCapture, Tracer, critical_paths,
+                    describe_critical_path, export_chrome, resolve_trace,
+                    validate_chrome)
 from . import telemetry
+from . import trace
 
 __all__ = [
     "AnalysisParams", "redundancy_all_encoding", "redundancy_all_replication",
@@ -66,5 +75,7 @@ __all__ = [
     "ShardedCluster", "ShardedNet", "make_cluster", "resolve_shards",
     "shard_for_key", "StripeList", "StripeMapper", "generate_stripe_lists",
     "Placement", "ModPlacement", "RingPlacement", "make_placement",
-    "Rebalancer", "MigrationPlan", "telemetry",
+    "Rebalancer", "MigrationPlan", "telemetry", "trace", "Span", "Tracer",
+    "TraceCapture", "critical_paths", "describe_critical_path",
+    "export_chrome", "resolve_trace", "validate_chrome",
 ]

@@ -229,7 +229,15 @@ class ArrivalProcess:
                 else:
                     raise ValueError(f"unknown arrival option: {a!r}")
             elif kind == "trace":
-                kw["trace"] = [float(t) for t in a.split(",")]
+                if a.startswith("@"):
+                    # trace:@capture.json — a TraceCapture file
+                    import json
+                    with open(a[1:]) as f:
+                        doc = json.load(f)
+                    kw["trace"] = [float(t) for t in doc["arrivals"]]
+                    kw.setdefault("inflight", int(doc.get("inflight", 1)))
+                else:
+                    kw["trace"] = [float(t) for t in a.split(",")]
             else:
                 kw["rate"] = float(a)
         return cls(kind, **kw)
@@ -335,8 +343,15 @@ class EventRuntime:
 
     def submit(self, kind: str, service_s: float,
                busy: dict[str, float] | None = None,
-               engine_s: float = 0.0) -> float:
-        """Schedule one request; returns its latency incl. queue wait."""
+               engine_s: float = 0.0,
+               detail_out: dict | None = None) -> float:
+        """Schedule one request; returns its latency incl. queue wait.
+
+        ``detail_out`` (tracing only): filled in place with the event's
+        arrival/start/completion and per-resource ready times, plus the
+        occupying endpoint (the busiest link clock among the request's
+        endpoints) and the engine lane taken.
+        """
         arrival = self.arrival.next_arrival()
         slot = min(range(len(self.slots)), key=self.slots.__getitem__)
         admit_ready = self.slots[slot]
@@ -349,6 +364,15 @@ class EventRuntime:
                        key=self.engine_lanes.__getitem__)
             engine_ready = self.engine_lanes[lane]
         start = max(arrival, admit_ready, link_ready, engine_ready)
+        if detail_out is not None:
+            endpoint = (max(busy, key=lambda ep: self.link_free[ep])
+                        if busy else "")
+            detail_out.update(arrival=arrival, start=start,
+                              completion=start + service_s,
+                              admit_ready=admit_ready,
+                              link_ready=link_ready,
+                              engine_ready=engine_ready,
+                              endpoint=endpoint, lane=lane)
         completion = start + service_s
         self.slots[slot] = completion
         for ep, occ in busy.items():
@@ -383,8 +407,12 @@ class EventRuntime:
 class NetSim:
     """Accumulates modeled time and byte counters."""
 
-    def __init__(self, cost: CostModel | None = None, arrival=None):
+    def __init__(self, cost: CostModel | None = None, arrival=None,
+                 trace=None):
+        from .trace import resolve_trace
         self.cost = cost or CostModel()
+        # per-request span tracer (None when off — the zero-cost default)
+        self.tracer = resolve_trace(trace)
         self.bytes_by_kind: dict[str, int] = defaultdict(int)
         self.msgs_by_kind: dict[str, int] = defaultdict(int)
         self.bytes_by_endpoint: dict[str, int] = defaultdict(int)
@@ -430,9 +458,14 @@ class NetSim:
         return self.cost.leg(leg.nbytes, leg.to_failed)
 
     def phase(self, legs: list[Leg]) -> float:
-        worst = 0.0
-        for leg in legs:
-            worst = max(worst, self._account_leg(leg))
+        if self.tracer is None:
+            worst = 0.0
+            for leg in legs:
+                worst = max(worst, self._account_leg(leg))
+            return worst
+        pairs = [(leg, self._account_leg(leg)) for leg in legs]
+        worst = max((c for _, c in pairs), default=0.0)
+        self.tracer.phase(worst, pairs)
         return worst
 
     def serialized_phase(self, legs: list[Leg]) -> float:
@@ -442,9 +475,18 @@ class NetSim:
         RTT, dominates (e.g. batched recovery); `phase` would report the
         max single leg regardless of how much data moves."""
         per_dst: dict[str, float] = defaultdict(float)
+        if self.tracer is None:
+            for leg in legs:
+                per_dst[leg.dst] += self._account_leg(leg)
+            return max(per_dst.values()) if per_dst else 0.0
+        pairs = []
         for leg in legs:
-            per_dst[leg.dst] += self._account_leg(leg)
-        return max(per_dst.values()) if per_dst else 0.0
+            cost = self._account_leg(leg)
+            per_dst[leg.dst] += cost
+            pairs.append((leg, cost))
+        worst = max(per_dst.values()) if per_dst else 0.0
+        self.tracer.drain(worst, dict(per_dst), pairs)
+        return worst
 
     # -- concurrent lanes (cross-proxy pipelining) ----------------------
     def busy_snapshot(self) -> dict[str, float]:
@@ -495,13 +537,20 @@ class NetSim:
         engine demand the coding seconds noted via ``note_coding`` — and
         the recorded latency includes the FCFS queue wait."""
         if self.events is None:
+            if self.tracer is not None:
+                self.tracer.finish(req_kind, latency_s)
             self.recorder.record(req_kind, latency_s)
             return latency_s
         busy = self.busy_delta(self._event_busy_mark, self.time_by_endpoint)
         self._event_busy_mark = self.busy_snapshot()
         engine_s, self._pending_coding_s = self._pending_coding_s, 0.0
         self.service.record(req_kind, latency_s)
-        lat = self.events.submit(req_kind, latency_s, busy, engine_s)
+        detail = {} if self.tracer is not None else None
+        lat = self.events.submit(req_kind, latency_s, busy, engine_s,
+                                 detail_out=detail)
+        if self.tracer is not None:
+            detail["service"] = latency_s
+            self.tracer.finish(req_kind, lat, detail=detail)
         self.recorder.record(req_kind, lat)
         return lat
 
@@ -560,6 +609,8 @@ class NetSim:
         self.service.clear()
         self._event_busy_mark = {}
         self._pending_coding_s = 0.0
+        if self.tracer is not None:
+            self.tracer.reset()
         if self.events is not None:
             self.arrival.reset()
             self.events = EventRuntime(self.cost, self.arrival)

@@ -49,6 +49,7 @@ from .index import fnv1a
 from .netsim import LatencyRecorder, NetSim, resolve_arrival
 from .ring import make_placement
 from .store import MemECCluster
+from .trace import Span, _fill_seq, resolve_trace
 
 # dedicated hash seed: shard routing must stay independent of the
 # per-shard two-stage stripe hashing (stripe.py)
@@ -83,12 +84,13 @@ def resolve_shards(shards=None) -> int:
 class ShardedNet:
     """NetSim-shaped aggregate view over per-shard netsims.
 
-    Single-key request latencies and all byte/message counters come from
-    the shards; the facade's own records (pipelined MGET/MSET/MUPDATE
-    latencies) live in ``local`` and replace the shards' per-shard batch
-    entries in merged views.  Endpoints are namespaced ``sh{i}:s{j}`` for
-    S>1 (each shard is separate hardware) and left bare for S=1 so the
-    view is a drop-in for the unsharded net.
+    Byte/message counters come from the shards; request latencies come
+    from the facade's own records in ``local`` — every routed request,
+    single-key and batched, is recorded there (per-shard records are
+    that request's shard slice, not an independent client request).
+    Endpoints are namespaced ``sh{i}:s{j}`` for S>1 (each shard is
+    separate hardware) and left bare for S=1 so the view is a drop-in
+    for the unsharded net.
     """
 
     def __init__(self, cluster: "ShardedCluster"):
@@ -98,7 +100,8 @@ class ShardedNet:
         # clocks (shard nets stay closed-loop — their phase algebra is
         # the service time, the facade adds the queueing)
         self.local = NetSim(cluster.shards[0].net.cost,
-                            arrival=cluster.arrival)
+                            arrival=cluster.arrival,
+                            trace=cluster._facade_tracer or False)
         self.cost = self.local.cost
 
     @property
@@ -122,27 +125,17 @@ class ShardedNet:
     # -- merged views ----------------------------------------------------
     @property
     def latencies(self) -> dict:
-        out = defaultdict(list)
-        for net in self._shard_nets():
-            for kind, xs in net.latencies.items():
-                if kind in BATCH_KINDS:
-                    continue  # subsumed by the facade's pipelined record
-                out[kind].extend(xs)
-        for kind, xs in self.local.latencies.items():
-            out[kind].extend(xs)
-        return dict(out)
+        """Client-request latencies.  Every facade-routed request —
+        single-key (since PR 8) and batched — records here; shard-level
+        records are either subsumed by a facade record (the per-shard
+        slice of a routed request) or shard-internal control-plane
+        traffic (degraded replays inside fail/restore), still visible on
+        ``shards[i].net.latencies``."""
+        return {k: xs for k, xs in self.local.latencies.items() if xs}
 
     @property
     def ops_by_kind(self) -> dict:
-        out = defaultdict(int)
-        for net in self._shard_nets():
-            for kind, n in net.ops_by_kind.items():
-                if kind in BATCH_KINDS:
-                    continue
-                out[kind] += n
-        for kind, n in self.local.ops_by_kind.items():
-            out[kind] += n
-        return dict(out)
+        return {k: n for k, n in self.local.ops_by_kind.items() if n}
 
     @property
     def bytes_by_kind(self) -> dict:
@@ -256,7 +249,7 @@ class ShardedCluster:
     """
 
     def __init__(self, shards=None, engine=None, pipeline: bool = True,
-                 placement=None, arrival=None, **cluster_kw):
+                 placement=None, arrival=None, trace=None, **cluster_kw):
         from .engine import engine_specs
         self.num_shards = resolve_shards(shards)
         self._engine_spec = engine
@@ -265,7 +258,12 @@ class ShardedCluster:
         # stays the pure per-shard service time — the facade adds the
         # queueing against per-shard resource clocks.
         self.arrival = resolve_arrival(arrival)
-        self._cluster_kw = dict(cluster_kw, arrival="closed")
+        # span tracing mirrors that split: the facade tracer records the
+        # client-visible requests; each shard gets its own tracer whose
+        # request roots are grafted into the facade spans per shard slice
+        self._facade_tracer = resolve_trace(trace)
+        self._cluster_kw = dict(cluster_kw, arrival="closed",
+                                trace=self._facade_tracer is not None)
         specs = engine_specs(engine, self.num_shards)
         self.shards = [MemECCluster(engine=specs[i], shard_id=i,
                                     **self._cluster_kw)
@@ -378,20 +376,63 @@ class ShardedCluster:
                 for i, sh in enumerate(self.shards)
                 for ep in sh.server_endpoint_names()]
 
+    @property
+    def tracer(self):
+        """The facade span tracer (None when tracing is off)."""
+        return self.net.local.tracer
+
+    def _shard_window(self, sh):
+        """Start-of-request snapshot of one shard's recorded time,
+        tracer position, and degraded counter."""
+        str_ = sh.tracer
+        return (sh.net.total_recorded_s,
+                len(str_.requests) if str_ is not None else 0,
+                sh._stats["degraded_requests"])
+
+    def _shard_slice(self, sh, window):
+        """Close a window: (modeled seconds, grafted shard request spans
+        — moved out of the shard tracer, degraded?)."""
+        t0, n0, d0 = window
+        spans = None
+        if sh.tracer is not None:
+            spans = sh.tracer.requests[n0:]
+            del sh.tracer.requests[n0:]
+        return (sh.net.total_recorded_s - t0, spans,
+                sh._stats["degraded_requests"] > d0)
+
     # ------------------------------------------------------------------
-    # single-key API — decentralized, shard-local
+    # single-key API — shard-local execution, facade-level recording:
+    # each op is one facade request (one event in open-loop mode, one
+    # span tree when tracing), closing the ROADMAP gap where sharded
+    # single-key traffic bypassed the facade EventRuntime.
     # ------------------------------------------------------------------
+    def _single(self, kind: str, key: bytes, op):
+        si = self.shard_of(key)
+        self.shard_ops[si] += 1
+        sh = self.shards[si]
+        win = self._shard_window(sh)
+        out = op(sh)
+        dt, spans, degraded = self._shard_slice(sh, win)
+        if dt > 0.0 or spans:
+            if degraded:
+                kind += "_DEG"
+            self._record_facade(kind, [(si, dt, spans)])
+        return out
+
     def set(self, key: bytes, value: bytes, proxy_id: int = 0):
-        return self._shard_for(key).set(key, value, proxy_id)
+        return self._single("SET", key,
+                            lambda sh: sh.set(key, value, proxy_id))
 
     def get(self, key: bytes, proxy_id: int = 0):
-        return self._shard_for(key).get(key, proxy_id)
+        return self._single("GET", key, lambda sh: sh.get(key, proxy_id))
 
     def update(self, key: bytes, value: bytes, proxy_id: int = 0) -> bool:
-        return self._shard_for(key).update(key, value, proxy_id)
+        return self._single("UPDATE", key,
+                            lambda sh: sh.update(key, value, proxy_id))
 
     def delete(self, key: bytes, proxy_id: int = 0) -> bool:
-        return self._shard_for(key).delete(key, proxy_id)
+        return self._single("DELETE", key,
+                            lambda sh: sh.delete(key, proxy_id))
 
     # ------------------------------------------------------------------
     # multi-key API — cross-shard scatter/gather planner
@@ -430,33 +471,61 @@ class ShardedCluster:
                 return [(si, idxs, f.result()) for si, idxs, f in futures]
         return [(si, idxs, fn(si, idxs)) for si, idxs in items]
 
-    def _record_batch(self, kind: str, dts: list[tuple[int, float]]):
-        """Merged-request latency under pipelining: the per-shard batches
-        overlap fully (disjoint servers/proxies/engines), so the request
-        completes when the slowest shard does.  ``dts``: (shard id,
-        modeled shard-batch seconds) pairs.  In open-loop event mode the
-        merged batch is one event against the facade runtime — each
+    def _record_facade(self, kind: str, entries) -> float:
+        """Record one facade request from its per-shard slices
+        (``entries``: (shard id, modeled seconds, grafted spans)).
+
+        The merged latency is the slowest shard's slice (full pipeline
+        overlap across disjoint shard hardware).  In open-loop event mode
+        the request is one event against the facade runtime — each
         involved shard's "sh{i}" resource clock is held for that shard's
-        share, so back-to-back batches hitting the same hot shard queue
-        there while disjoint shards overlap."""
-        if not dts:
-            return
-        service = max(dt for _, dt in dts)
+        share, so back-to-back requests hitting the same hot shard queue
+        there while disjoint shards overlap.  When tracing, the grafted
+        shard span trees become per-shard groups under the facade root
+        (one Chrome-trace pid per shard)."""
+        service = max(dt for _, dt, _ in entries)
         net = self.net.local
+        tr = net.tracer
+        if tr is not None:
+            tr.push()
+            groups = []
+            for si, dt, spans in entries:
+                g = Span(f"sh{si}", "shard", dt, "seq",
+                         children=list(spans or []), meta={"shard": si})
+                _fill_seq(g)
+                groups.append(g)
+            if len(groups) == 1:
+                tr.add(groups[0])
+            else:
+                tr.add(Span("scatter", "merge", service, "par",
+                            children=groups))
         if net.events is not None:
             busy = {}
-            for si, dt in dts:
+            for si, dt, _ in entries:
                 busy[f"sh{si}"] = busy.get(f"sh{si}", 0.0) + dt
             net.service.record(kind, service)
-            lat = net.events.submit(kind, service, busy)
+            detail = {} if tr is not None else None
+            lat = net.events.submit(kind, service, busy, detail_out=detail)
+            if tr is not None:
+                detail["service"] = service
+                tr.finish(kind, lat, detail=detail)
             net.recorder.record(kind, lat)
         else:
+            # closed loop: NetSim.record finishes the open span frame
             net.record(kind, service)
+        return service
+
+    def _record_batch(self, kind: str, dts):
+        """Facade record for one scatter/gathered batch; ``dts``:
+        (shard id, modeled seconds, grafted spans) triples."""
+        if not dts:
+            return
+        service = self._record_facade(kind, dts)
         self._stats["cross_shard_batches"] += 1
         if len(dts) > 1:
             self._stats["pipelined_batches"] += 1
             self._stats["pipeline_overlap_saved_s"] += \
-                sum(dt for _, dt in dts) - service
+                sum(dt for _, dt, _ in dts) - service
 
     def multi_get(self, keys, proxy_id: int | None = 0) -> list:
         keys = list(keys)
@@ -465,15 +534,16 @@ class ShardedCluster:
 
         def run(si, idxs):
             sh = self.shards[si]
-            t0 = sh.net.total_recorded_s
+            win = self._shard_window(sh)
             vals = sh.multi_get([keys[i] for i in idxs], proxy_id)
-            return vals, sh.net.total_recorded_s - t0
+            dt, spans, _ = self._shard_slice(sh, win)
+            return vals, dt, spans
 
         dts = []
-        for si, idxs, (vals, dt) in self._scatter(run, groups):
+        for si, idxs, (vals, dt, spans) in self._scatter(run, groups):
             for i, v in zip(idxs, vals):
                 out[i] = v
-            dts.append((si, dt))
+            dts.append((si, dt, spans))
         self._record_batch("MGET", dts)
         return out
 
@@ -484,15 +554,16 @@ class ShardedCluster:
 
         def run(si, idxs):
             sh = self.shards[si]
-            t0 = sh.net.total_recorded_s
+            win = self._shard_window(sh)
             oks = sh.multi_set([items[i] for i in idxs], proxy_id)
-            return oks, sh.net.total_recorded_s - t0
+            dt, spans, _ = self._shard_slice(sh, win)
+            return oks, dt, spans
 
         dts = []
-        for si, idxs, (oks, dt) in self._scatter(run, groups):
+        for si, idxs, (oks, dt, spans) in self._scatter(run, groups):
             for i, o in zip(idxs, oks):
                 ok[i] = o
-            dts.append((si, dt))
+            dts.append((si, dt, spans))
         self._record_batch("MSET", dts)
         return ok
 
@@ -503,15 +574,16 @@ class ShardedCluster:
 
         def run(si, idxs):
             sh = self.shards[si]
-            t0 = sh.net.total_recorded_s
+            win = self._shard_window(sh)
             oks = sh.multi_update([items[i] for i in idxs], proxy_id)
-            return oks, sh.net.total_recorded_s - t0
+            dt, spans, _ = self._shard_slice(sh, win)
+            return oks, dt, spans
 
         dts = []
-        for si, idxs, (oks, dt) in self._scatter(run, groups):
+        for si, idxs, (oks, dt, spans) in self._scatter(run, groups):
             for i, o in zip(idxs, oks):
                 ok[i] = o
-            dts.append((si, dt))
+            dts.append((si, dt, spans))
         self._record_batch("MUPDATE", dts)
         return ok
 

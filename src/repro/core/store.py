@@ -143,7 +143,7 @@ class MemECCluster:
                  engine: str | CodingEngine | None = None,
                  shard_id: int | None = None,
                  async_engine: bool | None = None,
-                 arrival=None):
+                 arrival=None, trace=None):
         self.shard_id = shard_id   # None when not part of a ShardedCluster
         # intra-shard async pipeline (None defers to $MEMEC_ASYNC): issue
         # coding through engine futures while netsim legs are in flight
@@ -168,7 +168,9 @@ class MemECCluster:
         # arrival: open-loop event mode ("poisson:RATE" / "uniform:RATE" /
         # "trace:..." / ArrivalProcess; None defers to $MEMEC_ARRIVAL,
         # default closed loop — see core/netsim.py EventRuntime)
-        self.net = NetSim(cost, arrival=arrival)
+        # trace: per-request span tracing ("1" / Tracer instance; None
+        # defers to $MEMEC_TRACE, default off — see core/trace.py)
+        self.net = NetSim(cost, arrival=arrival, trace=trace)
         self.degraded_enabled = degraded_enabled
         self.verify_rebuild = verify_rebuild
         self.failed: set[int] = set()          # injected transient failures
@@ -200,6 +202,11 @@ class MemECCluster:
             out["queue_wait_s_by_resource"] = ev["queue_wait_s_by_resource"]
             out["event_makespan_s"] = ev["makespan_s"]
         return out
+
+    @property
+    def tracer(self):
+        """The span tracer (None when tracing is off)."""
+        return self.net.tracer
 
     def server_endpoint_names(self) -> list[str]:
         """Netsim endpoint labels of this cluster's storage servers."""
@@ -245,8 +252,33 @@ class MemECCluster:
         self._stats["intra_overlap_saved_s"] += sum(phase_times) - t
         return t
 
+    def _trace_frame(self):
+        """Open a span frame for the request about to execute (returns
+        the tracer, or None when tracing is off — the zero-cost path)."""
+        tr = self.net.tracer
+        if tr is not None:
+            tr.push()
+        return tr
+
+    def _overlap_branches(self, *branches) -> float:
+        """``_overlap`` over named thunks (``(name, fn)``), grouping each
+        branch's spans when tracing (e.g. seal fan-out vs SET acks)."""
+        tr = self.net.tracer
+        if tr is None:
+            return self._overlap(*(fn() for _, fn in branches))
+        entries = []
+        for name, fn in branches:
+            tr.push()
+            dur = fn()
+            entries.append((name, dur, tr.pop()))
+        t = self._overlap(*(dur for _, dur, _ in entries))
+        tr.overlap(t, entries, self.async_engine)
+        return t
+
     def _merge_coding(self, coding_s: float, net_s: float,
-                      kind: str | None = None) -> float:
+                      kind: str | None = None,
+                      lane_durs: list[float] | None = None,
+                      queue_wait_s: float = 0.0) -> float:
         """Coding vs in-flight netsim legs: serial in sync mode,
         max(coding, network) in async mode.  ``kind="decode"`` phases
         additionally track their share of the async win in
@@ -255,12 +287,21 @@ class MemECCluster:
         self._stats["modeled_coding_s"] += coding_s
         # event-mode demand capture: the in-flight request's engine-busy
         # seconds (gates later submits on the engine lanes) + the shard
-        # engine's cumulative modeled-busy clock (idle-engine planning)
-        self.net.note_coding(coding_s)
+        # engine's cumulative modeled-busy clock (idle-engine planning).
+        # Demand excludes the intra-phase makespan wait (queue_wait_s):
+        # that wait is already inside the service latency via
+        # engine_queue_wait_s, so forwarding the full makespan would
+        # price the same depth contention twice (once per phase, again
+        # as event-mode lane occupancy in queue_wait_s_by_resource).
+        self.net.note_coding(coding_s - queue_wait_s)
         self.engine.note_modeled_busy(coding_s)
         t = self._overlap(coding_s, net_s)
         if self.async_engine and kind == "decode":
             self._stats["decode_overlap_saved_s"] += coding_s + net_s - t
+        tr = self.net.tracer
+        if tr is not None and (coding_s > 0.0 or net_s > 0.0):
+            tr.merge_coding(coding_s, net_s, t, kind, lane_durs,
+                            self.net.cost.engine_depth, self.async_engine)
         return t
 
     def _merge_coding_calls(self, durs: list[float], net_s: float,
@@ -272,9 +313,10 @@ class MemECCluster:
         wait surfaced in ``stats["engine_queue_wait_s"]``."""
         durs = [d for d in durs if d > 0]
         span = self.net.cost.engine_makespan(durs)
-        if durs:
-            self._stats["engine_queue_wait_s"] += span - max(durs)
-        return self._merge_coding(span, net_s, kind)
+        wait = span - max(durs) if durs else 0.0
+        self._stats["engine_queue_wait_s"] += wait
+        return self._merge_coding(span, net_s, kind, lane_durs=durs,
+                                  queue_wait_s=wait)
 
     def _coding_s(self, fut) -> float:
         """Modeled duration of a submitted engine call."""
@@ -324,7 +366,7 @@ class MemECCluster:
                     assert src is not None and np.array_equal(rebuilt, src), \
                         "parity rebuild mismatch"
         if folds or legs:
-            t += self._merge_coding_calls(durs, net_t)
+            t += self._merge_coding_calls(durs, net_t, kind="seal")
         return t
 
     def _seal_to_failed_parity(self, sl: StripeList, ds: int, ev, failed_p: int) -> float:
@@ -342,7 +384,8 @@ class MemECCluster:
                 data[i] = c
             legs.append(Leg("recon_fetch", self.chunk_size, f"s{src}", f"s{r}"))
         fut = self.engine.submit_encode(data[None])
-        t += self._merge_coding(self._coding_s(fut), self.net.phase(legs))
+        t += self._merge_coding(self._coding_s(fut), self.net.phase(legs),
+                                kind="seal")
         parity = fut.result()[0]
         ppos = sl.parity_servers.index(failed_p)
         cid = self._stripe_chunk_id(sl, ev.chunk_id.stripe_id, self.k + ppos)
@@ -467,14 +510,20 @@ class MemECCluster:
         results: list = [None] * len(keys)
         dts: list[float] = []
         busys: list[dict] = []
+        tr = self._trace_frame()
+        lane_tr: list[tuple] = []
         for pid, idxs in self._proxy_lanes(keys):
             b0 = self.net.busy_snapshot()
+            if tr is not None:
+                tr.push()
             res, t = impl(idxs, pid)
+            segs = tr.pop() if tr is not None else None
             for i, v in zip(idxs, res):
                 results[i] = v
             if t is not None:
                 dts.append(t)
                 busys.append(NetSim.busy_delta(b0, self.net.busy_snapshot()))
+                lane_tr.append((pid, t, segs))
         if dts:
             if self.async_engine and len(dts) > 1:
                 merged = NetSim.merge_lanes(dts, busys)
@@ -488,7 +537,12 @@ class MemECCluster:
                 merged = sum(dts)
             if len(dts) > 1:
                 self._stats["proxy_lane_batches"] += 1
+            if tr is not None:
+                tr.lanes(merged, lane_tr,
+                         par=self.async_engine and len(dts) > 1)
             self.net.record(kind, merged)
+        elif tr is not None:
+            tr.cancel()
         return results
 
     def multi_get(self, keys, proxy_id: int | None = 0) -> list:
@@ -498,9 +552,12 @@ class MemECCluster:
                 "MGET", keys,
                 lambda idxs, pid: self._multi_get_impl(
                     [keys[i] for i in idxs], pid))
+        tr = self._trace_frame()
         out, t = self._multi_get_impl(keys, proxy_id or 0)
         if t is not None:
             self.net.record("MGET", t)
+        elif tr is not None:
+            tr.cancel()
         return out
 
     def _multi_get_impl(self, keys, proxy_id: int):
@@ -539,9 +596,12 @@ class MemECCluster:
                 "MSET", [k for k, _ in items],
                 lambda idxs, pid: self._multi_set_impl(
                     [items[i] for i in idxs], pid))
+        tr = self._trace_frame()
         ok, t = self._multi_set_impl(items, proxy_id or 0)
         if t is not None:
             self.net.record("MSET", t)
+        elif tr is not None:
+            tr.cancel()
         return ok
 
     def _multi_set_impl(self, items, proxy_id: int):
@@ -590,8 +650,9 @@ class MemECCluster:
                 ok[i] = True
             # async: the seal fan-out (parity rebuild + fold) overlaps
             # the SET acknowledgements already in flight
-            t += self._overlap(self._handle_seals_batched(seal_items),
-                               self.net.phase(ack_legs))
+            t += self._overlap_branches(
+                ("seal", lambda: self._handle_seals_batched(seal_items)),
+                ("ack", lambda: self.net.phase(ack_legs)))
             for req in reqs:
                 proxy.ack(req.seq)
             for ds in dict.fromkeys(touched):
@@ -621,9 +682,12 @@ class MemECCluster:
                 "MUPDATE", [k for k, _ in items],
                 lambda idxs, pid: self._multi_update_impl(
                     [items[i] for i in idxs], pid))
+        tr = self._trace_frame()
         ok, t = self._multi_update_impl(items, proxy_id or 0)
         if t is not None:
             self.net.record("MUPDATE", t)
+        elif tr is not None:
+            tr.cancel()
         return ok
 
     def _multi_update_impl(self, items, proxy_id: int):
@@ -725,7 +789,8 @@ class MemECCluster:
                         self._sv(p).apply_data_delta_row(
                             sl, cid, delta[j], proxy.pid, req.seq)
             if legs or fut is not None:
-                t += self._merge_coding(self._coding_s(fut), net_t)
+                t += self._merge_coding(self._coding_s(fut), net_t,
+                                        kind="delta")
             t += self.net.phase([Leg("update_ack", 8, f"s{ds}",
                                      f"p{proxy.pid}", self._is_failed(ds))
                                  for _, _, _, _, ds, _ in batch])
@@ -757,6 +822,7 @@ class MemECCluster:
                 proxy.ack(req.seq)
                 return self._update_small(key, value, proxy_id)
             self._delete_small(key, proxy_id)
+        self._trace_frame()
         obj_bytes = object_size(len(key), len(value))
         legs = [Leg("set", obj_bytes, f"p{proxy.pid}", f"s{ds}", self._is_failed(ds))]
         for p in sl.parity_servers:
@@ -773,8 +839,9 @@ class MemECCluster:
                         self._is_failed(ds))]
         ack_legs += [Leg("set_ack", 8, f"s{p}", f"p{proxy.pid}", self._is_failed(p))
                      for p in sl.parity_servers]
-        t += self._overlap(self._handle_seals(sl, ds, seal_events),
-                           self.net.phase(ack_legs))
+        t += self._overlap_branches(
+            ("seal", lambda: self._handle_seals(sl, ds, seal_events)),
+            ("ack", lambda: self.net.phase(ack_legs)))
         proxy.buffer_mapping(ds, key, cid, iseq)
         t += self._maybe_checkpoint(ds)
         proxy.ack(req.seq)
@@ -796,6 +863,7 @@ class MemECCluster:
         sl, ds = self.mapper.data_server_for(key)
         if self._is_failed(ds) and self._degraded_active(ds):
             return self._degraded_get(proxy, sl, ds, key)
+        self._trace_frame()
         t = self.net.phase([Leg("get", len(key), f"p{proxy.pid}", f"s{ds}",
                                 self._is_failed(ds))])
         v = self._sv(ds).get_value(key)
@@ -825,6 +893,7 @@ class MemECCluster:
         involved = [ds] + list(sl.parity_servers)
         if any(self._degraded_active(s) and self._is_failed(s) for s in involved):
             return self._degraded_mutate(kind, proxy, sl, ds, key, value)
+        self._trace_frame()
         req = proxy.begin(kind.upper(), key, value, sl, ds)
         t = self.net.phase([Leg(kind, len(key) + (len(value) if value else 0),
                                 f"p{proxy.pid}", f"s{ds}", self._is_failed(ds))])
@@ -880,7 +949,8 @@ class MemECCluster:
                 psrv.apply_replica_delta(key, nv, kind == "delete",
                                          proxy.pid, req.seq)
             applied += 1
-        t += self._merge_coding(self._coding_s(fut), self.net.phase(legs))
+        t += self._merge_coding(self._coding_s(fut), self.net.phase(legs),
+                                kind="delta")
         t += self.net.phase([Leg(f"{kind}_ack", 8, f"s{ds}", f"p{proxy.pid}",
                                  self._is_failed(ds))])
         proxy.ack(req.seq)
@@ -928,6 +998,7 @@ class MemECCluster:
                     return self._degraded_mutate("update", proxy, sl, ds,
                                                  key, value)
                 self._degraded_mutate("delete", proxy, sl, ds, key, None)
+        self._trace_frame()
         self._stats["degraded_requests"] += 1
         t = self._coord_hop(proxy, len(key))
         obj_bytes = object_size(len(key), len(value))
@@ -1083,6 +1154,7 @@ class MemECCluster:
         return t, len(tasks)
 
     def _degraded_get(self, proxy: Proxy, sl: StripeList, ds: int, key: bytes):
+        self._trace_frame()
         self._stats["degraded_requests"] += 1
         t = self._coord_hop(proxy, len(key))
         r = self.coordinator.redirected_server(sl, ds)
@@ -1154,7 +1226,8 @@ class MemECCluster:
             full[seg_off: seg_off + len(seg)] = seg
             fut = self.engine.submit_delta(np.array([cid.position]),
                                            full[None])
-        t = self._merge_coding(self._coding_s(fut), self.net.phase(legs))
+        t = self._merge_coding(self._coding_s(fut), self.net.phase(legs),
+                               kind="delta")
         if fut is not None:
             rows = fut.result()[0]
             for j, rc in redirected:
@@ -1164,6 +1237,7 @@ class MemECCluster:
 
     def _degraded_mutate(self, kind: str, proxy: Proxy, sl: StripeList,
                          ds: int, key: bytes, value: bytes | None) -> bool:
+        self._trace_frame()
         self._stats["degraded_requests"] += 1
         t = self._coord_hop(proxy, len(key))
         if self._is_failed(ds):

@@ -26,6 +26,7 @@ GUARDED_MODULES = [
     "tests/test_shard.py",
     "tests/test_store.py",
     "tests/test_system.py",
+    "tests/test_trace.py",
     "tests/test_transitions_prop.py",
 ]
 

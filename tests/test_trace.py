@@ -1,0 +1,335 @@
+"""Per-request span tracing + critical-path attribution (PR 8).
+
+Properties pinned here:
+
+* span trees are well-formed — children nest inside parents, seq
+  children tile the parent, par duration is the max child — and the
+  critical-path components of every request sum to its recorded latency
+  within 1e-9, across closed-loop, poisson open-loop, normal and
+  degraded modes, S=1 and S=4;
+* tracing is provably zero-cost when off — no tracer state allocated,
+  contents byte-identical and ``stats`` bit-identical to a traced twin;
+* ``TraceCapture`` -> ``arrival="trace:..."`` replay reproduces the
+  per-kind latency summaries exactly (the ROADMAP's capture/replay
+  loop);
+* the Chrome trace-event exporter emits structurally valid JSON (one
+  pid per shard) and ``validate_chrome`` rejects malformed documents;
+* telemetry v2 carries the ``trace`` + ``critical_path`` sections and
+  rejects v1 snapshots loudly;
+* satellite fix: ``engine_queue_wait_s`` no longer double-counts lane
+  contention already forwarded to the event runtime via ``note_coding``
+  (the ``queue_wait_s_by_resource["engine"]`` side).
+"""
+import json
+
+import pytest
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
+
+from repro.core import (CostModel, MemECCluster, TraceCapture, Tracer,
+                        critical_paths, export_chrome, make_cluster,
+                        resolve_trace, telemetry, validate_chrome)
+from repro.core.trace import Span, components
+
+KW = dict(num_servers=16, scheme="rs", n=10, k=8, c=4,
+          chunk_size=512, max_unsealed=2)
+
+POISSON = "poisson:4000:seed=9:inflight=2"
+
+
+def cluster(shards=1, arrival=None, trace=None, **kw):
+    merged = dict(KW)
+    merged.update(kw)
+    return make_cluster(shards=shards, arrival=arrival, trace=trace,
+                        **merged)
+
+
+def drive(cl, n_obj=18, degraded=False, sharded=False):
+    """Deterministic mixed workload; optionally fail a server mid-way so
+    the read half runs degraded.  Returns the keys written."""
+    keys = [b"tr%06d" % i for i in range(n_obj)]
+    for i, k in enumerate(keys):
+        cl.set(k, bytes((i * 7 + j) % 256 for j in range(48)))
+    if degraded:
+        if sharded:
+            victim = cl.shards[0].mapper.data_server_for(keys[0])[1]
+            cl.fail_server(cl.global_sid(0, victim))
+        else:
+            cl.fail_server(cl.mapper.data_server_for(keys[0])[1])
+    for i in range(2 * n_obj):
+        assert cl.get(keys[(i * 5) % n_obj]) is not None
+    cl.update(keys[1], bytes(48))
+    cl.delete(keys[2])
+    if sharded:
+        cl.multi_get(keys)
+        cl.multi_set([(b"mm%04d" % i, bytes(32)) for i in range(8)])
+    return keys
+
+
+def all_roots(cl):
+    roots = list(cl.tracer.requests)
+    for sh in getattr(cl, "shards", []) or []:
+        if sh.tracer is not None:
+            roots.extend(sh.tracer.requests)
+    return roots
+
+
+# ---------------------------------------------------------------------------
+# span invariants: nesting + critical-path sum == recorded latency
+# ---------------------------------------------------------------------------
+
+class TestSpanInvariants:
+    @pytest.mark.parametrize("shards", [1, 4])
+    @pytest.mark.parametrize("arrival", [None, POISSON])
+    @pytest.mark.parametrize("degraded", [False, True])
+    def test_nesting_and_component_sums(self, shards, arrival, degraded):
+        cl = cluster(shards=shards, arrival=arrival, trace=True)
+        drive(cl, degraded=degraded, sharded=shards > 1)
+        roots = all_roots(cl)
+        assert roots, "traced run recorded no requests"
+        for root in roots:
+            root.check(eps=1e-9)  # nesting + seq-tiling + par-max
+            comps = components(root)
+            assert abs(sum(comps.values()) - root.dur) <= 1e-9, \
+                f"{root.name}: components do not sum to recorded latency"
+        if degraded:
+            assert any(r.meta.get("degraded") for r in roots), \
+                "degraded workload produced no degraded-tagged roots"
+            assert any(r.name.endswith("_DEG") for r in roots)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(min_value=0, max_value=2 ** 16),
+           st.integers(min_value=500, max_value=20000))
+    def test_open_loop_sums_property(self, seed, rate):
+        cl = cluster(arrival=f"poisson:{rate}:seed={seed}:inflight=2",
+                     trace=True)
+        drive(cl, n_obj=8)
+        for root in cl.tracer.requests:
+            root.check(eps=1e-9)
+            assert abs(sum(components(root).values()) - root.dur) <= 1e-9
+
+    def test_critical_path_witness_sums(self):
+        cl = cluster(arrival=POISSON, trace=True)
+        drive(cl)
+        cp = critical_paths(cl)
+        assert cp, "no critical-path rows"
+        for kind, row in cp.items():
+            for pct in ("p50", "p99", "p999"):
+                w = row[pct]
+                assert abs(sum(w["components"].values())
+                           - w["latency_s"]) <= 1e-9, (kind, pct)
+
+    def test_open_loop_spans_name_waits(self):
+        # saturate so queueing actually appears in the spans
+        cl = cluster(arrival="poisson:100000:seed=2:inflight=8", trace=True)
+        drive(cl)
+        names = {s.name for r in cl.tracer.requests for s in r.walk()}
+        assert any(n.startswith("wait:") for n in names), \
+            f"no wait spans under saturation: {sorted(names)[:10]}"
+
+
+# ---------------------------------------------------------------------------
+# zero-cost when off
+# ---------------------------------------------------------------------------
+
+class TestZeroCostOff:
+    def test_no_tracer_state_by_default(self, monkeypatch):
+        monkeypatch.delenv("MEMEC_TRACE", raising=False)
+        cl = cluster()
+        assert cl.tracer is None and cl.net.tracer is None
+
+    def test_env_zero_disables(self, monkeypatch):
+        monkeypatch.setenv("MEMEC_TRACE", "0")
+        assert resolve_trace() is None
+        cl = cluster()
+        assert cl.tracer is None
+
+    def test_env_enables(self, monkeypatch):
+        monkeypatch.setenv("MEMEC_TRACE", "1")
+        tr = resolve_trace()
+        assert isinstance(tr, Tracer)
+        cl = cluster()
+        assert cl.tracer is not None
+        monkeypatch.delenv("MEMEC_TRACE")
+
+    @pytest.mark.parametrize("shards", [1, 4])
+    @pytest.mark.parametrize("arrival", [None, POISSON])
+    def test_on_off_bit_identical(self, shards, arrival):
+        def run(trace):
+            cl = cluster(shards=shards, arrival=arrival, trace=trace)
+            keys = drive(cl, degraded=(shards == 1),
+                         sharded=shards > 1)
+            contents = [cl.get(k) for k in keys if cl.get(k) is not None]
+            return contents, cl.stats, dict(cl.net.latencies)
+
+        c_on, s_on, l_on = run(True)
+        c_off, s_off, l_off = run(False)
+        assert c_on == c_off, "tracing changed served contents"
+        assert json.dumps(s_on, sort_keys=True, default=str) == \
+            json.dumps(s_off, sort_keys=True, default=str), \
+            "tracing changed stats"
+        assert l_on == l_off, "tracing changed recorded latencies"
+
+    def test_sharded_off_allocates_nothing(self):
+        cl = cluster(shards=2)
+        assert cl.tracer is None
+        assert all(sh.tracer is None for sh in cl.shards)
+
+
+# ---------------------------------------------------------------------------
+# capture -> replay
+# ---------------------------------------------------------------------------
+
+class TestCaptureReplay:
+    def _run(self, arrival):
+        cl = cluster(arrival=arrival)
+        drive(cl, n_obj=12)
+        return cl
+
+    def test_replay_reproduces_summaries_exactly(self):
+        cl = self._run(POISSON)
+        cap = TraceCapture.from_cluster(cl)
+        rep = self._run(cap.arrival_spec())
+        assert cl.net.latency_summary() == rep.net.latency_summary()
+
+    def test_replay_via_file(self, tmp_path):
+        cl = self._run(POISSON)
+        path = tmp_path / "capture.json"
+        TraceCapture.from_cluster(cl).save(str(path))
+        rep = self._run(f"trace:@{path}")
+        assert cl.net.latency_summary() == rep.net.latency_summary()
+
+    def test_capture_round_trips_kinds(self):
+        cl = self._run(POISSON)
+        cap = TraceCapture.from_cluster(cl)
+        cap2 = TraceCapture.from_json(cap.to_json())
+        assert cap2.arrivals == cap.arrivals
+        assert cap2.kinds == cap.kinds
+        assert len(cap.kinds) == len(cap.arrivals) > 0
+
+    def test_capture_requires_open_loop(self):
+        cl = cluster()  # closed loop: no event log to capture
+        drive(cl, n_obj=4)
+        with pytest.raises(ValueError):
+            TraceCapture.from_cluster(cl)
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace-event export
+# ---------------------------------------------------------------------------
+
+class TestChromeExport:
+    def test_export_is_valid_and_loadable(self, tmp_path):
+        cl = cluster(shards=2, arrival=POISSON, trace=True)
+        drive(cl, sharded=True)
+        path = tmp_path / "trace.json"
+        doc = export_chrome(cl, path=str(path))
+        validate_chrome(doc)
+        on_disk = json.loads(path.read_text())
+        validate_chrome(on_disk)
+        pids = {e["pid"] for e in doc["traceEvents"]}
+        assert 0 in pids, "facade pid missing"
+        assert pids - {0}, "no per-shard pids"
+        metas = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+        assert any(e["name"] == "process_name" for e in metas)
+        assert any(e["name"] == "thread_name" for e in metas)
+
+    def test_validate_rejects_malformed(self):
+        validate_chrome({"traceEvents": []})
+        with pytest.raises(ValueError):
+            validate_chrome({})
+        with pytest.raises(ValueError):
+            validate_chrome({"traceEvents": [{"ph": "B", "name": "x"}]})
+        with pytest.raises(ValueError):
+            validate_chrome({"traceEvents": [
+                {"ph": "X", "name": "x", "pid": 0, "tid": 0,
+                 "ts": -1.0, "dur": 1.0}]})
+
+
+# ---------------------------------------------------------------------------
+# telemetry v2
+# ---------------------------------------------------------------------------
+
+class TestTelemetryV2:
+    def test_trace_sections_present(self):
+        cl = cluster(trace=True)
+        drive(cl, n_obj=6)
+        snap = telemetry.validate(telemetry.snapshot(cl))
+        assert snap["version"] == 2
+        assert snap["trace"]["enabled"]
+        assert snap["trace"]["requests"] > 0
+        assert snap["trace"]["spans"] > snap["trace"]["requests"]
+        assert set(snap["critical_path"]) >= {"GET", "SET"}
+
+    def test_off_sections_empty(self):
+        cl = cluster()
+        drive(cl, n_obj=4)
+        snap = telemetry.validate(telemetry.snapshot(cl))
+        assert snap["trace"] == {"enabled": False, "requests": 0, "spans": 0}
+        assert snap["critical_path"] == {}
+
+    def test_v1_rejected_loudly(self):
+        cl = cluster()
+        drive(cl, n_obj=4)
+        snap = telemetry.snapshot(cl)
+        with pytest.raises(ValueError, match="version"):
+            telemetry.validate(dict(snap, version=1))
+        with pytest.raises(ValueError, match="missing"):
+            bad = dict(snap)
+            del bad["critical_path"]
+            telemetry.validate(bad)
+
+
+# ---------------------------------------------------------------------------
+# satellite fix: engine wait no longer double-counted
+# ---------------------------------------------------------------------------
+
+class TestEngineWaitDedup:
+    def test_intra_phase_wait_split_from_lane_demand(self):
+        # depth=1: two calls of 2ms and 1ms serialize -> the 1ms makespan
+        # excess is intra-phase wait (engine_queue_wait_s), while only the
+        # pure max(durations) demand is forwarded to the event runtime's
+        # engine lanes (note_coding) — previously the full makespan was,
+        # double-counting the wait in queue_wait_s_by_resource["engine"].
+        cl = cluster(arrival="poisson:1000:seed=1",
+                     cost=CostModel(engine_depth=1))
+        cl._stats["engine_queue_wait_s"] = 0.0
+        cl.net._pending_coding_s = 0.0
+        cl._merge_coding_calls([2e-3, 1e-3], 0.0)
+        assert cl._stats["engine_queue_wait_s"] == 1e-3
+        assert cl.net._pending_coding_s == 2e-3
+
+    def test_infinite_depth_forwards_pure_demand(self):
+        cl = cluster(arrival="poisson:1000:seed=1")  # depth=inf: no wait
+        cl._stats["engine_queue_wait_s"] = 0.0
+        cl.net._pending_coding_s = 0.0
+        cl._merge_coding_calls([2e-3, 1e-3], 0.0)
+        assert cl._stats["engine_queue_wait_s"] == 0.0
+        assert cl.net._pending_coding_s == 2e-3
+
+
+# ---------------------------------------------------------------------------
+# Span primitive sanity (pure, no cluster)
+# ---------------------------------------------------------------------------
+
+class TestSpanPrimitive:
+    def test_seq_tiling_check(self):
+        root = Span("r", "request", 3.0, "seq", children=[
+            Span("a", "leaf", 1.0), Span("b", "leaf", 2.0)])
+        root.children[0].t0 = 0.0
+        root.children[1].t0 = 1.0
+        root.check()
+        assert components(root) == {"a": 1.0, "b": 2.0}
+
+    def test_par_max_and_slack(self):
+        root = Span("p", "phase", 2.0, "par", children=[
+            Span("a", "leaf", 2.0), Span("b", "leaf", 0.5)])
+        root.check()
+        comps = components(root)
+        assert comps == {"a": 2.0}
+        assert sum(comps.values()) == root.dur
+
+    def test_check_rejects_bad_nesting(self):
+        root = Span("r", "request", 1.0, "seq",
+                    children=[Span("a", "leaf", 2.0)])
+        with pytest.raises(AssertionError):
+            root.check()
