@@ -1,0 +1,120 @@
+"""Tail-regression CI gate (PR 9).
+
+Compares the ``"tail"`` and ``"straggler"`` rows of a BENCH_ci.json
+produced by ``scripts/verify.sh --ci`` against the committed per-engine
+thresholds in ``benchmarks/ci_gates.json`` and exits non-zero — with a
+loud per-row table — on any regression.  Missing sections or rows the
+gates expect are themselves failures: a smoke that silently stopped
+emitting a row must not read as "no regression".
+
+Gate semantics (all values in the gates file):
+
+* ``tail.<engine>.<rate_x>.p99_ms_max`` — absolute p99 ceiling per
+  offered-load multiple;
+* ``straggler.<engine>.<case>.p99_ms_max`` — absolute p99 ceiling
+  (used for the no-injection baseline);
+* ``straggler.<engine>.<case>.p99_vs_baseline_max`` — the straggler
+  win: with one slow server, redundant reads must hold p99 within this
+  factor of baseline;
+* ``straggler.<engine>.<case>.p99_vs_baseline_min`` — the injection
+  sanity floor: plain reads must visibly degrade, else the smoke is no
+  longer actually injecting a straggler.
+
+``<engine>`` falls back to ``"default"`` when there is no entry for the
+bench's engine column.  Usage::
+
+    python -m benchmarks.ci_gates BENCH_ci.json benchmarks/ci_gates.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def _engine_gates(gates: dict, section: str, engine: str) -> dict:
+    pool = gates.get(section, {})
+    got = pool.get(engine, pool.get("default"))
+    if got is None:
+        raise SystemExit(
+            f"ci_gates: no '{section}' thresholds for engine {engine!r} "
+            f"and no 'default' entry — refusing to pass ungated")
+    return got
+
+
+def _check_tail(bench: dict, gates: dict, failures: list, checked: list):
+    rows = bench.get("tail")
+    if not rows:
+        failures.append("tail: no rows in BENCH_ci.json "
+                        "(tail smoke stopped emitting?)")
+        return
+    by_rate = {str(r["rate_x"]): r for r in rows}
+    eng = rows[0].get("engine", "default")
+    for rate_x, th in _engine_gates(gates, "tail", eng).items():
+        row = by_rate.get(rate_x)
+        if row is None:
+            failures.append(f"tail[{rate_x}]: expected row missing "
+                            f"(have {sorted(by_rate)})")
+            continue
+        got, cap = row["p99_ms"], th["p99_ms_max"]
+        line = f"tail[rate_x={rate_x}] p99_ms={got:.3f} max={cap:.3f}"
+        (failures if got > cap else checked).append(line)
+
+
+def _check_straggler(bench: dict, gates: dict, failures: list, checked: list):
+    rows = bench.get("straggler")
+    if not rows:
+        failures.append("straggler: no rows in BENCH_ci.json "
+                        "(straggler smoke stopped emitting?)")
+        return
+    by_case = {r["case"]: r for r in rows}
+    eng = rows[0].get("engine", "default")
+    for case, th in _engine_gates(gates, "straggler", eng).items():
+        row = by_case.get(case)
+        if row is None:
+            failures.append(f"straggler[{case}]: expected row missing "
+                            f"(have {sorted(by_case)})")
+            continue
+        for key, op, word in (("p99_ms_max", float.__gt__, "max"),
+                              ("p99_vs_baseline_max", float.__gt__, "max"),
+                              ("p99_vs_baseline_min", float.__lt__, "min")):
+            if key not in th:
+                continue
+            field = "p99_ms" if key == "p99_ms_max" else "p99_vs_baseline"
+            got, bound = float(row[field]), float(th[key])
+            line = (f"straggler[{case}] {field}={got:.3f} "
+                    f"{word}={bound:.3f}")
+            (failures if op(got, bound) else checked).append(line)
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    if len(argv) != 2:
+        print("usage: python -m benchmarks.ci_gates "
+              "BENCH_ci.json benchmarks/ci_gates.json", file=sys.stderr)
+        return 2
+    with open(argv[0]) as f:
+        bench = json.load(f)
+    with open(argv[1]) as f:
+        gates = json.load(f)
+    if gates.get("schema") != "memec/ci-gates":
+        print(f"ci_gates: unrecognized gates schema in {argv[1]}",
+              file=sys.stderr)
+        return 2
+    failures: list[str] = []
+    checked: list[str] = []
+    _check_tail(bench, gates, failures, checked)
+    _check_straggler(bench, gates, failures, checked)
+    for line in checked:
+        print(f"ci_gates: OK    {line}")
+    for line in failures:
+        print(f"ci_gates: FAIL  {line}")
+    if failures:
+        print(f"ci_gates: {len(failures)} tail-regression gate(s) failed "
+              f"({len(checked)} passed) — see rows above", file=sys.stderr)
+        return 1
+    print(f"ci_gates: all {len(checked)} gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -280,6 +280,106 @@ def run_tail_sweep():
     emit("tail_sweep.done", 0.0,
          "p99 monotone in offered load; saturation inflates p99; "
          "p50 flat below saturation")
+    run_straggler_sweep()
+
+
+def _straggler_rows(engine, n_obj, n_ops, seed=23):
+    """Closed-loop GET tails on three layout-identical twins: baseline
+    (no injection, plain reads), one server inflated 10x with plain
+    reads (``injected-d0``), and the same injection with one redundant
+    read racing the fan-out (``injected-d1``).
+
+    The victim is the server owning the most sealed data chunks — the
+    worst case for a single straggler — inflated *after* the load phase
+    so all three layouts are twin-identical.  Asserts the contents stay
+    byte-identical across the twins and returns one row per case with
+    ``p99_vs_baseline`` precomputed for the CI gate.
+    """
+    from repro.data.ycsb import YCSBWorkload, run_workload
+
+    cfg = YCSBConfig(num_objects=n_obj, seed=seed)
+    rcfg = YCSBConfig(num_objects=n_obj, seed=seed + 1)
+    kw = dict(scheme="rs", engine=engine, shards=1, c=4,
+              chunk_size=512, max_unsealed=2)
+    cases = (("baseline", 0, 1.0),
+             ("injected-d0", 0, 10.0),
+             ("injected-d1", 1, 10.0))
+    rows, contents = [], {}
+    for case, delta, factor in cases:
+        cl = make_memec(redundant_reads=delta, **kw)
+        run_workload(cl, "load", 0, cfg, batch_size=1)
+        if factor != 1.0:
+            def sealed_data(srv):
+                return sum(1 for idx, cid in enumerate(srv.chunk_ids)
+                           if cid is not None and srv.sealed[idx]
+                           and cid.position < cl.k)
+            victim = max(range(len(cl.servers)),
+                         key=lambda s: sealed_data(cl.servers[s]))
+            assert sealed_data(cl.servers[victim]) > 0, \
+                "straggler smoke workload sealed no chunks"
+            cl.inflate_server(victim, factor)
+        cl.net.reset()   # measure the read window, not the load phase
+        run_workload(cl, "C", n_ops, rcfg, batch_size=1)
+        tm = tail_metrics(cl, kinds=("GET",))["GET"]
+        rows.append(dict({"engine": engine, "case": case, "delta": delta,
+                          "inflate_x": factor, "kind": "GET",
+                          "redundant_decodes":
+                              cl.stats["redundant_decodes"]}, **tm))
+        wl = YCSBWorkload(cfg)
+        contents[case] = {wl.key(i): cl.get(wl.key(i))
+                          for i in range(n_obj)}
+    assert contents["baseline"] == contents["injected-d0"] \
+        == contents["injected-d1"], \
+        "redundant reads changed returned bytes"
+    base_p99 = rows[0]["p99_ms"]
+    for r in rows:
+        r["p99_vs_baseline"] = r["p99_ms"] / base_p99
+    return rows
+
+
+def straggler_smoke(engine=None) -> list[dict]:
+    """CI straggler smoke: one 10x server, Δ=1 vs Δ=0 twins.
+
+    Returns the ``"straggler"`` rows for BENCH_ci.json after asserting
+    the tentpole's acceptance shape: under a single 10x-inflated server,
+    plain reads degrade at least 5x at p99 while one redundant read
+    (k-of-(k+1) completion) holds p99 within 2x of the no-injection
+    baseline — and actually exercised the redundant decode path.
+    """
+    engine = engine or os.environ.get("MEMEC_ENGINE", "numpy")
+    rows = _straggler_rows(engine, n_obj=1600, n_ops=2000)
+    by = {r["case"]: r for r in rows}
+    assert by["injected-d0"]["p99_vs_baseline"] >= 5.0, \
+        "injection too weak: plain reads did not degrade 5x at p99"
+    assert by["injected-d1"]["p99_vs_baseline"] <= 2.0, \
+        "redundant read failed to hide the straggler at p99"
+    assert by["injected-d1"]["redundant_decodes"] > 0, \
+        "straggler smoke never took the redundant-decode path"
+    return rows
+
+
+def run_straggler_sweep():
+    """Straggler-injection sweep (PR 9) — Δ=0 vs Δ=1 under one slow
+    server, per engine; same shape assertions as the CI smoke."""
+    print("\n# Straggler sweep — one 10x server, redundant reads (modeled)")
+    print("engine,case,delta,inflate_x,p50_ms,p99_ms,p999_ms,"
+          "p99_vs_baseline,redundant_decodes")
+    engines = os.environ.get("MEMEC_BENCH_ENGINES", "numpy").split(",")
+    fast = bool(os.environ.get("MEMEC_BENCH_FAST"))
+    n_obj, n_ops = (1600, 2000) if fast else (2400, 3000)
+    for engine in engines:
+        rows = _straggler_rows(engine, n_obj, n_ops)
+        for r in rows:
+            print(f"{r['engine']},{r['case']},{r['delta']},{r['inflate_x']},"
+                  f"{r['p50_ms']:.3f},{r['p99_ms']:.3f},{r['p999_ms']:.3f},"
+                  f"{r['p99_vs_baseline']:.2f},{r['redundant_decodes']}")
+        by = {r["case"]: r for r in rows}
+        assert by["injected-d0"]["p99_vs_baseline"] >= 5.0
+        assert by["injected-d1"]["p99_vs_baseline"] <= 2.0
+        assert by["injected-d1"]["redundant_decodes"] > 0
+    emit("straggler_sweep.done", 0.0,
+         "one 10x server: d0 p99 degrades >=5x, d1 p99 within 2x of "
+         "baseline, contents byte-identical")
 
 
 def tail_smoke(engine=None) -> list[dict]:

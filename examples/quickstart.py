@@ -199,6 +199,32 @@ def main():
     print(f"captured {len(cap.arrivals)} arrivals; replay with "
           f"arrival=cap.arrival_spec() for a deterministic re-run")
 
+    # --- 3e. straggler-tolerant reads: k-of-(k+Δ) + slow servers (PR 9) ---
+    # one slow server ruins p99 for every read that touches it.  With
+    # redundant_reads=Δ (or MEMEC_REDUNDANT_READS=Δ) a GET fans out to
+    # the k-1+Δ least-loaded other stripe members alongside the data
+    # server and completes at the k-th arrival; if the data server is
+    # among the dropped Δ, the winners' chunks decode the value instead
+    # (byte-identical, guarded by tests).  Dropped legs still occupy
+    # links — later requests queue behind them — but show up as
+    # cancelled spans, never on the critical path.  Inject a straggler
+    # with inflate_server(sid, factor) (factor=1.0 restores):
+    st = {}
+    for delta in (0, 1):
+        s = MemECCluster(num_servers=16, scheme="rs", n=10, k=8, c=4,
+                         chunk_size=512, max_unsealed=2,
+                         redundant_reads=delta)
+        for i in range(1400):
+            s.set(b"st%06d" % i, rng.bytes(24))
+        s.inflate_server(3, 10.0)          # one server suddenly 10x slower
+        for i in range(1400):
+            s.get(b"st%06d" % i)
+        st[delta] = s.stats["latency"]["GET"]["p99_s"] * 1e3
+        if delta:
+            print(f"straggler hidden: GET p99 {st[0]:.3f} -> {st[1]:.3f} ms "
+                  f"({s.stats['redundant_decodes']} redundant decodes, "
+                  f"{s.stats['redundant_cancelled']} cancelled fetches)")
+
     # --- 4. the compiled GF(2^8) data plane ---
     # kernels/dispatch picks the path per backend: compiled Pallas grids
     # on TPU/GPU, an XLA-jitted bit-plane formulation on CPU (faster

@@ -206,6 +206,34 @@ print(f"BENCH_ci.json: trace rows merged ({len(row['critical_path'])} kinds; "
       f"artifact {row['artifact']})")
 EOF
 
+    # straggler smoke (PR 9): one server inflated 10x, Δ=1 vs Δ=0 twins.
+    # straggler_smoke itself asserts the acceptance shape (plain reads
+    # degrade >= 5x at p99, one redundant read holds p99 within 2x of
+    # the no-injection baseline, contents byte-identical) and its rows
+    # merge into BENCH_ci.json under "straggler" for the trajectory.
+    python - <<'EOF'
+import json
+import os
+
+from benchmarks.throughput import straggler_smoke
+
+rows = straggler_smoke()
+out = {}
+if os.path.exists("BENCH_ci.json"):
+    with open("BENCH_ci.json") as f:
+        out = json.load(f)
+out["straggler"] = rows
+with open("BENCH_ci.json", "w") as f:
+    json.dump(out, f, indent=2)
+print(f"BENCH_ci.json: {len(rows)} straggler rows merged "
+      f"(engine={rows[0]['engine']})")
+EOF
+
+    # tail-regression gate: compare the tail + straggler rows just
+    # merged against the committed per-engine thresholds; a p99
+    # regression fails the build here, loudly, not in review
+    python -m benchmarks.ci_gates BENCH_ci.json benchmarks/ci_gates.json
+
     # marker hygiene: `-m "not slow"` must still collect tests in every
     # async-pipeline-touched module — a marker typo that deselects a
     # whole suite would otherwise pass CI silently

@@ -231,11 +231,23 @@ class CodingEngine:
         # every call merged into a request); the sharded scatter planner
         # sorts shard groups by this clock to drain idle engines first
         self.modeled_busy_s = 0.0
+        # distinct (available-set, wanted) decode patterns submitted per
+        # call, cumulatively — straggler races turn "which Δ dropped"
+        # into per-request erasure sets, so this counter (vs inv_cache
+        # occupancy) shows the pattern diversity they induce
+        self.decode_patterns_submitted = 0
 
     def note_modeled_busy(self, coding_s: float):
         """Charge modeled busy seconds against this engine's clock."""
         if coding_s > 0.0:
             self.modeled_busy_s += coding_s
+
+    def _note_decode_patterns(self, available, wanted):
+        """Count the distinct (sorted available keys, wanted) patterns
+        of one submit_decode call into ``decode_patterns_submitted``."""
+        self.decode_patterns_submitted += len(
+            {(tuple(sorted(a.keys())), tuple(w))
+             for a, w in zip(available, wanted)})
 
     # -- core batched ops (implemented by backends) ---------------------
     def encode_batch(self, data: np.ndarray) -> np.ndarray:
@@ -290,6 +302,7 @@ class CodingEngine:
             "inv_cache": len(self._inv_cache),
             "fused_cache": len(self._fused_cache),
             "modeled_busy_s": self.modeled_busy_s,
+            "decode_patterns_submitted": self.decode_patterns_submitted,
         }
 
     # -- modeled work (GF(2^8) multiply-accumulate bytes per batch) -----
@@ -317,6 +330,7 @@ class CodingEngine:
     def submit_decode(self, available, wanted, chunk_size: int) -> EngineFuture:
         available = [dict(a) for a in available]
         wanted = [list(w) for w in wanted]
+        self._note_decode_patterns(available, wanted)
         return EngineFuture(
             lambda: self.decode_batch(available, wanted, chunk_size),
             self.decode_work_bytes(len(available), chunk_size), "decode")
@@ -644,6 +658,7 @@ class JaxEngine(CodingEngine):
         wb = self.decode_work_bytes(len(available), chunk_size)
         if not available:
             return EngineFuture.wrap([], wb, "decode")
+        self._note_decode_patterns(available, wanted)
         plan = self.plan_decode([a.keys() for a in available], wanted,
                                 chunk_size)
         devs = self._execute_decode_dev(plan, available)

@@ -344,8 +344,17 @@ class EventRuntime:
     def submit(self, kind: str, service_s: float,
                busy: dict[str, float] | None = None,
                engine_s: float = 0.0,
-               detail_out: dict | None = None) -> float:
+               detail_out: dict | None = None,
+               optional: dict[str, float] | None = None) -> float:
         """Schedule one request; returns its latency incl. queue wait.
+
+        ``optional`` maps endpoint -> occupancy seconds the request put
+        on the wire but did NOT wait for (redundant race legs that lost
+        the k-th-arrival race).  An endpoint whose demand is entirely
+        optional doesn't gate this request's start and contributes no
+        endpoint queue-wait attribution — but its link clock still
+        advances by the full occupancy, so *subsequent* requests queue
+        behind the dropped traffic (the bytes are real).
 
         ``detail_out`` (tracing only): filled in place with the event's
         arrival/start/completion and per-resource ready times, plus the
@@ -356,7 +365,12 @@ class EventRuntime:
         slot = min(range(len(self.slots)), key=self.slots.__getitem__)
         admit_ready = self.slots[slot]
         busy = busy or {}
-        link_ready = max((self.link_free[ep] for ep in busy), default=0.0)
+        optional = optional or {}
+        # endpoints the request actually waited on: any with demand
+        # beyond what its own dropped race legs put there
+        gating = [ep for ep, occ in busy.items()
+                  if occ - optional.get(ep, 0.0) > 1e-18]
+        link_ready = max((self.link_free[ep] for ep in gating), default=0.0)
         lane = -1
         engine_ready = 0.0
         if engine_s > 0.0 and self.engine_lanes:
@@ -365,8 +379,8 @@ class EventRuntime:
             engine_ready = self.engine_lanes[lane]
         start = max(arrival, admit_ready, link_ready, engine_ready)
         if detail_out is not None:
-            endpoint = (max(busy, key=lambda ep: self.link_free[ep])
-                        if busy else "")
+            endpoint = (max(gating, key=lambda ep: self.link_free[ep])
+                        if gating else "")
             detail_out.update(arrival=arrival, start=start,
                               completion=start + service_s,
                               admit_ready=admit_ready,
@@ -376,7 +390,12 @@ class EventRuntime:
         completion = start + service_s
         self.slots[slot] = completion
         for ep, occ in busy.items():
-            self.link_free[ep] = start + occ
+            # gating endpoints have link_free <= start (they set
+            # link_ready), so this is start + occ as before; a purely
+            # optional endpoint may still be draining earlier traffic,
+            # and its dropped bytes append behind that queue instead of
+            # rewinding the clock
+            self.link_free[ep] = max(self.link_free[ep], start) + occ
         if lane >= 0:
             self.engine_lanes[lane] = start + engine_s
         wait = start - arrival
@@ -436,10 +455,39 @@ class NetSim:
                        if self.arrival.open_loop else None)
         self._event_busy_mark: dict[str, float] = {}
         self._pending_coding_s = 0.0
+        # slow-server injection: endpoint -> latency/occupancy multiplier
+        # (the straggler axis — a server that is slow, not failed).
+        # Persists across reset(), like injected failures do.
+        self.inflation: dict[str, float] = {}
+        # occupancy put on the wire by race legs that lost the
+        # k-of-(k+Δ) race since the last record() — the request did not
+        # wait for it, so the event runtime must not gate on it
+        self._pending_optional: dict[str, float] = defaultdict(float)
 
     @property
     def total_recorded_s(self) -> float:
         return self.recorder.total_recorded_s
+
+    # -- slow-server injection (straggler axis) -------------------------
+    def inflate(self, endpoint: str, factor: float):
+        """Latency-inflate one endpoint by ``factor`` (e.g. 10.0 = a
+        server answering 10x slower).  Every leg touching the endpoint
+        has both its modeled cost and its link occupancy multiplied —
+        a straggler is slow on the wire, not just far away.  ``factor
+        == 1.0`` removes the injection; the axis survives ``reset()``
+        (like injected failures) so a measurement window keeps it."""
+        if not (factor > 0.0):
+            raise ValueError(f"inflate factor must be > 0, got {factor!r}")
+        if factor == 1.0:
+            self.inflation.pop(endpoint, None)
+        else:
+            self.inflation[endpoint] = float(factor)
+
+    def _inflation_of(self, leg: Leg) -> float:
+        if not self.inflation:
+            return 1.0
+        return max(self.inflation.get(leg.src, 1.0),
+                   self.inflation.get(leg.dst, 1.0))
 
     # -- request construction ------------------------------------------
     def _account_leg(self, leg: Leg) -> float:
@@ -448,14 +496,15 @@ class NetSim:
         wire = leg.nbytes + self.cost.header_bytes
         self.bytes_by_kind[leg.kind] += wire
         self.msgs_by_kind[leg.kind] += 1
-        occupancy = wire / self.cost.bw_Bps
+        factor = self._inflation_of(leg)
+        occupancy = wire / self.cost.bw_Bps * factor
         if leg.src:
             self.bytes_by_endpoint[leg.src] += wire
             self.time_by_endpoint[leg.src] += occupancy
         if leg.dst:
             self.bytes_by_endpoint[leg.dst] += wire
             self.time_by_endpoint[leg.dst] += occupancy
-        return self.cost.leg(leg.nbytes, leg.to_failed)
+        return self.cost.leg(leg.nbytes, leg.to_failed) * factor
 
     def phase(self, legs: list[Leg]) -> float:
         if self.tracer is None:
@@ -467,6 +516,48 @@ class NetSim:
         worst = max((c for _, c in pairs), default=0.0)
         self.tracer.phase(worst, pairs)
         return worst
+
+    def race_phase(self, groups: list[tuple[str, list[Leg]]],
+                   need: int) -> tuple[float, list[int], list[int]]:
+        """k-of-(k+Δ) fan-out: complete at the ``need``-th arrival.
+
+        Each group is one candidate responder's full round trip
+        (request leg + response leg); its arrival time is the sum of its
+        leg costs.  The phase completes when ``need`` groups have
+        arrived — the slowest Δ are *dropped*: their bytes, messages and
+        link occupancy are all accounted (redundant traffic is real and
+        future requests queue behind it), but they do not contribute to
+        this request's latency, and in event mode their occupancy is
+        flagged optional so the EventRuntime doesn't gate on it.
+
+        Returns ``(t, winner_idxs, dropped_idxs)`` with deterministic
+        (cost, index) tie-breaking.  Identical ``t`` with tracing on or
+        off.
+        """
+        need = min(need, len(groups))
+        entries = []   # (cost, idx, label, legs)
+        for idx, (label, legs) in enumerate(groups):
+            cost = sum(self._account_leg(leg) for leg in legs)
+            entries.append((cost, idx, label, legs))
+        ranked = sorted(entries, key=lambda e: (e[0], e[1]))
+        t = ranked[need - 1][0] if need > 0 else 0.0
+        winners = sorted(idx for _, idx, _, _ in ranked[:need])
+        dropped = sorted(idx for _, idx, _, _ in ranked[need:])
+        for cost, idx, label, legs in ranked[need:]:
+            for leg in legs:
+                wire = leg.nbytes + self.cost.header_bytes
+                occ = wire / self.cost.bw_Bps * self._inflation_of(leg)
+                if leg.src:
+                    self._pending_optional[leg.src] += occ
+                if leg.dst:
+                    self._pending_optional[leg.dst] += occ
+        if self.tracer is not None:
+            won = set(winners)
+            self.tracer.race(
+                t, [(label, cost, idx in won)
+                    for cost, idx, label, _ in sorted(entries,
+                                                      key=lambda e: e[1])])
+        return t, winners, dropped
 
     def serialized_phase(self, legs: list[Leg]) -> float:
         """Bulk-transfer phase: each destination drains its inbound legs
@@ -537,6 +628,7 @@ class NetSim:
         engine demand the coding seconds noted via ``note_coding`` — and
         the recorded latency includes the FCFS queue wait."""
         if self.events is None:
+            self._pending_optional.clear()
             if self.tracer is not None:
                 self.tracer.finish(req_kind, latency_s)
             self.recorder.record(req_kind, latency_s)
@@ -544,10 +636,13 @@ class NetSim:
         busy = self.busy_delta(self._event_busy_mark, self.time_by_endpoint)
         self._event_busy_mark = self.busy_snapshot()
         engine_s, self._pending_coding_s = self._pending_coding_s, 0.0
+        optional = (dict(self._pending_optional)
+                    if self._pending_optional else None)
+        self._pending_optional.clear()
         self.service.record(req_kind, latency_s)
         detail = {} if self.tracer is not None else None
         lat = self.events.submit(req_kind, latency_s, busy, engine_s,
-                                 detail_out=detail)
+                                 detail_out=detail, optional=optional)
         if self.tracer is not None:
             detail["service"] = latency_s
             self.tracer.finish(req_kind, lat, detail=detail)
@@ -609,6 +704,7 @@ class NetSim:
         self.service.clear()
         self._event_busy_mark = {}
         self._pending_coding_s = 0.0
+        self._pending_optional.clear()
         if self.tracer is not None:
             self.tracer.reset()
         if self.events is not None:

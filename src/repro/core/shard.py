@@ -278,6 +278,9 @@ class ShardedCluster:
         # the knob ($MEMEC_ASYNC / async_engine= in cluster_kw); exposed
         # here so drivers can pick proxy-spread batches (`proxy_id=None`)
         self.async_engine = s0.async_engine
+        # straggler-tolerant read knob (resolved per shard store from
+        # redundant_reads= in cluster_kw / $MEMEC_REDUNDANT_READS)
+        self.redundant_reads = s0.redundant_reads
         self.engines = [sh.engine for sh in self.shards]
         self.engine = self.engines[0]
         self.pipeline = bool(pipeline) and self.num_shards > 1
@@ -688,6 +691,17 @@ class ShardedCluster:
         timings = self.shards[shard].restore_server(local)
         timings["shard"] = shard
         return timings
+
+    def inflate_server(self, sid: int, factor: float,
+                       shard: int | None = None) -> dict:
+        """Slow-server injection (straggler axis): latency-inflate one
+        server's legs by ``factor`` inside its shard; ``factor=1.0``
+        restores.  Facade event gating stays whole-shard (``sh{i}``)
+        granularity — the inflation lands in the shard's phase algebra
+        and therefore in the facade-recorded latency."""
+        shard, local = self._resolve_server(sid, shard)
+        self.shards[shard].inflate_server(local, factor)
+        return {"shard": shard, "server": local, "factor": factor}
 
     # ------------------------------------------------------------------
     # introspection

@@ -56,6 +56,7 @@ no-contention merge); the extra wait a finite depth induces is
 from __future__ import annotations
 
 import dataclasses
+import os
 import struct
 
 import numpy as np
@@ -89,6 +90,19 @@ def large_total(head: bytes | None) -> int | None:
 
 class PartialFailure(Exception):
     """Raised by fault injection mid-request (testing §5.3 revert)."""
+
+
+def resolve_redundant_reads(redundant_reads=None,
+                            env: str = "MEMEC_REDUNDANT_READS") -> int:
+    """Ctor arg wins; else ``$MEMEC_REDUNDANT_READS``; else 0 (the plain
+    wait-for-every-chunk read path, bit-identical to history)."""
+    if redundant_reads is None:
+        redundant_reads = os.environ.get(env, "0") or "0"
+    redundant_reads = int(redundant_reads)
+    if redundant_reads < 0:
+        raise ValueError(
+            f"redundant_reads must be >= 0, got {redundant_reads}")
+    return redundant_reads
 
 
 @dataclasses.dataclass
@@ -143,7 +157,8 @@ class MemECCluster:
                  engine: str | CodingEngine | None = None,
                  shard_id: int | None = None,
                  async_engine: bool | None = None,
-                 arrival=None, trace=None):
+                 arrival=None, trace=None,
+                 redundant_reads: int | None = None):
         self.shard_id = shard_id   # None when not part of a ShardedCluster
         # intra-shard async pipeline (None defers to $MEMEC_ASYNC): issue
         # coding through engine futures while netsim legs are in flight
@@ -171,6 +186,12 @@ class MemECCluster:
         # trace: per-request span tracing ("1" / Tracer instance; None
         # defers to $MEMEC_TRACE, default off — see core/trace.py)
         self.net = NetSim(cost, arrival=arrival, trace=trace)
+        # straggler-tolerant reads (Hydra-style late binding): GETs fan
+        # out to k+Δ chunk candidates and complete at the k-th arrival,
+        # treating the slowest Δ as a per-request erasure pattern for
+        # DecodePlan.  Δ=0 (default) keeps the historical plain-k path
+        # bit-identical (redundant_reads= / $MEMEC_REDUNDANT_READS).
+        self.redundant_reads = resolve_redundant_reads(redundant_reads)
         self.degraded_enabled = degraded_enabled
         self.verify_rebuild = verify_rebuild
         self.failed: set[int] = set()          # injected transient failures
@@ -184,7 +205,10 @@ class MemECCluster:
                       "modeled_coding_s": 0.0, "intra_overlap_saved_s": 0.0,
                       "proxy_lane_batches": 0, "proxy_lane_saved_s": 0.0,
                       "engine_queue_wait_s": 0.0,
-                      "decode_overlap_saved_s": 0.0}
+                      "decode_overlap_saved_s": 0.0,
+                      "redundant_reads": 0, "redundant_decodes": 0,
+                      "redundant_cancelled": 0,
+                      "redundant_replica_fallbacks": 0}
 
     @property
     def stats(self) -> dict:
@@ -569,21 +593,27 @@ class MemECCluster:
             if self._is_failed(ds) and self._degraded_active(ds):
                 out[i] = self.get(key, proxy_id)       # degraded fallback
             else:
-                plan.append((i, key, ds))
+                plan.append((i, key, sl, ds))
         t = None
         if plan:
-            t = self.net.phase([Leg("get", len(key), f"p{proxy.pid}",
-                                    f"s{ds}", self._is_failed(ds))
-                                for _, key, ds in plan])
-            resp_legs = []
-            for i, key, ds in plan:
-                v = self._sv(ds).get_value(key)
-                resp_legs.append(Leg("get_resp", len(v) if v else 0,
-                                     f"s{ds}", f"p{proxy.pid}",
-                                     self._is_failed(ds)))
-                out[i] = v
-            t += self.net.phase(resp_legs)
-            for i, key, ds in plan:    # large objects: fetch fragments
+            if self.redundant_reads > 0 and self.code.m > 0:
+                vals, t = self._coded_read_batch(
+                    proxy, [(key, sl, ds) for _, key, sl, ds in plan])
+                for (i, _, _, _), v in zip(plan, vals):
+                    out[i] = v
+            else:
+                t = self.net.phase([Leg("get", len(key), f"p{proxy.pid}",
+                                        f"s{ds}", self._is_failed(ds))
+                                    for _, key, _, ds in plan])
+                resp_legs = []
+                for i, key, _, ds in plan:
+                    v = self._sv(ds).get_value(key)
+                    resp_legs.append(Leg("get_resp", len(v) if v else 0,
+                                         f"s{ds}", f"p{proxy.pid}",
+                                         self._is_failed(ds)))
+                    out[i] = v
+                t += self.net.phase(resp_legs)
+            for i, key, _, ds in plan:  # large objects: fetch fragments
                 total = large_total(out[i])
                 if total is not None:
                     out[i] = self._get_large(key, total, proxy_id)
@@ -858,11 +888,177 @@ class MemECCluster:
     # ------------------------------------------------------------------
     # GET
     # ------------------------------------------------------------------
+    def _endpoint_load(self, sid: int) -> float:
+        """Load-aware chunk selection score for one server: cumulative
+        link occupancy (``time_by_endpoint``) plus, in open-loop event
+        mode, the link's current free-at clock — so redundant fetches
+        avoid the busiest endpoints.  An inflated straggler's occupancy
+        grows ``factor``x faster, so selection learns to deprioritize it
+        without being told (the races hide it meanwhile).  Within one
+        shard every candidate shares the engine, so the
+        ``CodingEngine.modeled_busy_s`` half of load-awareness lives at
+        the cross-shard ``_scatter`` seam (idle-engine preference)."""
+        ep = f"s{sid}"
+        load = self.net.time_by_endpoint.get(ep, 0.0)
+        if self.net.events is not None:
+            load += self.net.events.link_free.get(ep, 0.0)
+        return load
+
+    def _coded_read_batch(self, proxy, entries):
+        """Straggler-tolerant k-of-(k+Δ) GET fan-out (Hydra-style late
+        binding; Δ = ``redundant_reads``).
+
+        Per ``(key, sl, ds)`` entry, pick the read mode:
+
+        * sealed object — race the data server's value response against
+          the k-1+Δ least-loaded other stripe members returning their
+          full chunks; the request completes at the k-th arrival.  If
+          the data server is among the dropped Δ, the winners' chunk set
+          flows into ``DecodePlan`` as a per-request erasure pattern
+          (one batched ``submit_decode`` across the whole batch).
+        * unsealed object — race the data server against Δ of its alive
+          parity replicas (unsealed objects are replicated there).
+        * miss — nothing to race; a single round trip, cost-identical
+          to the plain path.
+
+        Dark servers (failed + degraded-active) are excluded from the
+        candidate set, so Δ race-erasures plus real erasures can never
+        exceed m; merely-slow or failed-but-undeclared servers stay in
+        and lose the race naturally.  Dropped legs are fully accounted
+        (bytes, messages, link occupancy — future requests queue behind
+        them) but never gate this request's completion and appear as
+        cancelled spans in the tracer, not latency contributors.
+
+        Returns ``(values, modeled_t)``; races of one batch run
+        concurrently (t = max over entries, like the plain batched
+        fan-out phases).
+        """
+        delta = self.redundant_reads
+        pp = f"p{proxy.pid}"
+        vals: list = [None] * len(entries)
+        race_ts: list[float] = []
+        decode_jobs = []   # (slot, key, cid, pos, available, expected)
+        tr = self.net.tracer
+        if tr is not None:
+            tr.push()
+        for slot, (key, sl, ds) in enumerate(entries):
+            srv = self._sv(ds)
+            ref = srv.lookup(key)
+            failed_ds = self._is_failed(ds)
+            v = srv.get_value(key)
+            vsz = len(v) if v else 0
+            primary = (f"get:{pp}->s{ds}",
+                       [Leg("get", len(key), pp, f"s{ds}", failed_ds),
+                        Leg("get_resp", vsz, f"s{ds}", pp, failed_ds)])
+            if ref is None:
+                # miss/deleted: one round trip, cost-identical to plain
+                t, _, _ = self.net.race_phase([primary], need=1)
+                race_ts.append(t)
+                vals[slot] = v
+                continue
+            if not srv.sealed[ref.chunk_local_idx]:
+                # unsealed: replicated at every alive parity server
+                cands = sorted(
+                    (self._endpoint_load(p), p) for p in sl.parity_servers
+                    if not (self._is_failed(p) and self._degraded_active(p)))
+                cands = cands[:delta]
+                groups = [primary]
+                for _, p in cands:
+                    fp = self._is_failed(p)
+                    groups.append(
+                        (f"rget:{pp}->s{p}",
+                         [Leg("rget", len(key), pp, f"s{p}", fp),
+                          Leg("rget_resp", vsz, f"s{p}", pp, fp)]))
+                if len(groups) > 1:
+                    self._stats["redundant_reads"] += 1
+                t, winners, dropped = self.net.race_phase(groups, need=1)
+                race_ts.append(t)
+                self._stats["redundant_cancelled"] += len(dropped)
+                if winners == [0]:
+                    vals[slot] = v
+                else:
+                    rep = self._sv(cands[winners[0] - 1][1]).get_replica(key)
+                    if rep is None:
+                        self._stats["redundant_replica_fallbacks"] += 1
+                        vals[slot] = v
+                    else:
+                        rv, deleted = rep
+                        vals[slot] = None if deleted else rv
+                continue
+            # sealed: race the stripe (data-position chunks preferred —
+            # deterministic (load, is_parity, position) ranking)
+            cid = srv.chunk_id_of(ref)
+            pos = cid.position
+            cand_pos = sorted(
+                (self._endpoint_load(owner), i >= self.k, i)
+                for i, owner in enumerate(sl.servers)
+                if i != pos and not (self._is_failed(owner)
+                                     and self._degraded_active(owner)))
+            take = cand_pos[: self.k - 1 + delta]
+            groups, members = [primary], [pos]
+            for _, _, i in take:
+                owner = self._chunk_owner(sl, i)
+                fo = self._is_failed(owner)
+                groups.append(
+                    (f"rget:{pp}->s{owner}",
+                     [Leg("rget", len(key), pp, f"s{owner}", fo),
+                      Leg("rget_resp", self.chunk_size, f"s{owner}", pp,
+                          fo)]))
+                members.append(i)
+            if len(groups) > 1:
+                self._stats["redundant_reads"] += 1
+            t, winners, dropped = self.net.race_phase(
+                groups, need=min(self.k, len(groups)))
+            race_ts.append(t)
+            self._stats["redundant_cancelled"] += len(dropped)
+            if 0 in winners:
+                vals[slot] = v
+            else:
+                # the data server lost the race: its position is this
+                # request's erasure; decode from the k chunk winners
+                # (sealed-or-zero, mirroring _gather_available)
+                available = {}
+                for gi in winners:
+                    i = members[gi]
+                    c = self._sv(self._chunk_owner(sl, i)).get_sealed_chunk(
+                        self._stripe_chunk_id(sl, cid.stripe_id, i))
+                    available[i] = (c if c is not None else
+                                    np.zeros(self.chunk_size, np.uint8))
+                decode_jobs.append((slot, key, cid, pos, available, v))
+        max_t = max(race_ts, default=0.0)
+        if tr is not None:
+            tr.par("races", max_t, tr.pop())
+        if not decode_jobs:
+            return vals, max_t
+        self._stats["redundant_decodes"] += len(decode_jobs)
+        fut = self.engine.submit_decode(
+            [av for _, _, _, _, av, _ in decode_jobs],
+            [[pos] for _, _, _, pos, _, _ in decode_jobs],
+            self.chunk_size)
+        t_total = self._merge_coding(self._coding_s(fut), max_t,
+                                     kind="decode")
+        for (slot, key, cid, pos, _, expected), rec in zip(
+                decode_jobs, fut.result()):
+            rc = ReconChunk(cid, np.array(rec[pos], np.uint8))
+            rc.parse()
+            vals[slot] = rc.value_of(key)
+            if self.verify_rebuild:
+                assert vals[slot] == expected, \
+                    f"race decode diverged for {key!r}"
+        return vals, t_total
+
     def _get_small(self, key: bytes, proxy_id: int):
         proxy = self.proxies[proxy_id]
         sl, ds = self.mapper.data_server_for(key)
         if self._is_failed(ds) and self._degraded_active(ds):
             return self._degraded_get(proxy, sl, ds, key)
+        if self.redundant_reads > 0 and self.code.m > 0:
+            # straggler-tolerant k-of-(k+Δ) read (contents byte-identical
+            # to the plain path; only the who-answers race differs)
+            self._trace_frame()
+            vals, t = self._coded_read_batch(proxy, [(key, sl, ds)])
+            self.net.record("GET", t)
+            return vals[0]
         self._trace_frame()
         t = self.net.phase([Leg("get", len(key), f"p{proxy.pid}", f"s{ds}",
                                 self._is_failed(ds))])
@@ -1387,6 +1583,15 @@ class MemECCluster:
     # ------------------------------------------------------------------
     # failure / restore transitions (§5.2, §5.5)
     # ------------------------------------------------------------------
+    def inflate_server(self, sid: int, factor: float):
+        """Slow-server injection (the straggler axis, alongside
+        fail/recover): every leg touching server ``sid`` is
+        latency-inflated by ``factor``; ``factor=1.0`` restores.  The
+        server keeps serving — it is slow, not failed — which is
+        exactly the case degraded mode can't see and k-of-(k+Δ) reads
+        mitigate."""
+        self.net.inflate(f"s{sid}", factor)
+
     def fail_server(self, sid: int, recover: bool = True) -> dict:
         """Inject a transient failure; returns transition timings.
 

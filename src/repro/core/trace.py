@@ -255,6 +255,46 @@ class Tracer:
             self._frames[-1].append(
                 Span("drain", "phase", dur, "par", children=groups))
 
+    def race(self, dur: float, entries):
+        """k-of-(k+Δ) race phase: ``entries`` is ``[(name, cost, won)]``
+        per candidate round trip.  Winners become link leaves; losers
+        become ``cancelled:*`` spans (cat ``cancelled``) clipped to the
+        race duration — they show the redundant fetch in the timeline
+        but can never be the critical path: winners are listed first,
+        and the k-th winner's cost equals the race duration, so the
+        par-mode max-child tie-break always lands on a winner.
+        """
+        if not self._frames or dur <= 0.0:
+            return
+        winners, losers = [], []
+        for name, cost, won in entries:
+            if won:
+                winners.append(Span(name, "link", cost))
+            else:
+                losers.append(Span(f"cancelled:{name}", "cancelled",
+                                   min(cost, dur),
+                                   meta={"cancelled": True,
+                                         "full_cost": cost}))
+        kids = winners + losers
+        if len(kids) == 1:
+            self._frames[-1].append(kids[0])
+            return
+        top = max(winners, key=lambda s: s.dur) if winners else kids[0]
+        self._frames[-1].append(
+            Span(f"race:{top.name}", "phase", dur, "par", children=kids,
+                 meta={"need": len(winners), "dropped": len(losers)}))
+
+    def par(self, name: str, dur: float, segs: list):
+        """Wrap spans built in a sub-frame as one parallel composite
+        (e.g. the per-key races of one batched coded read)."""
+        if not self._frames or not segs:
+            return
+        if len(segs) == 1 and segs[0].dur == dur:
+            self._frames[-1].append(segs[0])
+            return
+        self._frames[-1].append(Span(name, "phase", dur, "par",
+                                     children=segs))
+
     # -- store hooks ---------------------------------------------------
     def merge_coding(self, coding_s: float, net_s: float, merged: float,
                      kind, lane_durs, depth, async_mode: bool):

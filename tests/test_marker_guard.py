@@ -25,6 +25,7 @@ GUARDED_MODULES = [
     "tests/test_multikey.py",
     "tests/test_shard.py",
     "tests/test_store.py",
+    "tests/test_straggler.py",
     "tests/test_system.py",
     "tests/test_trace.py",
     "tests/test_transitions_prop.py",

@@ -1,0 +1,485 @@
+"""Straggler-tolerant k-of-(k+Δ) reads (PR 9).
+
+Properties pinned here:
+
+* ``race_phase`` — k-th-arrival completion, deterministic tie-break,
+  every leg (winner or dropped) accounted in bytes/messages/occupancy;
+* ``EventRuntime.submit(optional=...)`` — dropped race traffic does not
+  gate or charge endpoint queue wait for its own request, but the link
+  clock still advances so *subsequent* requests queue behind it;
+* slow-server injection (``inflate``) scales latency and occupancy
+  without touching byte counters, and ``factor=1`` restores;
+* byte identity — Δ>0 reads return exactly the plain-Δ=0 bytes across
+  engines, single and multi-key, under inflation, declared/undeclared
+  failures, failed+slow overlap, and sharding;
+* load-aware selection — the most-loaded eligible chunk holder is left
+  out of the fan-out, the data position always stays in;
+* Δ race-erasures plus real erasures never exceed m (dark servers are
+  excluded from the candidate pool up front);
+* tracing — dropped legs appear as cancelled spans, never on the
+  critical path, and tracing does not perturb modeled time.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (ArrivalProcess, CostModel, EventRuntime, Leg,
+                        MemECCluster, NetSim, make_cluster)
+from repro.core.store import resolve_redundant_reads
+from repro.core.trace import components
+
+KW = dict(num_servers=16, scheme="rs", n=10, k=8, c=4,
+          chunk_size=512, max_unsealed=2)
+N_OBJ = 1400          # enough objects that chunks actually seal
+
+
+def cluster(**kw):
+    merged = dict(KW, engine="numpy")
+    merged.update(kw)
+    return MemECCluster(**merged)
+
+
+def load(cl, n_obj=N_OBJ, seed=7):
+    rng = np.random.default_rng(seed)
+    items = {}
+    for i in range(n_obj):
+        key = b"strag%06d" % i
+        val = bytes(rng.integers(0, 256, 24, dtype=np.uint8))
+        assert cl.set(key, val)
+        items[key] = val
+    if n_obj >= N_OBJ:   # smaller loads exercise the unsealed path only
+        assert sealed_data_chunks(cl) > 0, "workload too small to seal"
+    return items
+
+
+def sealed_data_chunks(cl, sid=None):
+    sids = range(len(cl.servers)) if sid is None else [sid]
+    total = 0
+    for s in sids:
+        srv = cl.servers[s]
+        total += sum(1 for cid, sealed in zip(srv.chunk_ids, srv.sealed)
+                     if sealed and cid is not None and cid.position < cl.k)
+    return total
+
+
+def victim_of(cl):
+    """Data server holding the most sealed data chunks (worst case for
+    a slow-server injection: the most reads depend on it)."""
+    return max(range(len(cl.servers)), key=lambda s: sealed_data_chunks(cl, s))
+
+
+def read_all(cl, items, chunk=16):
+    """Interleaved multi_get / single-get sweep; returns key -> value."""
+    keys = list(items)
+    out = {}
+    for i in range(0, len(keys), chunk):
+        block = keys[i:i + chunk]
+        if (i // chunk) % 3 == 2:           # every third block single-key
+            for k in block:
+                out[k] = cl.get(k)
+        else:
+            for k, v in zip(block, cl.multi_get(block)):
+                out[k] = v
+    return out
+
+
+# ---------------------------------------------------------------------------
+# redundant_reads resolution
+# ---------------------------------------------------------------------------
+
+class TestResolve:
+    def test_default_zero(self, monkeypatch):
+        monkeypatch.delenv("MEMEC_REDUNDANT_READS", raising=False)
+        assert resolve_redundant_reads(None) == 0
+        assert cluster().redundant_reads == 0
+
+    def test_env_fallback(self, monkeypatch):
+        monkeypatch.setenv("MEMEC_REDUNDANT_READS", "2")
+        assert resolve_redundant_reads(None) == 2
+        assert cluster().redundant_reads == 2
+
+    def test_explicit_wins(self, monkeypatch):
+        monkeypatch.setenv("MEMEC_REDUNDANT_READS", "2")
+        assert resolve_redundant_reads(1) == 1
+
+    def test_negative_rejected(self):
+        with pytest.raises(ValueError):
+            resolve_redundant_reads(-1)
+
+
+# ---------------------------------------------------------------------------
+# race_phase unit semantics
+# ---------------------------------------------------------------------------
+
+def _group(label, nbytes, src="p0", dst="s0", to_failed=False):
+    return (label, [Leg("rget", 8, src, dst, to_failed),
+                    Leg("rget_resp", nbytes, dst, src, to_failed)])
+
+
+class TestRacePhase:
+    def test_kth_arrival(self):
+        net = NetSim(CostModel())
+        groups = [_group(f"g{i}", nb, dst=f"s{i}")
+                  for i, nb in enumerate([4000, 100, 2000, 300])]
+        t, winners, dropped = net.race_phase(groups, need=2)
+        # completes at the 2nd-cheapest group, not the max
+        costs = [sum(net.cost.leg(l.nbytes) for l in legs)
+                 for _, legs in groups]
+        assert t == pytest.approx(sorted(costs)[1])
+        assert winners == [1, 3] and dropped == [0, 2]
+
+    def test_need_clamped_to_groups(self):
+        net = NetSim(CostModel())
+        groups = [_group("a", 100), _group("b", 200, dst="s1")]
+        t, winners, dropped = net.race_phase(groups, need=5)
+        assert winners == [0, 1] and dropped == []
+        assert t == pytest.approx(max(
+            sum(net.cost.leg(l.nbytes) for l in legs) for _, legs in groups))
+
+    def test_tie_break_by_index(self):
+        net = NetSim(CostModel())
+        groups = [_group(f"g{i}", 256, dst=f"s{i}") for i in range(4)]
+        _, winners, dropped = net.race_phase(groups, need=2)
+        assert winners == [0, 1] and dropped == [2, 3]
+
+    def test_all_legs_accounted(self):
+        """Dropped legs still hit bytes / messages / link occupancy."""
+        net = NetSim(CostModel())
+        groups = [_group(f"g{i}", 512, dst=f"s{i}") for i in range(5)]
+        net.race_phase(groups, need=2)
+        wire = 512 + net.cost.header_bytes
+        req_wire = 8 + net.cost.header_bytes
+        assert net.msgs_by_kind["rget"] == 5
+        assert net.msgs_by_kind["rget_resp"] == 5
+        assert net.bytes_by_kind["rget_resp"] == 5 * wire
+        for i in range(5):   # losers' occupancy is on the wire too
+            assert net.time_by_endpoint[f"s{i}"] == pytest.approx(
+                (wire + req_wire) / net.cost.bw_Bps)
+
+    def test_failed_leg_penalty_loses_race(self):
+        net = NetSim(CostModel())
+        groups = [_group("failed", 100, dst="s0", to_failed=True),
+                  _group("ok", 100, dst="s1")]
+        _, winners, dropped = net.race_phase(groups, need=1)
+        assert winners == [1] and dropped == [0]
+
+
+# ---------------------------------------------------------------------------
+# EventRuntime: optional (dropped-leg) occupancy gating
+# ---------------------------------------------------------------------------
+
+class TestOptionalGating:
+    def _rt(self):
+        return EventRuntime(CostModel(),
+                            ArrivalProcess("poisson", rate=float("inf"),
+                                           inflight=4))
+
+    def test_optional_does_not_gate_own_request(self):
+        rt = self._rt()
+        rt.submit("GET", 0.001, busy={"a": 0.004})          # a busy to 4ms
+        detail = {}
+        lat = rt.submit("GET", 0.001, busy={"a": 0.003},
+                        optional={"a": 0.003}, detail_out=detail)
+        # entirely-optional endpoint: no wait, no endpoint attribution
+        assert lat == pytest.approx(0.001)
+        assert detail["endpoint"] == ""
+        assert rt.wait_s_by_resource["endpoint"] == 0.0
+
+    def test_optional_still_advances_link_clock(self):
+        rt = self._rt()
+        rt.submit("GET", 0.001, busy={"a": 0.004})
+        rt.submit("GET", 0.001, busy={"a": 0.003}, optional={"a": 0.003})
+        # dropped bytes appended behind the queue, not rewound
+        assert rt.link_free["a"] == pytest.approx(0.007)
+        # a third, non-optional request queues behind the dropped traffic
+        lat = rt.submit("GET", 0.001, busy={"a": 0.001})
+        assert lat == pytest.approx(0.007 + 0.001)
+
+    def test_partially_optional_endpoint_still_gates(self):
+        rt = self._rt()
+        rt.submit("GET", 0.001, busy={"a": 0.004})
+        lat = rt.submit("GET", 0.001, busy={"a": 0.003},
+                        optional={"a": 0.002})
+        assert lat == pytest.approx(0.004 + 0.001)
+
+
+# ---------------------------------------------------------------------------
+# slow-server injection
+# ---------------------------------------------------------------------------
+
+class TestInflation:
+    def test_leg_cost_and_occupancy_scale(self):
+        net = NetSim(CostModel())
+        base = net.phase([Leg("get", 512, "p0", "s3")])
+        occ0 = net.time_by_endpoint["s3"]
+        net.inflate("s3", 10.0)
+        slow = net.phase([Leg("get", 512, "p0", "s3")])
+        assert slow == pytest.approx(10.0 * base)
+        assert net.time_by_endpoint["s3"] - occ0 == pytest.approx(10.0 * occ0)
+        net.inflate("s3", 1.0)   # factor 1 removes the entry entirely
+        assert "s3" not in net.inflation
+        assert net.phase([Leg("get", 512, "p0", "s3")]) == pytest.approx(base)
+
+    def test_bytes_unchanged(self):
+        net = NetSim(CostModel())
+        net.inflate("s3", 10.0)
+        net.phase([Leg("get", 512, "p0", "s3")])
+        assert net.bytes_by_kind["get"] == 512 + net.cost.header_bytes
+
+    def test_invalid_factor_rejected(self):
+        net = NetSim(CostModel())
+        for bad in (0.0, -1.0):
+            with pytest.raises(ValueError):
+                net.inflate("s3", bad)
+
+    def test_inflation_survives_reset(self):
+        net = NetSim(CostModel())
+        net.inflate("s3", 10.0)
+        base = NetSim(CostModel()).phase([Leg("get", 512, "p0", "s3")])
+        net.reset()
+        assert net.phase([Leg("get", 512, "p0", "s3")]) == \
+            pytest.approx(10.0 * base)
+
+    def test_cluster_inflate_server(self):
+        cl = cluster()
+        items = load(cl, 200)
+        key = next(iter(items))
+        cl.get(key)
+        p0 = cl.stats["latency"]["GET"]["p50_s"]
+        _, ds = cl.mapper.data_server_for(key)
+        cl.inflate_server(ds, 10.0)
+        for k in items:
+            cl.get(k)
+        assert cl.stats["latency"]["GET"]["p999_s"] > 5 * p0
+
+
+# ---------------------------------------------------------------------------
+# byte identity: k-of-(k+Δ) == plain k
+# ---------------------------------------------------------------------------
+
+def assert_identical(delta, engine="numpy", scenario=lambda cl: None,
+                     n_obj=N_OBJ):
+    plain = cluster(engine=engine, redundant_reads=0, verify_rebuild=True)
+    red = cluster(engine=engine, redundant_reads=delta, verify_rebuild=True)
+    items = load(plain)
+    assert load(red) == items
+    scenario(plain)
+    scenario(red)
+    got_plain = read_all(plain, items)
+    got_red = read_all(red, items)
+    assert got_plain == got_red == items
+    return plain, red
+
+
+class TestByteIdentity:
+    def test_normal(self):
+        _, red = assert_identical(1)
+        assert red._stats["redundant_reads"] > 0
+        assert red._stats["redundant_decodes"] == 0  # no straggler: primary wins
+
+    def test_under_inflation_decodes(self):
+        def inject(cl):
+            cl.inflate_server(victim_of(cl), 10.0)
+        _, red = assert_identical(1, scenario=inject)
+        assert red._stats["redundant_decodes"] > 0
+        assert red._stats["redundant_cancelled"] > 0
+
+    def test_delta2(self):
+        def inject(cl):
+            cl.inflate_server(victim_of(cl), 10.0)
+        _, red = assert_identical(2, scenario=inject)
+        assert red._stats["redundant_decodes"] > 0
+
+    def test_failed_plus_slow_overlap(self):
+        """Δ slow servers overlapping a genuinely failed one: the dark
+        server is excluded up front, so Δ + real erasures <= m holds."""
+        def inject(cl):
+            cl.fail_server(3, recover=False)
+            cl.inflate_server(5, 10.0)
+        assert_identical(2, scenario=inject)
+
+    def test_undeclared_failure(self):
+        """degraded_enabled=False: the failed server stays a candidate
+        with its to_failed penalty and simply loses every race."""
+        plain = cluster(redundant_reads=0, degraded_enabled=False)
+        red = cluster(redundant_reads=1, degraded_enabled=False)
+        items = load(plain)
+        load(red)
+        for cl in (plain, red):
+            cl.fail_server(3, recover=False)
+        assert read_all(plain, items) == read_all(red, items) == items
+        assert red._stats["redundant_decodes"] > 0
+
+    def test_after_restore(self):
+        def cycle(cl):
+            cl.fail_server(3)
+            cl.restore_server(3)
+            cl.inflate_server(victim_of(cl), 10.0)
+            cl.inflate_server(victim_of(cl), 1.0)   # and un-inflate
+        assert_identical(1, scenario=cycle)
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("engine", ["jax", "pallas"])
+    def test_engine_grid(self, engine):
+        def inject(cl):
+            cl.inflate_server(victim_of(cl), 10.0)
+        _, red = assert_identical(1, engine=engine, scenario=inject)
+        assert red._stats["redundant_decodes"] > 0
+
+    def test_sharded(self):
+        kw = dict(KW, engine="numpy", verify_rebuild=True)
+        plain = make_cluster(shards=4, redundant_reads=0, **kw)
+        red = make_cluster(shards=4, redundant_reads=1, **kw)
+        assert red.redundant_reads == 1
+        rng = np.random.default_rng(11)
+        items = {b"sh%06d" % i: bytes(rng.integers(0, 256, 24, dtype=np.uint8))
+                 for i in range(1200)}
+        for cl in (plain, red):
+            for k, v in items.items():
+                assert cl.set(k, v)
+        info = red.inflate_server(2, 10.0, shard=1)
+        assert info == {"shard": 1, "server": 2, "factor": 10.0}
+        plain.inflate_server(2, 10.0, shard=1)
+        keys = list(items)
+        for cl in (plain, red):
+            got = dict(zip(keys, cl.multi_get(keys)))
+            got.update({k: cl.get(k) for k in keys[::7]})
+            assert got == {k: items[k] for k in got}
+
+
+# ---------------------------------------------------------------------------
+# load-aware selection
+# ---------------------------------------------------------------------------
+
+class TestSelection:
+    def _sealed_key(self, cl, items):
+        for key in items:
+            sl, ds = cl.mapper.data_server_for(key)
+            srv = cl.servers[ds]
+            ref = srv.lookup(key)
+            if ref is None:
+                continue
+            cid = srv.chunk_id_of(ref)
+            if srv.get_sealed_chunk(cid) is not None:
+                return key, sl, ds, cid
+        pytest.fail("no sealed key found")
+
+    def test_busiest_member_excluded(self):
+        cl = cluster(redundant_reads=1)
+        items = load(cl)
+        key, sl, ds, cid = self._sealed_key(cl, items)
+        # overload one stripe member that is neither the data position
+        # nor dark; with Δ=1 the fan-out takes k-1+Δ of the n-1 others,
+        # leaving out exactly the most-loaded one
+        others = [i for i in range(len(sl.servers)) if i != cid.position]
+        loaded = sl.servers[others[0]]
+        cl.net.time_by_endpoint[f"s{loaded}"] += 1e6
+        before = cl.net.bytes_by_endpoint.get(f"s{loaded}", 0)
+        ds_before = cl.net.bytes_by_endpoint.get(f"s{ds}", 0)
+        assert cl.get(key) == items[key]
+        assert cl.net.bytes_by_endpoint.get(f"s{loaded}", 0) == before
+        assert cl.net.bytes_by_endpoint.get(f"s{ds}", 0) > ds_before
+
+    def test_endpoint_load_reflects_occupancy(self):
+        cl = cluster()
+        cl.net.time_by_endpoint["s5"] += 1.0
+        assert cl._endpoint_load(5) > cl._endpoint_load(6)
+
+
+# ---------------------------------------------------------------------------
+# tail behavior: the actual straggler win
+# ---------------------------------------------------------------------------
+
+class TestTailWin:
+    def test_redundancy_beats_plain_under_injection(self):
+        """One 10x server: Δ=1 p99 stays near baseline, Δ=0 blows up."""
+        base = cluster(redundant_reads=0)
+        items = load(base)
+        read_all(base, items)
+        p99_base = base.stats["latency"]["GET"]["p99_s"]
+
+        twins = {}
+        for delta in (0, 1):
+            cl = cluster(redundant_reads=delta)
+            load(cl)
+            cl.inflate_server(victim_of(cl), 10.0)
+            assert read_all(cl, items) == items
+            twins[delta] = cl.stats["latency"]["GET"]["p99_s"]
+        assert twins[0] >= 5.0 * p99_base       # plain reads eat the straggler
+        assert twins[1] <= 2.0 * p99_base       # redundancy hides it
+
+    def test_event_mode_open_loop(self):
+        """Same win under the event runtime, where dropped traffic still
+        occupies links but never gates its own request."""
+        p99 = {}
+        for delta in (0, 1):
+            cl = cluster(redundant_reads=delta,
+                         arrival="poisson:2000:inflight=2:seed=5")
+            items = load(cl, 600)
+            cl.inflate_server(victim_of(cl), 10.0)
+            assert read_all(cl, items) == items
+            st = cl.stats
+            p99[delta] = st["latency"]["GET"]["p99_s"]
+            waits = st["queue_wait_s_by_resource"]
+            assert set(waits) == {"admission", "endpoint", "engine"}
+            assert all(w >= 0.0 for w in waits.values())
+        assert p99[1] < p99[0]
+
+
+# ---------------------------------------------------------------------------
+# tracing: cancelled spans off the critical path
+# ---------------------------------------------------------------------------
+
+class TestTracing:
+    def _run(self, trace, delta=1):
+        cl = cluster(redundant_reads=delta, trace=trace)
+        items = load(cl, 600)
+        cl.inflate_server(victim_of(cl), 10.0)
+        got = read_all(cl, items)
+        assert got == items
+        return cl
+
+    def test_cancelled_spans_present_and_consistent(self):
+        cl = self._run(trace="1")
+        roots = cl.tracer.requests
+        assert roots
+        cancelled = 0
+        for r in roots:
+            r.check()
+            cancelled += sum(1 for s in r.walk() if s.cat == "cancelled")
+        assert cancelled > 0
+        assert cancelled == cl._stats["redundant_cancelled"]
+
+    def test_cancelled_never_on_critical_path(self):
+        cl = self._run(trace="1")
+        for r in cl.tracer.requests:
+            assert not any(name.startswith("cancelled:")
+                           for name in components(r))
+
+    def test_tracer_does_not_perturb_time(self):
+        on = self._run(trace="1")
+        off = self._run(trace=None)
+        assert on.stats["latency"]["GET"] == off.stats["latency"]["GET"]
+
+
+# ---------------------------------------------------------------------------
+# erasure-budget guard
+# ---------------------------------------------------------------------------
+
+class TestErasureBudget:
+    def test_candidates_exclude_dark_servers(self):
+        """With m=2, one declared failure + Δ=2 must still decode: the
+        dark server never enters the candidate pool, so winners are
+        always k readable chunk positions."""
+        cl = cluster(redundant_reads=2, verify_rebuild=True)
+        items = load(cl)
+        cl.fail_server(3, recover=False)
+        cl.inflate_server(5, 10.0)
+        cl.inflate_server(7, 10.0)
+        assert read_all(cl, items) == items
+
+    def test_delta_larger_than_pool_clamps(self):
+        """Δ bigger than the spare-chunk pool just means 'race them all'
+        — need is clamped to the group count, never an error."""
+        cl = cluster(redundant_reads=8)
+        items = load(cl, 400)
+        assert read_all(cl, items) == items
