@@ -1,11 +1,12 @@
-"""Tail-regression CI gate (PR 9).
+"""Tail-regression CI gate (PR 9; update-path gates PR 10).
 
-Compares the ``"tail"`` and ``"straggler"`` rows of a BENCH_ci.json
-produced by ``scripts/verify.sh --ci`` against the committed per-engine
-thresholds in ``benchmarks/ci_gates.json`` and exits non-zero — with a
-loud per-row table — on any regression.  Missing sections or rows the
-gates expect are themselves failures: a smoke that silently stopped
-emitting a row must not read as "no regression".
+Compares the ``"tail"``, ``"straggler"`` and ``"update"`` rows of a
+BENCH_ci.json produced by ``scripts/verify.sh --ci`` against the
+committed per-engine thresholds in ``benchmarks/ci_gates.json`` and
+exits non-zero — with a loud per-row table — on any regression.
+Missing sections or rows the gates expect are themselves failures: a
+smoke that silently stopped emitting a row must not read as "no
+regression".
 
 Gate semantics (all values in the gates file):
 
@@ -18,7 +19,14 @@ Gate semantics (all values in the gates file):
   factor of baseline;
 * ``straggler.<engine>.<case>.p99_vs_baseline_min`` — the injection
   sanity floor: plain reads must visibly degrade, else the smoke is no
-  longer actually injecting a straggler.
+  longer actually injecting a straggler;
+* ``update.<engine>.<case>.p99_vs_off_max`` — the hot-key tier win:
+  the hot-on twin's UPDATE p99 must stay under this fraction of the
+  tier-off twin's (``< 1`` keeps the reduction a hard invariant);
+* ``update.<engine>.<case>.parity_bytes_vs_off_max`` — same, for the
+  modeled parity-delta bytes (counted *including* the final flush);
+* ``update.<engine>.<case>.buffered_updates_min`` — sanity floor: the
+  smoke must actually have buffered hot-key updates.
 
 ``<engine>`` falls back to ``"default"`` when there is no entry for the
 bench's engine column.  Usage::
@@ -86,6 +94,34 @@ def _check_straggler(bench: dict, gates: dict, failures: list, checked: list):
             (failures if op(got, bound) else checked).append(line)
 
 
+def _check_update(bench: dict, gates: dict, failures: list, checked: list):
+    rows = bench.get("update")
+    if not rows:
+        failures.append("update: no rows in BENCH_ci.json "
+                        "(update smoke stopped emitting?)")
+        return
+    by_case = {r["case"]: r for r in rows}
+    eng = rows[0].get("engine", "default")
+    for case, th in _engine_gates(gates, "update", eng).items():
+        row = by_case.get(case)
+        if row is None:
+            failures.append(f"update[{case}]: expected row missing "
+                            f"(have {sorted(by_case)})")
+            continue
+        for key, field, op, word in (
+                ("p99_ms_max", "p99_ms", float.__gt__, "max"),
+                ("p99_vs_off_max", "p99_vs_off", float.__gt__, "max"),
+                ("parity_bytes_vs_off_max", "parity_bytes_vs_off",
+                 float.__gt__, "max"),
+                ("buffered_updates_min", "buffered_updates",
+                 float.__lt__, "min")):
+            if key not in th:
+                continue
+            got, bound = float(row[field]), float(th[key])
+            line = f"update[{case}] {field}={got:.3f} {word}={bound:.3f}"
+            (failures if op(got, bound) else checked).append(line)
+
+
 def main(argv=None) -> int:
     argv = argv if argv is not None else sys.argv[1:]
     if len(argv) != 2:
@@ -104,6 +140,7 @@ def main(argv=None) -> int:
     checked: list[str] = []
     _check_tail(bench, gates, failures, checked)
     _check_straggler(bench, gates, failures, checked)
+    _check_update(bench, gates, failures, checked)
     for line in checked:
         print(f"ci_gates: OK    {line}")
     for line in failures:

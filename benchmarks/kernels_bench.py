@@ -146,6 +146,33 @@ def run():
         us_d = timeit(lambda: eng.decode_batch(avail, wanted, C), reps=3)
         emit(f"engine.{name}.rdp_decode.B{B}", us_d, f"{B * 8 * C}B/call")
 
+    # hot-tier collapse (PR 10): XOR-fold V buffered versions per key,
+    # then ONE r>1 per-item delta round.  The derived column carries the
+    # per-op dispatch provenance (``op_paths``) — on the pallas engine
+    # the per-item kernel must be a compiled path, and on the plain jax
+    # engine it must *say* jnp-fallback rather than claim otherwise.
+    B, V = 8, 4
+    for name in engines:
+        eng = make_engine(name, rdp)
+        data = rng.integers(0, 256, (B, 8, C), dtype=np.uint8)
+        parity = np.asarray(eng.encode_batch(data))
+        idxs = [int(i) for i in rng.integers(0, 8, B)]
+        versions = [rng.integers(0, 256, (V, C), dtype=np.uint8)
+                    for _ in range(B)]
+        us_c = timeit(lambda: eng.submit_delta_collapse(
+            parity, idxs, versions).result(), reps=3)
+        path = eng.op_paths.get("delta_per_item", "host")
+        emit(f"engine.{name}.rdp_collapse.B{B}V{V}", us_c,
+             f"{eng.collapse_work_bytes(versions, C)}B/call path={path}")
+        if name == "pallas":
+            assert path != "jnp-fallback", (
+                "pallas engine r>1 per-item delta silently took the jnp "
+                "fallback — dispatch/provenance wiring broken")
+        if name == "jax":
+            assert path == "jnp-fallback", (
+                f"jax engine per-item provenance should read jnp-fallback, "
+                f"got {path!r}")
+
 
 def main(argv=None):
     import argparse

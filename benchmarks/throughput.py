@@ -380,6 +380,148 @@ def run_straggler_sweep():
     emit("straggler_sweep.done", 0.0,
          "one 10x server: d0 p99 degrades >=5x, d1 p99 within 2x of "
          "baseline, contents byte-identical")
+    run_update_sweep()
+
+
+def _update_rows(engine, n_obj, n_ops, seed=31):
+    """Update-heavy Zipf window on two layout-identical twins: the
+    hot-key version-buffer tier on (``hot-on``) vs off (``hot-off``).
+
+    64-byte values on 512-byte chunks so the load phase seals (the tier
+    only touches *sealed* updates); the measured window runs unbatched
+    (``batch_size=1``) so a buffered UPDATE's latency is just its
+    request+ack phases.  The window is *open-loop*: a seeded Poisson
+    arrival at ~0.95x the off-twin's calibrated service rate, so the
+    skipped parity rounds lower utilization and the win lands in p99 as
+    shorter queue waits (closed-loop, every unbuffered sealed UPDATE
+    costs the same deterministic modeled latency, so p99 stays pinned at
+    that constant no matter how many hot ops get cheaper).
+    ``delta_bytes`` is counted *after* the final explicit
+    flush, so the hot-on column pays for every deferred fold — the
+    reduction is genuinely the V-versions-to-one-round collapse plus the
+    per-key leg union, not deferral.  Asserts the twins end byte-equal
+    and returns one row per case with ``p99_vs_off`` /
+    ``parity_bytes_vs_off`` precomputed for the CI gate.
+    """
+    from repro.data.ycsb import YCSBWorkload, run_workload
+
+    cfg = YCSBConfig(num_objects=n_obj, value_sizes=(64, 64), seed=seed)
+    rcfg = YCSBConfig(num_objects=n_obj, value_sizes=(64, 64), seed=seed + 1)
+    kw = dict(scheme="rs", engine=engine, shards=1, c=4,
+              chunk_size=512, max_unsealed=2)
+    # calibrate the offered load from a closed-loop off twin (ops over
+    # modeled request time through the same update window)
+    cal = make_memec(hot_key_threshold=0.0, **kw)
+    run_workload(cal, "load", 0, cfg, batch_size=1)
+    t0 = cal.net.total_recorded_s
+    ops, _ = run_workload(cal, "U", n_ops, rcfg, batch_size=1)
+    rate = 0.95 * ops / (cal.net.total_recorded_s - t0)
+    arrival = f"poisson:{rate:.6g}:seed={seed}:inflight=2"
+    # thresholds are explicit on BOTH twins so $MEMEC_HOT_KEYS in the
+    # environment cannot silently turn the off-twin on
+    cases = (("hot-off", 0.0), ("hot-on", 3.0))
+    rows, contents = [], {}
+    for case, threshold in cases:
+        cl = make_memec(hot_key_threshold=threshold, arrival=arrival, **kw)
+        run_workload(cl, "load", 0, cfg, batch_size=1)
+        cl.net.reset()   # measure the update window, not the load phase
+        run_workload(cl, "U", n_ops, rcfg, batch_size=1)
+        cl.flush_hot_buffers()   # pay every deferred fold inside the window
+        tm = tail_metrics(cl, kinds=("UPDATE",))["UPDATE"]
+        ht = cl.stats.get("hot_tier", {})
+        rows.append(dict({"engine": engine, "case": case,
+                          "threshold": threshold, "kind": "UPDATE",
+                          "delta_bytes": cl.net.bytes_by_kind.get("delta", 0),
+                          "buffered_updates": ht.get("buffered_updates", 0),
+                          "flushes": ht.get("flushes", 0),
+                          "saved_parity_rounds":
+                              ht.get("saved_parity_rounds", 0)}, **tm))
+        wl = YCSBWorkload(cfg)
+        contents[case] = cl.multi_get([wl.key(i) for i in range(n_obj)])
+    assert contents["hot-off"] == contents["hot-on"], \
+        "hot-key tier changed returned bytes"
+    off = rows[0]
+    for r in rows:
+        r["p99_vs_off"] = r["p99_ms"] / off["p99_ms"]
+        r["parity_bytes_vs_off"] = (r["delta_bytes"] / off["delta_bytes"]
+                                    if off["delta_bytes"] else float("nan"))
+    return rows
+
+
+def _rdp_delta_provenance(engine="pallas") -> str:
+    """The r>1 acceptance check: a hot-tier flush on an RDP cluster
+    (r=16 sub-blocks per chunk) must dispatch the compiled per-item
+    delta kernel — ``op_paths['delta_per_item']`` on the pallas engine
+    must NOT read ``jnp-fallback``.  Returns the recorded path."""
+    from repro.data.ycsb import run_workload
+
+    cfg = YCSBConfig(num_objects=600, value_sizes=(64, 64), seed=9)
+    cl = make_memec(scheme="rdp", engine=engine, shards=1, c=4,
+                    chunk_size=512, max_unsealed=2, hot_key_threshold=2.0)
+    run_workload(cl, "load", 0, cfg, batch_size=1)
+    run_workload(cl, "U", 800, cfg, batch_size=1)
+    cl.flush_hot_buffers()
+    ht = cl.stats.get("hot_tier", {})
+    assert ht.get("flushed_versions", 0) > 0, \
+        "RDP provenance run never flushed a buffered version"
+    path = cl.engine.op_paths.get("delta_per_item")
+    assert path is not None, \
+        "RDP hot-tier flush never dispatched the per-item delta kernel"
+    if engine == "pallas":
+        assert path != "jnp-fallback", \
+            f"r>1 per-item delta took the jnp fallback (path={path!r})"
+    return path
+
+
+def update_smoke(engine=None) -> list[dict]:
+    """CI update smoke: hot-key tier on vs off under an update-heavy
+    Zipf window.
+
+    Returns the ``"update"`` rows for BENCH_ci.json after asserting the
+    tentpole's acceptance shape: the hot-on twin actually buffered
+    updates, its UPDATE p99 and modeled parity-delta bytes come out
+    strictly below the off twin, contents stay byte-identical (checked
+    inside ``_update_rows``), and an RDP (r>1) flush dispatches the
+    compiled per-item kernel rather than the jnp fallback.
+    """
+    engine = engine or os.environ.get("MEMEC_ENGINE", "numpy")
+    rows = _update_rows(engine, n_obj=1200, n_ops=3000)
+    by = {r["case"]: r for r in rows}
+    assert by["hot-on"]["buffered_updates"] > 0, \
+        "update smoke never buffered a hot-key update"
+    assert by["hot-on"]["p99_ms"] < by["hot-off"]["p99_ms"], \
+        "hot-key tier did not reduce update p99"
+    assert by["hot-on"]["delta_bytes"] < by["hot-off"]["delta_bytes"], \
+        "hot-key tier did not reduce modeled parity-delta bytes"
+    path = _rdp_delta_provenance()
+    for r in rows:
+        r["rdp_delta_path"] = path
+    return rows
+
+
+def run_update_sweep():
+    """Update-heavy sweep (PR 10) — hot-key version-buffer tier on vs
+    off, per engine; same shape assertions as the CI smoke."""
+    print("\n# Update-heavy sweep — hot-key version buffer (modeled)")
+    print("engine,case,p50_ms,p99_ms,p99_vs_off,delta_bytes,"
+          "parity_bytes_vs_off,buffered_updates,flushes")
+    engines = os.environ.get("MEMEC_BENCH_ENGINES", "numpy").split(",")
+    fast = bool(os.environ.get("MEMEC_BENCH_FAST"))
+    n_obj, n_ops = (1200, 3000) if fast else (1200, 5000)
+    for engine in engines:
+        rows = _update_rows(engine, n_obj, n_ops)
+        for r in rows:
+            print(f"{r['engine']},{r['case']},{r['p50_ms']:.3f},"
+                  f"{r['p99_ms']:.3f},{r['p99_vs_off']:.2f},"
+                  f"{r['delta_bytes']},{r['parity_bytes_vs_off']:.2f},"
+                  f"{r['buffered_updates']},{r['flushes']}")
+        by = {r["case"]: r for r in rows}
+        assert by["hot-on"]["buffered_updates"] > 0
+        assert by["hot-on"]["p99_ms"] < by["hot-off"]["p99_ms"]
+        assert by["hot-on"]["delta_bytes"] < by["hot-off"]["delta_bytes"]
+    emit("update_sweep.done", 0.0,
+         "hot-key tier cut update p99 and parity-delta bytes; "
+         "contents byte-identical")
 
 
 def tail_smoke(engine=None) -> list[dict]:

@@ -225,6 +225,34 @@ def main():
                   f"({s.stats['redundant_decodes']} redundant decodes, "
                   f"{s.stats['redundant_cancelled']} cancelled fetches)")
 
+    # --- 3f. hot-key update tier: version-buffered delta coding (PR 10) ---
+    # every sealed UPDATE pays an engine delta + m parity legs; under a
+    # Zipf write mix the few hottest keys dominate that cost.  With
+    # hot_key_threshold=t (or MEMEC_HOT_KEYS=t) an EWMA tracker marks
+    # sustained updaters hot and buffers their per-update XOR deltas
+    # (bounded by hot_max_keys / hot_max_versions); data-server bytes
+    # stay current — only parity lags, and only while buffered.  A flush
+    # (eviction, a full entry, any parity-reading path: redundant-read
+    # races, fail_server — or the explicit flush_hot_buffers()) folds
+    # each key's V versions into ONE engine.submit_delta_collapse round,
+    # so N buffered updates cost one parity round and the delta legs
+    # carry just the union byte extent.  Byte-identical to a tier-off
+    # twin (guarded by tests/test_hot_tier.py); stats land under
+    # stats["hot_tier"] and the telemetry snapshot's "hot_tier" key:
+    hot = MemECCluster(num_servers=16, scheme="rs", n=10, k=8, c=4,
+                       chunk_size=512, max_unsealed=2,
+                       hot_key_threshold=3.0)
+    for i in range(1200):
+        hot.set(b"hk%06d" % i, rng.bytes(64))
+    for rep in range(200):
+        hot.update(b"hk%06d" % (rep % 3), rng.bytes(64))
+    folded = hot.flush_hot_buffers()
+    ht = hot.stats["hot_tier"]
+    print(f"hot tier: {ht['buffered_updates']} updates buffered, "
+          f"{ht['saved_parity_rounds']} parity rounds saved "
+          f"({ht['saved_parity_bytes']} delta bytes), "
+          f"{folded} entries folded at the explicit drain")
+
     # --- 4. the compiled GF(2^8) data plane ---
     # kernels/dispatch picks the path per backend: compiled Pallas grids
     # on TPU/GPU, an XLA-jitted bit-plane formulation on CPU (faster

@@ -229,8 +229,34 @@ print(f"BENCH_ci.json: {len(rows)} straggler rows merged "
       f"(engine={rows[0]['engine']})")
 EOF
 
-    # tail-regression gate: compare the tail + straggler rows just
-    # merged against the committed per-engine thresholds; a p99
+    # update smoke (PR 10): hot-key version-buffer tier on vs off under
+    # an update-heavy Zipf window.  update_smoke itself asserts the
+    # acceptance shape (hot-on buffers updates, its UPDATE p99 and
+    # modeled parity-delta bytes land strictly below the off twin,
+    # contents byte-identical, and an RDP r>1 flush dispatches the
+    # compiled per-item kernel — no silent jnp fallback); its rows merge
+    # into BENCH_ci.json under "update" for the trajectory.
+    python - <<'EOF'
+import json
+import os
+
+from benchmarks.throughput import update_smoke
+
+rows = update_smoke()
+out = {}
+if os.path.exists("BENCH_ci.json"):
+    with open("BENCH_ci.json") as f:
+        out = json.load(f)
+out["update"] = rows
+with open("BENCH_ci.json", "w") as f:
+    json.dump(out, f, indent=2)
+print(f"BENCH_ci.json: {len(rows)} update rows merged "
+      f"(engine={rows[0]['engine']}, rdp_delta_path="
+      f"{rows[0]['rdp_delta_path']})")
+EOF
+
+    # tail-regression gate: compare the tail + straggler + update rows
+    # just merged against the committed per-engine thresholds; a p99
     # regression fails the build here, loudly, not in review
     python -m benchmarks.ci_gates BENCH_ci.json benchmarks/ci_gates.json
 

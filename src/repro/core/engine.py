@@ -236,6 +236,12 @@ class CodingEngine:
         # into per-request erasure sets, so this counter (vs inv_cache
         # occupancy) shows the pattern diversity they induce
         self.decode_patterns_submitted = 0
+        # per-op dispatch provenance: every device hook records which
+        # path actually ran it ("pallas-compiled" / "xla-compiled" /
+        # "interpret" / "jnp-fallback") — a silent jnp fallback used to
+        # be invisible in describe(), which claimed the dispatch path
+        # unconditionally; tests now assert on this map
+        self.op_paths: dict[str, str] = {}
 
     def note_modeled_busy(self, coding_s: float):
         """Charge modeled busy seconds against this engine's clock."""
@@ -292,12 +298,14 @@ class CodingEngine:
             "n": self.code.n, "k": self.code.k, "r": self.rep.r,
             "backend": "host",
             "path": "numpy-host",
+            "op_paths": dict(self.op_paths),
         }
 
     def stats(self) -> dict:
         """Run counters: device dispatches and plan-cache occupancy."""
         return {
             "path": self.describe()["path"],
+            "op_paths": dict(self.op_paths),
             "device_dispatches": self.device_dispatches,
             "inv_cache": len(self._inv_cache),
             "fused_cache": len(self._fused_cache),
@@ -386,6 +394,39 @@ class CodingEngine:
         return EngineFuture(
             lambda: self.apply_delta_batch(parity, idxs, xors),
             wb, "apply_delta")
+
+    def collapse_work_bytes(self, versions, chunk_size: int) -> int:
+        """Modeled cost of a version-collapse flush: one delta round
+        plus the XOR pass over every buffered version's bytes.  Shared
+        by all backends so hot-tier latency accounting can't drift."""
+        return (self.delta_work_bytes(len(versions), chunk_size)
+                + sum(int(np.asarray(v).size) for v in versions))
+
+    def submit_delta_collapse(self, parity: np.ndarray, data_indices,
+                              version_xors) -> EngineFuture:
+        """Fold V buffered versions per item into parity in ONE round.
+
+        ``version_xors``: per item, a (V_i, C) uint8 array of successive
+        version deltas (each XOR against the then-current chunk bytes);
+        their XOR-fold is the collapsed base→latest delta, so N buffered
+        updates to a hot key cost one parity round instead of N.
+        ``parity`` (B, m, C); returns a future of updated parity.  The
+        collapse is pure XOR (associative, byte-exact), so every backend
+        is byte-identical to applying the versions one at a time.
+        """
+        parity = np.asarray(parity, dtype=np.uint8)
+        versions = [np.asarray(v, dtype=np.uint8) for v in version_xors]
+        B, C = len(versions), parity.shape[2]
+        wb = self.collapse_work_bytes(versions, C)
+        if B == 0 or parity.shape[1] == 0:
+            return EngineFuture.wrap(parity.copy(), wb, "delta_collapse")
+        idxs = list(data_indices)
+
+        def thunk():
+            collapsed = np.stack(
+                [np.bitwise_xor.reduce(v, axis=0) for v in versions])
+            return self.apply_delta_batch(parity, idxs, collapsed)
+        return EngineFuture(thunk, wb, "delta_collapse")
 
     # -- shared decode plumbing -----------------------------------------
     def _decode_inverse(self, avail_sig: tuple[int, ...]
@@ -521,6 +562,19 @@ def _jnp_block_matmuls():
     return shared, per_item, per_item_fold
 
 
+@functools.lru_cache(maxsize=None)
+def _jnp_xor_collapse():
+    """jit'd (B, V, C) -> (B, C) XOR-fold over the version axis (the
+    device half of ``submit_delta_collapse`` on the jax/pallas paths)."""
+    jax, _ = _jax()
+
+    @jax.jit
+    def collapse(stacked):
+        return jax.lax.reduce(stacked, np.uint8(0), jax.lax.bitwise_xor,
+                              (1,))
+    return collapse
+
+
 class JaxEngine(CodingEngine):
     """Pure-jnp batched backend over the block-linear representation."""
 
@@ -535,6 +589,7 @@ class JaxEngine(CodingEngine):
         _, jnp = _jax()
         shared, _, _ = _jnp_block_matmuls()
         self.device_dispatches += 1
+        self.op_paths["matmul"] = "jnp-fallback"
         return shared(jnp.asarray(M), jnp.asarray(blocks))
 
     def _matmul_per_item_dev(self, Ms: np.ndarray, blocks: np.ndarray,
@@ -544,6 +599,7 @@ class JaxEngine(CodingEngine):
         _, jnp = _jax()
         _, per_item, per_item_fold = _jnp_block_matmuls()
         self.device_dispatches += 1
+        self.op_paths["delta_per_item"] = "jnp-fallback"
         if parity is None:
             return per_item(jnp.asarray(Ms), jnp.asarray(blocks))
         return per_item_fold(jnp.asarray(Ms), jnp.asarray(blocks),
@@ -633,6 +689,35 @@ class JaxEngine(CodingEngine):
 
     def apply_delta_batch(self, parity, data_indices, xors):
         return self.submit_apply_delta(parity, data_indices, xors).result()
+
+    def submit_delta_collapse(self, parity, data_indices, version_xors):
+        """Device-side collapse: pad-stack the versions (B, Vmax, C)
+        (zeros are XOR-identity), XOR-reduce on device, and feed the
+        fused per-item delta+apply — dispatched at submit like the other
+        device ops.  Byte-identical to the host collapse by XOR
+        associativity."""
+        parity = np.asarray(parity, dtype=np.uint8)
+        versions = [np.asarray(v, dtype=np.uint8) for v in version_xors]
+        B, C = len(versions), parity.shape[2]
+        m, k, r = self.code.m, self.code.k, self.rep.r
+        wb = self.collapse_work_bytes(versions, C)
+        if B == 0 or m == 0:
+            return EngineFuture.wrap(parity.copy(), wb, "delta_collapse")
+        _, jnp = _jax()
+        vmax = max(v.shape[0] for v in versions)
+        stacked = np.zeros((B, vmax, C), dtype=np.uint8)
+        for i, v in enumerate(versions):
+            stacked[i, :v.shape[0]] = v
+        self.device_dispatches += 1
+        collapsed = _jnp_xor_collapse()(jnp.asarray(stacked))      # (B, C)
+        idx = np.asarray(data_indices, dtype=np.int64)
+        cols = self.rep.encode.reshape(m * r, k, r)[:, idx, :]
+        Ms = np.ascontiguousarray(np.transpose(cols, (1, 0, 2)))
+        dev = self._matmul_per_item_dev(
+            Ms, collapsed.reshape(B, r, C // r),
+            parity.reshape(B, m * r, C // r))
+        return EngineFuture(lambda: self._resolve_dev(dev, (B, m, C)),
+                            wb, "delta_collapse")
 
     def _blocks(self, chunks: np.ndarray) -> np.ndarray:
         """(B, x, C) -> (B, x*r, C//r) sub-block rows."""
@@ -730,14 +815,18 @@ class PallasEngine(JaxEngine):
     name = "pallas"
 
     def _matmul_dev(self, M, blocks):
+        from repro.kernels import dispatch
         from repro.kernels.gf256_matmul import gf256_matmul_batched
         self.device_dispatches += 1
+        self.op_paths["matmul"] = dispatch.decide().path
         return gf256_matmul_batched(M, blocks)
 
     def _matmul_per_item_dev(self, Ms, blocks, parity=None):
-        from repro.kernels.gf256_matmul import gf256_matmul_per_item_batched
+        from repro.kernels import dispatch
+        from repro.kernels.delta_update import delta_apply_per_item_batched
         self.device_dispatches += 1
-        return gf256_matmul_per_item_batched(Ms, blocks, parity)
+        self.op_paths["delta_per_item"] = dispatch.decide().path
+        return delta_apply_per_item_batched(parity, Ms, blocks)
 
     def describe(self) -> dict:
         from repro.kernels import dispatch
@@ -757,9 +846,11 @@ class PallasEngine(JaxEngine):
         B, C = xors.shape
         if B == 0:
             return np.zeros((B, self.code.m, C), np.uint8)
+        from repro.kernels import dispatch
         from repro.kernels.delta_update import delta_apply_batched
         # parity=None: delta-only kernel — no dead parity streams
         self.device_dispatches += 1
+        self.op_paths["delta"] = dispatch.decide().path
         return np.asarray(delta_apply_batched(
             None, self._gammas(data_indices), xors))
 
@@ -772,8 +863,10 @@ class PallasEngine(JaxEngine):
         if B == 0:
             return EngineFuture.wrap(np.zeros((B, self.code.m, C), np.uint8),
                                      wb, "delta")
+        from repro.kernels import dispatch
         from repro.kernels.delta_update import delta_apply_batched
         self.device_dispatches += 1
+        self.op_paths["delta"] = dispatch.decide().path
         dev = delta_apply_batched(None, self._gammas(data_indices), xors)
         return EngineFuture(
             lambda: self._resolve_dev(dev, (B, self.code.m, C)), wb, "delta")
@@ -788,8 +881,10 @@ class PallasEngine(JaxEngine):
         wb = self.delta_work_bytes(B, C)
         if B == 0 or parity.shape[1] == 0:
             return EngineFuture.wrap(parity.copy(), wb, "apply_delta")
+        from repro.kernels import dispatch
         from repro.kernels.delta_update import delta_apply_batched
         self.device_dispatches += 1
+        self.op_paths["delta"] = dispatch.decide().path
         dev = delta_apply_batched(parity, self._gammas(data_indices), xors)
         return EngineFuture(
             lambda: self._resolve_dev(dev, parity.shape), wb, "apply_delta")

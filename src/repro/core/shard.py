@@ -346,6 +346,16 @@ class ShardedCluster:
                 if not isinstance(v, (int, float)):
                     continue  # nested summaries are rebuilt facade-level
                 out[k] = out.get(k, 0) + v
+        hot = [sh.stats["hot_tier"] for sh in self.shards
+               if "hot_tier" in sh.stats]
+        if hot:
+            # nested hot-tier summaries are skipped by the numeric merge
+            # above — rebuild them facade-level (counter-wise sum)
+            merged: dict = {}
+            for h in hot:
+                for k, v in h.items():
+                    merged[k] = merged.get(k, 0) + v
+            out["hot_tier"] = merged
         out["shard_ops"] = list(self.shard_ops)
         out["load_skew"] = self.load_skew()
         # merged-view latency percentiles (shared LatencyRecorder
@@ -691,6 +701,11 @@ class ShardedCluster:
         timings = self.shards[shard].restore_server(local)
         timings["shard"] = shard
         return timings
+
+    def flush_hot_buffers(self) -> int:
+        """Drain every shard's hot-key version buffer; returns the total
+        number of buffered entries folded back into their stripes."""
+        return sum(sh.flush_hot_buffers() for sh in self.shards)
 
     def inflate_server(self, sid: int, factor: float,
                        shard: int | None = None) -> dict:

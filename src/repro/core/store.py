@@ -66,6 +66,7 @@ from .chunk import (CHUNK_SIZE, METADATA_SIZE, ChunkId, fragment_count,
 from .codes import Code, make_code
 from .coordinator import Coordinator, ServerState
 from .engine import CodingEngine, make_engine, resolve_async
+from .hotkey import HotTier, resolve_hot_keys
 from .index import fnv1a
 from .netsim import CostModel, Leg, NetSim
 from .proxy import Proxy
@@ -158,7 +159,9 @@ class MemECCluster:
                  shard_id: int | None = None,
                  async_engine: bool | None = None,
                  arrival=None, trace=None,
-                 redundant_reads: int | None = None):
+                 redundant_reads: int | None = None,
+                 hot_key_threshold: float | None = None,
+                 hot_max_versions: int = 8, hot_max_keys: int = 64):
         self.shard_id = shard_id   # None when not part of a ShardedCluster
         # intra-shard async pipeline (None defers to $MEMEC_ASYNC): issue
         # coding through engine futures while netsim legs are in flight
@@ -192,6 +195,18 @@ class MemECCluster:
         # DecodePlan.  Δ=0 (default) keeps the historical plain-k path
         # bit-identical (redundant_reads= / $MEMEC_REDUNDANT_READS).
         self.redundant_reads = resolve_redundant_reads(redundant_reads)
+        # hot-key update tier (version-buffered delta coding): sealed
+        # updates to keys whose EWMA update score reaches the threshold
+        # buffer their version deltas instead of paying a parity round
+        # per SET; the buffer collapses into ONE parity round at flush
+        # (capacity, eviction, read barrier, failure, or
+        # flush_hot_buffers()).  0/None = off — zero tier state and a
+        # byte-identical baseline (hot_key_threshold= / $MEMEC_HOT_KEYS).
+        self.hot_key_threshold = resolve_hot_keys(hot_key_threshold)
+        self.hot = (HotTier(self.hot_key_threshold,
+                            max_keys=hot_max_keys,
+                            max_versions=hot_max_versions)
+                    if self.hot_key_threshold > 0 else None)
         self.degraded_enabled = degraded_enabled
         self.verify_rebuild = verify_rebuild
         self.failed: set[int] = set()          # injected transient failures
@@ -217,6 +232,8 @@ class MemECCluster:
         p999_s}``) and, in open-loop event mode, per-kind/per-resource
         queue-wait breakdowns plus the arrival descriptor."""
         out = dict(self._stats)
+        if self.hot is not None:
+            out["hot_tier"] = self.hot.snapshot()
         out["latency"] = self.net.latency_summary()
         if self.net.events is not None:
             ev = self.net.events.snapshot()
@@ -771,7 +788,11 @@ class MemECCluster:
                 else:
                     seg_off, seg = off, xor[:0]
                 if sealed:
-                    sealed_jobs.append((sl, ds, cid, seg_off, seg, req))
+                    if (self._hot_eligible() and self._hot_buffer_update(
+                            key, sl, ds, cid, seg_off, seg)):
+                        pass   # hot key: parity round deferred to flush
+                    else:
+                        sealed_jobs.append((sl, ds, cid, seg_off, seg, req))
                 else:
                     replica_jobs.append((sl, ds, key, value, req))
                 done_reqs.append(req)
@@ -933,6 +954,17 @@ class MemECCluster:
         concurrently (t = max over entries, like the plain batched
         fan-out phases).
         """
+        if self.hot is not None and len(self.hot.buffer):
+            # read barrier: the sealed races below may read parity
+            # chunks of these stripes — collapse any buffered hot-key
+            # deltas owed to them first, so decode sees consistent parity
+            stripes = []
+            for key, sl, ds in entries:
+                srv = self._sv(ds)
+                ref = srv.lookup(key)
+                if ref is not None and srv.sealed[ref.chunk_local_idx]:
+                    stripes.append((sl, srv.chunk_id_of(ref)))
+            self._hot_barrier_stripes(stripes)
         delta = self.redundant_reads
         pp = f"p{proxy.pid}"
         vals: list = [None] * len(entries)
@@ -1082,6 +1114,132 @@ class MemECCluster:
     # ------------------------------------------------------------------
     # UPDATE / DELETE (shared delta fan-out)
     # ------------------------------------------------------------------
+    # ------------------------------------------------------------------
+    # hot-key update tier (version-buffered delta coding)
+    # ------------------------------------------------------------------
+    def _hot_eligible(self) -> bool:
+        """May sealed updates buffer right now?  Only in a fully healthy
+        cluster with no fault injection armed — every degraded, replay,
+        and recovery path may read parity, so buffering pauses the
+        moment a failure exists (the ``fail_server`` barrier already
+        drained what was buffered before it)."""
+        return (self.hot is not None and self.code.m > 0
+                and not self.failed and self.crash_hook is None)
+
+    def _hot_buffer_update(self, key: bytes, sl: StripeList, ds: int,
+                           cid: ChunkId, seg_off: int,
+                           seg: np.ndarray) -> bool:
+        """Absorb one sealed update into the version buffer.
+
+        Returns True when buffered — the caller then skips its parity
+        round entirely (the data server already mutated in place; only
+        the parity delta is deferred).  False means the key is not hot:
+        take the normal per-SET parity round."""
+        hot = self.hot
+        entry = hot.buffer.get(key)
+        if entry is not None and entry.cid != cid:
+            # the key was deleted/re-SET into a different chunk since
+            # buffering began — the old region's obligation flushes
+            # first, then this update starts a fresh entry
+            self._flush_hot_entries([hot.buffer.pop(key)], barrier=True)
+            entry = None
+        is_hot = hot.tracker.touch(key)
+        if entry is None and not is_hot:
+            return False
+        entry, evicted = hot.buffer.append(key, sl, cid, seg_off, seg)
+        hot.stats["buffered_updates"] += 1
+        flush_now = []
+        if evicted is not None:
+            hot.stats["evictions"] += 1
+            flush_now.append(evicted)
+        if hot.buffer.full(entry):
+            flush_now.append(hot.buffer.pop(key))
+        if flush_now:
+            self._flush_hot_entries(flush_now)
+        return True
+
+    def _hot_barrier_stripes(self, stripe_entries) -> None:
+        """Read barrier: before any sealed-chunk race/decode touches a
+        stripe's parity, collapse that stripe's buffered deltas back in
+        (``stripe_entries``: iterable of (sl, cid))."""
+        if self.hot is None or not len(self.hot.buffer):
+            return
+        drained = []
+        for sl, cid in stripe_entries:
+            drained += self.hot.buffer.pop_stripe(sl, cid)
+        if drained:
+            self._flush_hot_entries(drained, barrier=True)
+
+    def _flush_hot_entries(self, entries, *, barrier: bool = False) -> float:
+        """Fold buffered version deltas back into their sealed stripes.
+
+        ONE batched ``submit_delta_collapse`` serves every entry: the
+        engine XOR-collapses each key's V versions into the base→latest
+        delta and folds it into the gathered parity rows — N buffered
+        updates cost one parity round.  The m delta legs per key carry
+        the union extent of the versions (what actually crosses the
+        wire), and the whole drain is recorded as its own nested
+        ``HOT_FLUSH`` request.  Applied rows use the proxy's ack
+        watermark as their seq and prune immediately: a flush is acked
+        by construction, so §5.3 reverts can never roll it back.
+        """
+        entries = [e for e in entries if e is not None and e.versions]
+        if not entries:
+            return 0.0
+        hot = self.hot
+        proxy = self.proxies[0]
+        self._trace_frame()
+        C = self.chunk_size
+        parity = np.stack(
+            [np.stack([self._sv(p).parity_row(e.sl, e.cid.stripe_id)
+                       for p in e.sl.parity_servers]) for e in entries])
+        positions = np.array([e.cid.position for e in entries])
+        version_xors, legs = [], []
+        for e in entries:
+            vx = np.zeros((len(e.versions), C), np.uint8)
+            for vi, (off, seg) in enumerate(e.versions):
+                vx[vi, off: off + len(seg)] ^= seg
+            version_xors.append(vx)
+            ds = self._chunk_owner(e.sl, e.cid.position)
+            lo, hi = e.extent()
+            legs += [Leg("delta", hi - lo, f"s{ds}", f"s{p}",
+                         self._is_failed(p))
+                     for p in e.sl.parity_servers]
+        fut = self.engine.submit_delta_collapse(parity, positions,
+                                                version_xors)
+        rows = fut.result() ^ parity
+        wm = proxy.ack_watermark
+        for e, erows in zip(entries, rows):
+            for j, p in enumerate(e.sl.parity_servers):
+                self._sv(p).apply_data_delta_row(e.sl, e.cid, erows[j],
+                                                 proxy.pid, wm)
+                self._sv(p).prune_deltas(proxy.pid, wm)
+            m = len(e.sl.parity_servers)
+            lo, hi = e.extent()
+            seg_bytes = sum(len(seg) for _, seg in e.versions)
+            hot.stats["flushed_keys"] += 1
+            hot.stats["flushed_versions"] += len(e.versions)
+            hot.stats["saved_parity_rounds"] += len(e.versions) - 1
+            hot.stats["saved_parity_bytes"] += \
+                max(0, seg_bytes - (hi - lo)) * m
+        hot.stats["flushes"] += 1
+        if barrier:
+            hot.stats["barrier_flushes"] += 1
+        t = self._merge_coding(self._coding_s(fut), self.net.phase(legs),
+                               kind="delta")
+        self.net.record("HOT_FLUSH", t)
+        return t
+
+    def flush_hot_buffers(self) -> int:
+        """Drain the hot-key version buffer entirely (cooling/eviction
+        happen organically; this is the explicit barrier for tests,
+        benches, and shutdown).  Returns the number of entries folded."""
+        if self.hot is None:
+            return 0
+        entries = self.hot.buffer.pop_all()
+        self._flush_hot_entries(entries)
+        return len(entries)
+
     def _mutate_small(self, kind: str, key: bytes, value: bytes | None,
                       proxy_id: int) -> bool:
         proxy = self.proxies[proxy_id]
@@ -1111,6 +1269,18 @@ class MemECCluster:
             seg_off, seg = off, xor[:0]
         crash = (self.crash_hook is not None and self.crash_hook[0] == kind
                  and self.crash_hook[1] == key)
+        if (kind == "update" and sealed and self._hot_eligible()
+                and self._hot_buffer_update(key, sl, ds, cid, seg_off,
+                                            seg)):
+            # hot key: the version delta is buffered and the parity
+            # round deferred to the flush — ack and return with only
+            # the request/ack legs on this UPDATE's clock
+            t += self.net.phase([Leg("update_ack", 8, f"s{ds}",
+                                     f"p{proxy.pid}",
+                                     self._is_failed(ds))])
+            proxy.ack(req.seq)
+            self.net.record(kind.upper(), t)
+            return True
         # one submitted engine call serves every parity server (fused
         # delta+apply over the gathered parity rows); resolution is safe
         # before the crash check — engine calls carry no cluster state,
@@ -1599,6 +1769,13 @@ class MemECCluster:
         every degraded request reconstructs on demand through
         ``_ensure_recon`` — the paper's §5.4 on-demand mode, used by the
         benchmarks to expose the decode path on degraded GET latency."""
+        if self.hot is not None and len(self.hot.buffer):
+            # failure barrier: collapse every buffered hot-key delta
+            # while the cluster is still healthy — recovery, degraded
+            # decode, and replay all read parity, and buffering stays
+            # paused until the failure set empties (_hot_eligible)
+            self._flush_hot_entries(self.hot.buffer.pop_all(),
+                                    barrier=True)
         self.failed.add(sid)
         if not self.degraded_enabled:
             return {"T_N_to_D": 0.0}

@@ -24,7 +24,11 @@ Snapshot layout (version 2)::
                                p99: {...}, p999: {...}}},  # {} when off
       "event":    {offered, makespan_s, queue_wait_s,
                    queue_wait_s_by_kind, queue_wait_s_by_resource,
-                   arrival}         # open-loop mode only
+                   arrival},        # open-loop mode only
+      "hot_tier": {buffered_updates, flushes, flushed_keys,
+                   flushed_versions, saved_parity_rounds,
+                   saved_parity_bytes, evictions, barrier_flushes,
+                   buffered_keys, tracked_keys}  # only when tier enabled
     }
 
 Version 2 adds the always-present ``trace`` summary and the
@@ -62,6 +66,10 @@ def snapshot(cluster) -> dict:
                      if isinstance(v, (int, float))},
         "engines": [dict(e.stats(), engine=e.name) for e in engines],
     }
+    # hot-key tier (optional — present only when the tier is enabled;
+    # additive field, so the schema stays at version 2)
+    if "hot_tier" in stats:
+        snap["hot_tier"] = dict(stats["hot_tier"])
     tracers = _trace._cluster_tracers(cluster)
     if tracers:
         snap["trace"] = {

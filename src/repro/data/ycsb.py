@@ -18,6 +18,9 @@ WORKLOADS = {
     "C": {"get": 1.0},
     "D": {"get": 0.95, "set": 0.05},
     "F": {"get": 0.5, "rmw": 0.5},
+    # update-heavy (the MemEC evaluation's write-side axis; drives the
+    # hot-key version-buffer tier in benchmarks/throughput.py)
+    "U": {"get": 0.05, "update": 0.95},
 }
 
 

@@ -158,6 +158,40 @@ def delta_apply_batched(parity: jax.Array | None, gammas: jax.Array,
     return out[:, :, :C]
 
 
+def delta_apply_per_item_batched(parity: jax.Array | None, Ms, blocks, *,
+                                 block_c: int | None = None,
+                                 strategy: str | None = None,
+                                 interpret: bool | None = None) -> jax.Array:
+    """Per-item-matrix delta fold — the r > 1 (RDP) update shape.
+
+    ``Ms`` (B, O, J): one sub-block system per item (O = m*r rows,
+    J = r columns for a single-chunk mutation); ``blocks`` (B, J, Cb)
+    the xor sub-blocks; ``parity`` (B, O, Cb), when given, is folded in
+    the same kernel.  This is the dispatch-routed, tune-aware front door
+    for ``gf256_matmul_per_item_batched`` — the engines' r > 1 delta
+    path goes through here so RDP updates hit the compiled per-item
+    grid (Pallas on TPU/GPU, the ``xla_gf256`` twin on CPU) instead of
+    the jnp per-item matmul, and the ``(op=delta_per_item, ...)`` tuning
+    entries steer strategy × block_c when the caller doesn't.
+    """
+    from repro.kernels import tune
+    from repro.kernels.gf256_matmul import gf256_matmul_per_item_batched
+    import numpy as np
+    Ms = np.asarray(Ms, dtype=np.uint8)
+    B, O, J = Ms.shape
+    C = blocks.shape[2]
+    if strategy is None and block_c is None and B and O:
+        dec = dispatch.decide(interpret)
+        tuned = tune.lookup("delta_per_item", dec.path, k=J, m=O, chunk=C,
+                            batch=B, cls=tune.matrix_cls(Ms))
+        if tuned is not None:
+            strategy = tuned.get("strategy")
+            block_c = tuned.get("block_c") or None
+    return gf256_matmul_per_item_batched(Ms, blocks, parity,
+                                         block_c=block_c, strategy=strategy,
+                                         interpret=interpret)
+
+
 def delta_update(parity: jax.Array, gammas: jax.Array, old: jax.Array,
                  new: jax.Array, *, block_c: int = DEFAULT_BLOCK_C,
                  interpret: bool | None = None) -> jax.Array:

@@ -198,6 +198,52 @@ def autotune_matmul(A: np.ndarray, *, chunk: int, batch: int,
     return best
 
 
+def autotune_delta_per_item(M: np.ndarray, *, chunk: int, batch: int,
+                            path: str | None = None, reps: int = 5,
+                            verbose: bool = False) -> dict:
+    """Tune the per-item-matrix delta fold (the r > 1 / RDP update shape
+    and the hot-tier flush collapse).
+
+    ``M`` is one (O, J) per-item system prototype (replicated across the
+    batch for timing — real calls vary the matrix per item, which
+    changes nothing about strategy/tile choice); ``chunk`` is the
+    device-side block width C of the call, i.e. engine chunk_size / r.
+    Records and returns the winning entry."""
+    from . import dispatch
+    from .delta_update import delta_apply_per_item_batched
+    path = path or dispatch.decide().path
+    M = np.asarray(M, dtype=np.uint8)
+    O, J = M.shape
+    rng = np.random.default_rng(0)
+    Ms = np.ascontiguousarray(
+        np.broadcast_to(M, (max(batch, 1), O, J)))
+    blocks = rng.integers(0, 256, (max(batch, 1), J, chunk), dtype=np.uint8)
+    parity = rng.integers(0, 256, (max(batch, 1), O, chunk), dtype=np.uint8)
+    is01 = int(M.max(initial=0)) <= 1
+    best = None
+    for cand in candidates("delta_per_item", path, ops=O * J * 8, is01=is01):
+        fn = (lambda cand=cand: delta_apply_per_item_batched(
+            parity, Ms, blocks, strategy=cand["strategy"],
+            block_c=cand["block_c"] or None,
+            interpret=(True if path == dispatch.INTERPRET else None)))
+        try:
+            us = _time_call(fn, reps=reps)
+        except Exception as e:     # a candidate failing to lower is data
+            if verbose:
+                print(f"  {cand} failed: {type(e).__name__}")
+            continue
+        if verbose:
+            print(f"  delta_per_item k{J}m{O}c{chunk}b{batch} {cand} "
+                  f"-> {us:.1f}us")
+        if best is None or us < best["us"]:
+            best = dict(cand, us=round(us, 2))
+    assert best is not None, "no tuning candidate succeeded"
+    entry_key = key("delta_per_item", path, k=J, m=O, chunk=chunk,
+                    batch=batch, cls="01" if is01 else "gf")
+    record(entry_key, best)
+    return best
+
+
 def autotune_ci_shapes(verbose: bool = True) -> dict:
     """Tune the shapes the CI bench smoke exercises; returns the cache.
 
@@ -221,4 +267,21 @@ def autotune_ci_shapes(verbose: bool = True) -> dict:
             print(f"tuning matmul k={J} m={O} chunk={chunk} batch={batch}")
         autotune_matmul(np.asarray(A), chunk=chunk, batch=batch,
                         verbose=verbose)
+    # per-item-matrix delta shapes (r > 1 RDP updates + hot-tier flush):
+    # the RDP per-item system is the (m*r, r) column slice of the block
+    # matrix (0/1), at device width chunk/r; the RS hot-tier collapse is
+    # the (m, 1) parity-matrix column at full chunk width (dense gf).
+    E4 = np.asarray(rep.encode).reshape(rdp.m * rep.r, rdp.k, rep.r)
+    Mi = np.ascontiguousarray(E4[:, 0, :])            # (m*r, r), 0/1
+    for batch in (4, 16):
+        if verbose:
+            print(f"tuning delta_per_item k={rep.r} m={rdp.m * rep.r} "
+                  f"chunk={4096 // rep.r} batch={batch}")
+        autotune_delta_per_item(Mi, chunk=4096 // rep.r, batch=batch,
+                                verbose=verbose)
+    Mrs = np.ascontiguousarray(
+        np.asarray(rs.parity_matrix)[:, :1])          # (m, 1), dense
+    if verbose:
+        print(f"tuning delta_per_item k=1 m={rs.m} chunk=512 batch=4")
+    autotune_delta_per_item(Mrs, chunk=512, batch=4, verbose=verbose)
     return load_cache()

@@ -1,0 +1,364 @@
+"""Hot-key update tier (PR 10): version-buffered delta coding.
+
+The one invariant everything here pins: the tier is *pure deferral* —
+a cluster with the hot tier on must end byte-identical (returned values
+AND raw server chunk bytes) to its tier-off twin, across engines,
+schemes (r=1 RS and r>1 RDP), sharding, straggler races, degraded mode,
+failures injected mid-buffer, and flush-ordering interleavings.  On top
+of that: the fold-back barriers actually fire, the facade aggregates
+the tier's counters, the per-op dispatch provenance is loud about jnp
+fallbacks, and the r>1 per-item delta entry consults the tuning cache.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import gf256, make_cluster
+from repro.core.codes import make_code
+from repro.core.engine import make_engine
+from repro.core.hotkey import HotKeyTracker, VersionBuffer, resolve_hot_keys
+from repro.data.ycsb import YCSBConfig, YCSBWorkload, run_workload
+from repro.kernels import dispatch, tune
+from repro.kernels.delta_update import delta_apply_per_item_batched
+
+KW = dict(num_servers=16, scheme="rs", n=10, k=8, c=4,
+          chunk_size=512, max_unsealed=2)
+
+
+def twin_pair(engine="numpy", shards=1, threshold=3.0, **kw):
+    """Layout-identical clusters: hot tier on (threshold) vs off (0.0 —
+    explicit, so $MEMEC_HOT_KEYS can't switch the baseline on)."""
+    merged = dict(KW, engine=engine, shards=shards)
+    merged.update(kw)
+    on = make_cluster(hot_key_threshold=threshold, **merged)
+    off = make_cluster(hot_key_threshold=0.0, **merged)
+    return on, off
+
+
+def seed(cl, n_obj=800, s=5):
+    """Load enough 64-byte objects that chunks actually seal (the tier
+    only touches sealed updates)."""
+    cfg = YCSBConfig(num_objects=n_obj, value_sizes=(64, 64), seed=s)
+    run_workload(cl, "load", 0, cfg, batch_size=1)
+    return cfg
+
+
+def drive(cl, cfg, n_ops, workload="U", batch=1, s=6):
+    rcfg = YCSBConfig(num_objects=cfg.num_objects, value_sizes=(64, 64),
+                      seed=s)
+    run_workload(cl, workload, n_ops, rcfg, batch_size=batch)
+
+
+def contents(cl, cfg):
+    w = YCSBWorkload(cfg)
+    return cl.multi_get([w.key(i) for i in range(cfg.num_objects)])
+
+
+def regions(cl):
+    """Raw chunk bytes of every server — the strongest identity check
+    (catches stale parity that value reads would never surface)."""
+    stores = cl.shards if hasattr(cl, "shards") else [cl]
+    out = []
+    for st in stores:
+        for srv in st.servers:
+            out.extend(bytes(np.asarray(c)) for c in srv.region)
+    return out
+
+
+def assert_twins_equal(on, off, cfg):
+    assert on.flush_hot_buffers() >= 0
+    assert contents(on, cfg) == contents(off, cfg), \
+        "hot tier changed returned bytes"
+    assert regions(on) == regions(off), \
+        "hot tier left divergent raw chunk bytes after flush"
+
+
+def hot_stats(cl):
+    return cl.stats["hot_tier"]
+
+
+# ---------------------------------------------------------------------------
+# byte identity across engines x schemes (incl. the r>1 RDP shape)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine,scheme", [
+    ("numpy", "rs"), ("jax", "rs"), ("pallas", "rs"),
+    ("numpy", "rdp"), ("pallas", "rdp"),
+])
+def test_twin_byte_identity(engine, scheme):
+    on, off = twin_pair(engine=engine, scheme=scheme)
+    cfgs = []
+    for cl in (on, off):
+        cfg = seed(cl)
+        drive(cl, cfg, 600, batch=1)          # single-op sealed updates
+        drive(cl, cfg, 400, workload="A", batch=8, s=9)  # multi_update path
+        cfgs.append(cfg)
+    st = hot_stats(on)
+    assert st["buffered_updates"] > 0, "workload never buffered an update"
+    assert st["flushes"] > 0 or len(on.hot.buffer) > 0
+    assert "hot_tier" not in off.stats, "tier-off twin allocated tier state"
+    assert_twins_equal(on, off, cfgs[0])
+    # after the explicit drain the buffer is empty and counters moved
+    assert hot_stats(on)["flushed_versions"] >= st["buffered_updates"] - \
+        sum(len(e.versions) for e in on.hot.buffer.entries.values())
+
+
+# ---------------------------------------------------------------------------
+# failures and degraded mode: mid-buffer injection, fold-back barriers
+# ---------------------------------------------------------------------------
+
+def _victim(cl, parity_side):
+    """Server owning the most sealed data (or parity) chunks."""
+    def count(srv):
+        return sum(1 for idx, cid in enumerate(srv.chunk_ids)
+                   if cid is not None and srv.sealed[idx]
+                   and (cid.position >= cl.k) == parity_side)
+    sid = max(range(len(cl.servers)), key=lambda s: count(cl.servers[s]))
+    assert count(cl.servers[sid]) > 0
+    return sid
+
+
+@pytest.mark.parametrize("parity_side", (False, True),
+                         ids=("data-victim", "parity-victim"))
+def test_fail_during_buffer(parity_side):
+    """fail_server mid-buffer: the top-of-fail barrier folds everything
+    back before recovery reads any parity; buffering stays paused while
+    the failure exists and resumes after restore."""
+    on, off = twin_pair()
+    cfg = seed(on)
+    seed(off)
+    for cl in (on, off):
+        drive(cl, cfg, 500)
+    assert len(on.hot.buffer) > 0, "no entries buffered before the failure"
+    victim = _victim(on, parity_side)
+    for cl in (on, off):
+        cl.fail_server(victim)            # recover=True: rebuild + redirect
+        drive(cl, cfg, 300, s=7)          # paused: failure still declared
+    assert len(on.hot.buffer) == 0 and hot_stats(on)["barrier_flushes"] > 0
+    for cl in (on, off):
+        cl.restore_server(victim)
+        drive(cl, cfg, 300, s=8)          # buffering resumes
+    assert hot_stats(on)["buffered_updates"] > 0
+    assert_twins_equal(on, off, cfg)
+
+
+def test_degraded_reads_after_fail_no_recover():
+    """recover=False (§5.4 on-demand): every sealed GET through the
+    failed server decodes from parity — which the fail barrier already
+    made current."""
+    on, off = twin_pair()
+    cfg = seed(on)
+    seed(off)
+    for cl in (on, off):
+        drive(cl, cfg, 500)
+    victim = _victim(on, parity_side=False)
+    for cl in (on, off):
+        cl.fail_server(victim, recover=False)
+    assert contents(on, cfg) == contents(off, cfg)
+    assert on.stats["reconstructions"] > 0, "degraded path never decoded"
+    for cl in (on, off):
+        drive(cl, cfg, 200, s=7)          # updates while degraded: no buffer
+        cl.restore_server(victim)
+    assert_twins_equal(on, off, cfg)
+
+
+def test_read_barrier_under_straggler_races():
+    """Δ=1 redundant reads race the fan-out and may decode from parity:
+    the pre-read stripe barrier must fold buffered deltas back first."""
+    on, off = twin_pair(redundant_reads=1)
+    cfg = seed(on)
+    seed(off)
+    for cl in (on, off):
+        cl.inflate_server(0, 10.0)
+        for i in range(6):                # interleave updates and reads
+            drive(cl, cfg, 150, s=20 + i)
+            drive(cl, cfg, 150, workload="C", batch=4, s=30 + i)
+    assert hot_stats(on)["barrier_flushes"] > 0, \
+        "straggler races never hit the read barrier"
+    assert_twins_equal(on, off, cfg)
+
+
+# ---------------------------------------------------------------------------
+# flush-ordering interleavings and capacity pressure
+# ---------------------------------------------------------------------------
+
+def test_update_during_flush_interleavings():
+    """Tiny buffer bounds force mid-stream flushes (full-entry and
+    eviction) between updates to the same keys — every interleaving of
+    buffer -> flush -> re-buffer must stay byte-identical."""
+    on, off = twin_pair(hot_max_versions=2, hot_max_keys=3, threshold=1.5)
+    cfg = seed(on)
+    seed(off)
+    for i in range(4):
+        for cl in (on, off):
+            drive(cl, cfg, 250, s=40 + i)
+        on.flush_hot_buffers()            # explicit drain mid-stream...
+        for cl in (on, off):
+            drive(cl, cfg, 100, s=50 + i)  # ...then immediately re-buffer
+    st = hot_stats(on)
+    assert st["evictions"] > 0, "max_keys pressure never evicted"
+    assert st["flushes"] > st["barrier_flushes"]
+    assert_twins_equal(on, off, cfg)
+
+
+def test_sharded_facade_aggregation_and_fail():
+    """S=4: per-shard tiers behave independently; the facade sums the
+    hot_tier counters, delegates flush_hot_buffers, and a mid-buffer
+    failure in one shard doesn't disturb the others."""
+    on, off = twin_pair(shards=4)
+    cfg = seed(on, n_obj=1600)
+    seed(off, n_obj=1600)
+    for cl in (on, off):
+        drive(cl, cfg, 800)
+    st = hot_stats(on)
+    assert st["buffered_updates"] > 0
+    assert st["buffered_updates"] == sum(
+        sh.stats["hot_tier"]["buffered_updates"] for sh in on.shards)
+    sid = on.global_sid(1, 2)
+    for cl in (on, off):
+        cl.fail_server(sid)
+        drive(cl, cfg, 300, s=7)
+        cl.restore_server(sid)
+        drive(cl, cfg, 300, s=8)
+    assert "hot_tier" not in off.stats
+    assert_twins_equal(on, off, cfg)
+
+
+# ---------------------------------------------------------------------------
+# knobs, tracker, buffer units
+# ---------------------------------------------------------------------------
+
+def test_resolve_hot_keys_knob(monkeypatch):
+    monkeypatch.delenv("MEMEC_HOT_KEYS", raising=False)
+    assert resolve_hot_keys(None) == 0.0
+    monkeypatch.setenv("MEMEC_HOT_KEYS", "2.5")
+    assert resolve_hot_keys(None) == 2.5
+    assert resolve_hot_keys(4.0) == 4.0      # ctor wins over env
+    assert resolve_hot_keys(0.0) == 0.0      # explicit off beats env
+    assert resolve_hot_keys(-3.0) == 0.0     # clamped
+
+
+def test_tracker_deterministic_and_decaying():
+    a, b = HotKeyTracker(3.0), HotKeyTracker(3.0)
+    seq = [b"hot"] * 8 + [b"cold", b"hot"] * 8
+    assert [a.touch(k) for k in seq] == [b.touch(k) for k in seq]
+    assert a.touch(b"hot") is True
+    assert a.touch(b"rare") is False      # first-ever touch: score 1.0
+    # a long quiet gap decays the hot key back under threshold
+    for i in range(HotKeyTracker.HALFLIFE_OPS * 8):
+        a.touch(b"filler%d" % (i % 7))
+    assert a.touch(b"hot") is False
+
+
+def test_version_buffer_bounds():
+    class _SL:                      # minimal stand-ins for the index keys
+        parity_servers = (8, 9)
+
+    class _CID:
+        def __init__(self, stripe):
+            self.stripe_id = stripe
+            self.position = 0
+    sl = _SL()
+    vb = VersionBuffer(max_keys=2, max_versions=2)
+    seg = np.ones(4, np.uint8)
+    e1, ev = vb.append(b"k1", sl, _CID(0), 0, seg)
+    assert ev is None and not vb.full(e1)
+    e1b, _ = vb.append(b"k1", sl, _CID(0), 4, seg)
+    assert e1b is e1 and vb.full(e1)
+    vb.append(b"k2", sl, _CID(1), 0, seg)
+    _, evicted = vb.append(b"k3", sl, _CID(0), 0, seg)  # over max_keys
+    assert evicted is not None and evicted.key == b"k1"
+    assert {e.key for e in vb.pop_stripe(sl, _CID(0))} == {b"k3"}
+    assert {e.key for e in vb.pop_all()} == {b"k2"}
+    assert len(vb) == 0
+
+
+# ---------------------------------------------------------------------------
+# provenance: op_paths must be loud about jnp fallbacks
+# ---------------------------------------------------------------------------
+
+def _collapse_once(eng, code, rng):
+    B, V, C = 3, 4, 512
+    data = rng.integers(0, 256, (B, code.k, C), dtype=np.uint8)
+    parity = np.asarray(eng.encode_batch(data))
+    idxs = [int(i) for i in rng.integers(0, code.k, B)]
+    versions = [rng.integers(0, 256, (V, C), dtype=np.uint8)
+                for _ in range(B)]
+    got = np.asarray(eng.submit_delta_collapse(parity, idxs,
+                                               versions).result())
+    # oracle: one delta round with the XOR-fold of the versions
+    for b in range(B):
+        folded = np.bitwise_xor.reduce(versions[b], axis=0)
+        d2 = np.array(data[b])
+        d2[idxs[b]] ^= folded
+        want = np.asarray(make_engine("numpy", code).encode_batch(
+            d2[None])[0])
+        assert np.array_equal(got[b], want), f"collapse diverged at {b}"
+    return got
+
+
+@pytest.mark.parametrize("scheme", ("rs", "rdp"))
+def test_op_paths_provenance(scheme, rng):
+    code = make_code(scheme, 10, 8)
+    jax_eng = make_engine("jax", code)
+    _collapse_once(jax_eng, code, rng)
+    assert jax_eng.op_paths["delta_per_item"] == "jnp-fallback", \
+        "jax engine must loudly report its jnp per-item fallback"
+    pal = make_engine("pallas", code)
+    _collapse_once(pal, code, rng)
+    path = pal.op_paths["delta_per_item"]
+    assert path in (dispatch.PALLAS, dispatch.XLA, dispatch.INTERPRET)
+    if not dispatch.interpret_forced():
+        assert path != dispatch.INTERPRET
+    # the recorded paths surface through BOTH introspection seams
+    for eng in (jax_eng, pal):
+        assert eng.describe()["op_paths"] == eng.op_paths
+        assert eng.stats()["op_paths"] == eng.op_paths
+
+
+# ---------------------------------------------------------------------------
+# r>1 per-item delta entry: tune-cache consultation
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def fresh_tune_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("MEMEC_TUNE_CACHE", str(tmp_path / "tune.json"))
+    tune.load_cache(reload=True)
+    yield tmp_path / "tune.json"
+    monkeypatch.delenv("MEMEC_TUNE_CACHE")
+    tune.load_cache(reload=True)
+
+
+def test_delta_per_item_consults_tune_cache(fresh_tune_cache, rng):
+    B, O, J, C = 2, 3, 4, 256
+    Ms = rng.integers(0, 256, (B, O, J), dtype=np.uint8)
+    blocks = rng.integers(0, 256, (B, J, C), dtype=np.uint8)
+    parity = rng.integers(0, 256, (B, O, C), dtype=np.uint8)
+    want = np.stack([parity[b] ^ gf256.gf_matmul_np(Ms[b], blocks[b])
+                     for b in range(B)])
+    # no entry: heuristic default, still the oracle's bytes
+    got = np.asarray(delta_apply_per_item_batched(parity, Ms, blocks))
+    assert np.array_equal(got, want)
+    # a tuned entry for this exact shape must be honored byte-identically
+    dec = dispatch.decide()
+    entry = tune.candidates("delta_per_item", dec.path,
+                            ops=O * J, is01=False)[-1]
+    tune.record(tune.key("delta_per_item", dec.path, k=J, m=O, chunk=C,
+                         batch=B, cls=tune.matrix_cls(Ms)), entry)
+    got = np.asarray(delta_apply_per_item_batched(parity, Ms, blocks))
+    assert np.array_equal(got, want), f"tuned entry {entry} broke bytes"
+
+
+def test_autotune_delta_per_item_records_and_persists(fresh_tune_cache):
+    rng = np.random.default_rng(3)
+    M = rng.integers(0, 2, (4, 4), dtype=np.uint8)
+    dec = dispatch.decide()
+    won = tune.autotune_delta_per_item(M, chunk=128, batch=2, reps=1)
+    assert "strategy" in won or "block_c" in won
+    assert tune.lookup("delta_per_item", dec.path, k=4, m=4, chunk=128,
+                       batch=2, cls="01") is not None
+    path = tune.save()
+    with open(path) as f:
+        entries = json.load(f)["entries"]
+    assert any(k.startswith("delta_per_item/") for k in entries)

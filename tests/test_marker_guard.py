@@ -22,6 +22,7 @@ GUARDED_MODULES = [
     "tests/test_dispatch_tune.py",
     "tests/test_engine.py",
     "tests/test_event_runtime.py",
+    "tests/test_hot_tier.py",
     "tests/test_multikey.py",
     "tests/test_shard.py",
     "tests/test_store.py",
